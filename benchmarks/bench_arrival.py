@@ -1,0 +1,34 @@
+"""Figure 8: impact of job arrival rate (mean inter-arrival sweep)."""
+from __future__ import annotations
+
+from repro.cluster import SimConfig, alibaba_like_trace
+
+from .common import print_table, run_sim, save_results
+
+
+def run(quick=False, n_jobs=None):
+    n = n_jobs or (150 if quick else 400)
+    inter = (1200.0,) if quick else (600.0, 1200.0, 2400.0)
+    rows = []
+    for ia in inter:
+        for sched in ("no-packing", "stratus", "synergy", "eva"):
+            jobs = alibaba_like_trace(n_jobs=n, seed=17,
+                                      mean_interarrival_s=ia)
+            m = run_sim(sched, jobs, SimConfig(seed=8))
+            rows.append({"interarrival_min": ia / 60, "scheduler": sched,
+                         "total_cost": m["total_cost"]})
+    for ia in inter:
+        base = next(r["total_cost"] for r in rows
+                    if r["interarrival_min"] == ia / 60
+                    and r["scheduler"] == "no-packing")
+        for r in rows:
+            if r["interarrival_min"] == ia / 60:
+                r["norm_cost_pct"] = round(100 * r["total_cost"] / base, 1)
+    print_table("Figure 8: arrival-rate sweep", rows,
+                ["interarrival_min", "scheduler", "norm_cost_pct"])
+    save_results("bench_arrival", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

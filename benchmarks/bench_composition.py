@@ -1,0 +1,35 @@
+"""Figure 6: impact of workload composition — share of multi-GPU jobs
+(5:4:1 mix of 2-/4-/8-GPU) vs cost; includes Eva partial-only to show Full
+Reconfiguration's contribution."""
+from __future__ import annotations
+
+from repro.cluster import SimConfig, alibaba_like_trace
+
+from .common import print_table, run_sim, save_results
+
+
+def run(quick=False, n_jobs=None):
+    n = n_jobs or (150 if quick else 400)
+    fracs = (0.0, 0.4) if quick else (0.0, 0.2, 0.4, 0.6)
+    rows = []
+    for f in fracs:
+        for sched in ("no-packing", "stratus", "synergy", "eva-partial-only",
+                      "eva"):
+            jobs = alibaba_like_trace(n_jobs=n, seed=13, multi_gpu_fraction=f)
+            m = run_sim(sched, jobs, SimConfig(seed=6))
+            rows.append({"multi_gpu_frac": f, "scheduler": sched,
+                         "total_cost": m["total_cost"]})
+    for f in fracs:
+        base = next(r["total_cost"] for r in rows
+                    if r["multi_gpu_frac"] == f and r["scheduler"] == "no-packing")
+        for r in rows:
+            if r["multi_gpu_frac"] == f:
+                r["norm_cost_pct"] = round(100 * r["total_cost"] / base, 1)
+    print_table("Figure 6: multi-GPU composition sweep", rows,
+                ["multi_gpu_frac", "scheduler", "norm_cost_pct"])
+    save_results("bench_composition", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

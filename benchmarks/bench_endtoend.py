@@ -1,0 +1,46 @@
+"""Tables 13 & 14: end-to-end simulation on the Alibaba-like trace with both
+duration models and all five schedulers."""
+from __future__ import annotations
+
+from repro.cluster import SimConfig, alibaba_like_trace
+
+from .common import print_table, run_sim, save_results
+
+SCHEDULERS = ("no-packing", "stratus", "synergy", "owl", "eva")
+
+
+def run(quick=False, full=False, n_jobs=None, seeds=(7,)):
+    n = n_jobs or (200 if quick else (6274 if full else 800))
+    out = {}
+    for model, table in (("alibaba", "Table 13"), ("gavel", "Table 14")):
+        rows = []
+        for sched in SCHEDULERS:
+            agg = None
+            for seed in seeds:
+                jobs = alibaba_like_trace(n_jobs=n, seed=seed,
+                                          duration_model=model)
+                m = run_sim(sched, jobs, SimConfig(seed=1))
+                if agg is None:
+                    agg = {k: [v] for k, v in m.items()
+                           if isinstance(v, (int, float))}
+                else:
+                    for k in agg:
+                        agg[k].append(m[k])
+            row = {k: round(sum(v) / len(v), 3) for k, v in agg.items()}
+            row["scheduler"] = sched
+            rows.append(row)
+        base = rows[0]["total_cost"]
+        for r in rows:
+            r["norm_cost_pct"] = round(100 * r["total_cost"] / base, 1)
+        print_table(f"{table}: end-to-end ({model} durations, {n} jobs)",
+                    rows, ["scheduler", "total_cost", "norm_cost_pct",
+                           "tasks_per_instance", "norm_job_tput",
+                           "avg_jct_hours", "avg_idle_hours",
+                           "migrations_per_task", "wall_s"])
+        out[model] = rows
+    save_results("bench_endtoend", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

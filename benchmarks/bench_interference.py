@@ -1,0 +1,38 @@
+"""Figure 4: impact of co-location interference.  Sweep uniform pairwise
+throughput {1.0, 0.95, 0.9, 0.85, 0.8}; Eva-TNRP vs Eva-RP vs Owl vs
+No-Packing."""
+from __future__ import annotations
+
+from repro.cluster import SimConfig, alibaba_like_trace
+
+from .common import print_table, run_sim, save_results
+
+
+def run(quick=False, n_jobs=None):
+    n = n_jobs or (150 if quick else 500)
+    levels = (1.0, 0.9, 0.8) if quick else (1.0, 0.95, 0.9, 0.85, 0.8)
+    rows = []
+    for tput in levels:
+        cfgk = dict(seed=2, uniform_interference=tput)
+        for sched in ("no-packing", "owl", "eva-rp", "eva"):
+            jobs = alibaba_like_trace(n_jobs=n, seed=5)
+            m = run_sim(sched, jobs, SimConfig(**cfgk))
+            rows.append({"pair_tput": tput, "scheduler": sched,
+                         "total_cost": m["total_cost"],
+                         "jct_hours": m["avg_jct_hours"],
+                         "job_tput": m["norm_job_tput"]})
+    for tput in levels:
+        base = next(r["total_cost"] for r in rows
+                    if r["pair_tput"] == tput and r["scheduler"] == "no-packing")
+        for r in rows:
+            if r["pair_tput"] == tput:
+                r["norm_cost_pct"] = round(100 * r["total_cost"] / base, 1)
+    print_table("Figure 4: interference sweep", rows,
+                ["pair_tput", "scheduler", "norm_cost_pct", "jct_hours",
+                 "job_tput"])
+    save_results("bench_interference", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

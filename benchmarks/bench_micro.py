@@ -1,0 +1,111 @@
+"""Tables 4 & 5: provisioning-cost micro-benchmark (No-Packing vs Full
+Reconfiguration vs ILP) and Full-Reconfiguration runtime scaling (plus the
+beyond-paper jitted JAX engine)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (TaskSet, aws_catalog, cheapest_type,
+                        full_reconfiguration, make_task, reservation_prices)
+from repro.core.ilp import cost_lower_bound, solve_ilp
+from repro.core.workloads import NUM_WORKLOADS
+
+from .common import print_table, save_results
+
+
+def _random_tasks(n, rng):
+    return TaskSet([make_task(job_id=i, workload=int(rng.integers(NUM_WORKLOADS)))
+                    for i in range(n)])
+
+
+def table4(trials=5, n_tasks=200, ilp_time_limit=30.0, quick=False):
+    """Provisioning cost for a static task set (paper: ILP ~1×, Full
+    Reconfig 1.01×, No-Packing 1.56×; Gurobi timed out at 30 min)."""
+    if quick:
+        trials, n_tasks, ilp_time_limit = 3, 60, 10.0
+    cat = aws_catalog()
+    rows = []
+    ratios_np, ratios_fr, gaps = [], [], []
+    t_fr = t_ilp = 0.0
+    for t in range(trials):
+        rng = np.random.default_rng(1000 + t)
+        tasks = _random_tasks(n_tasks, rng)
+        rp = reservation_prices(tasks, cat)
+        no_packing = float(rp.sum())
+        t0 = time.time()
+        cfg = full_reconfiguration(tasks, cat, table=None,
+                                   interference_aware=False,
+                                   multi_task_aware=False)
+        t_fr += time.time() - t0
+        fr_cost = cfg.total_hourly_cost(cat)
+        t0 = time.time()
+        ilp = solve_ilp(tasks, cat, time_limit_s=ilp_time_limit)
+        t_ilp += time.time() - t0
+        base = min(ilp.cost, fr_cost) if ilp.config else fr_cost
+        lb = max(cost_lower_bound(tasks, cat), ilp.lower_bound)
+        ratios_np.append(no_packing / base)
+        ratios_fr.append(fr_cost / base)
+        gaps.append(base / max(lb, 1e-9))
+    rows.append({"scheduler": "No-Packing",
+                 "norm_cost": f"{np.mean(ratios_np):.2f}±{np.std(ratios_np):.2f}",
+                 "runtime_ms": "<1"})
+    rows.append({"scheduler": "Full-Reconfig",
+                 "norm_cost": f"{np.mean(ratios_fr):.3f}±{np.std(ratios_fr):.3f}",
+                 "runtime_ms": round(t_fr / trials * 1e3, 1)})
+    rows.append({"scheduler": f"ILP(HiGHS,{ilp_time_limit:.0f}s)",
+                 "norm_cost": "1.00 (best found)",
+                 "runtime_ms": round(t_ilp / trials * 1e3, 1)})
+    rows.append({"scheduler": "LP/resource lower bound",
+                 "norm_cost": f"best/LB={np.mean(gaps):.3f}",
+                 "runtime_ms": ""})
+    print_table("Table 4: provisioning-cost micro-benchmark", rows,
+                ["scheduler", "norm_cost", "runtime_ms"])
+    return rows
+
+
+def table5(sizes=(1000, 2000, 4000, 8000), quick=False):
+    """Full Reconfiguration runtime scaling.  Paper (Python): 0.4 / 1.5 /
+    5.5 / 22.1 s.  Ours: vectorized numpy engine + jitted JAX engine."""
+    if quick:
+        sizes = (500, 1000)
+    cat = aws_catalog()
+    rows = []
+    for n in sizes:
+        rng = np.random.default_rng(n)
+        tasks = _random_tasks(n, rng)
+        t0 = time.time()
+        c_np = full_reconfiguration(tasks, cat, table=None, engine="numpy",
+                                    interference_aware=False,
+                                    multi_task_aware=False)
+        dt_np = time.time() - t0
+        # jax engine: warm up once (compile), then time
+        full_reconfiguration(tasks, cat, table=None, engine="jax",
+                             interference_aware=False, multi_task_aware=False)
+        t0 = time.time()
+        c_jx = full_reconfiguration(tasks, cat, table=None, engine="jax",
+                                    interference_aware=False,
+                                    multi_task_aware=False)
+        dt_jx = time.time() - t0
+        rows.append({"n_tasks": n,
+                     "paper_python_s": {1000: 0.40, 2000: 1.50, 4000: 5.53,
+                                        8000: 22.06}.get(n, ""),
+                     "numpy_s": round(dt_np, 3),
+                     "jax_jit_s": round(dt_jx, 3),
+                     "cost_numpy": round(c_np.total_hourly_cost(cat), 1),
+                     "cost_jax": round(c_jx.total_hourly_cost(cat), 1)})
+    print_table("Table 5: Full Reconfiguration runtime", rows,
+                ["n_tasks", "paper_python_s", "numpy_s", "jax_jit_s",
+                 "cost_numpy", "cost_jax"])
+    return rows
+
+
+def run(quick=False):
+    out = {"table4": table4(quick=quick), "table5": table5(quick=quick)}
+    save_results("bench_micro", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

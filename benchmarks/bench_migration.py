@@ -1,0 +1,38 @@
+"""Figure 5: impact of migration overhead.  Sweep the migration-delay scale;
+(a) Eva's Full-Reconfiguration adoption rate and migrations per task,
+(b) total cost of Eva (ensemble) vs Eva full-only vs Stratus."""
+from __future__ import annotations
+
+from repro.cluster import SimConfig, alibaba_like_trace
+
+from .common import print_table, run_sim, save_results
+
+
+def run(quick=False, n_jobs=None):
+    n = n_jobs or (150 if quick else 500)
+    scales = (1.0, 4.0) if quick else (1.0, 2.0, 4.0, 8.0)
+    rows = []
+    for scale in scales:
+        for sched in ("stratus", "eva-full-only", "eva"):
+            jobs = alibaba_like_trace(n_jobs=n, seed=9)
+            m = run_sim(sched, jobs,
+                        SimConfig(seed=4, migration_delay_scale=scale))
+            rows.append({"delay_scale": scale, "scheduler": sched,
+                         "total_cost": m["total_cost"],
+                         "migrations_per_task": m["migrations_per_task"],
+                         "full_adoption": m.get("full_adoption", "")})
+    for scale in scales:
+        base = next(r["total_cost"] for r in rows
+                    if r["delay_scale"] == scale and r["scheduler"] == "eva")
+        for r in rows:
+            if r["delay_scale"] == scale:
+                r["cost_vs_eva_pct"] = round(100 * r["total_cost"] / base, 1)
+    print_table("Figure 5: migration-delay sweep", rows,
+                ["delay_scale", "scheduler", "cost_vs_eva_pct",
+                 "migrations_per_task", "full_adoption"])
+    save_results("bench_migration", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Table 6 + Figure 7: multi-task jobs — Eva-Multi vs Eva-Single vs
+No-Packing, and the multi-task-share sweep over the Alibaba-like trace."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cluster import SimConfig, alibaba_like_trace
+from repro.core import aws_catalog, make_job
+from repro.core.workloads import NUM_WORKLOADS
+
+from .common import print_table, run_sim, save_results
+
+
+def _multitask_trace(n_jobs, seed, n_tasks=4, dur_range=(0.5, 16.0),
+                     mean_interarrival_s=1200.0):
+    """Table 6 setup: jobs of 4 identical tasks sampled from Table 7,
+    durations U[0.5, 16] h."""
+    rng = np.random.default_rng(seed)
+    t, jobs = 0.0, []
+    for i in range(n_jobs):
+        t += rng.exponential(mean_interarrival_s)
+        w = int(rng.integers(NUM_WORKLOADS))
+        dur = rng.uniform(*dur_range) * 3600.0
+        jobs.append(make_job(job_id=90000 + seed * 1000 + i, workload=w,
+                             arrival_time=t, duration_s=dur, n_tasks=n_tasks))
+    return jobs
+
+
+def table6(trials=4, n_jobs=60, quick=False):
+    if quick:
+        trials, n_jobs = 2, 30
+    rows = []
+    for sched in ("no-packing", "eva-single", "eva"):
+        costs, jcts = [], []
+        for t in range(trials):
+            jobs = _multitask_trace(n_jobs, seed=t)
+            m = run_sim(sched, jobs, SimConfig(seed=t))
+            costs.append(m["total_cost"])
+            jcts.append(m["avg_jct_hours"])
+        rows.append({"scheduler": sched,
+                     "total_cost": round(float(np.mean(costs)), 1),
+                     "jct_hours": f"{np.mean(jcts):.2f}±{np.std(jcts):.2f}"})
+    base = rows[0]["total_cost"]
+    for r in rows:
+        r["norm_cost_pct"] = round(100 * r["total_cost"] / base, 1)
+    print_table("Table 6: multi-task jobs (4 tasks/job)", rows,
+                ["scheduler", "total_cost", "norm_cost_pct", "jct_hours"])
+    return rows
+
+
+def figure7(fractions=(0.0, 0.2, 0.4), n_jobs=400, quick=False):
+    if quick:
+        fractions, n_jobs = (0.0, 0.3), 150
+    rows = []
+    for f in fractions:
+        for sched in ("no-packing", "stratus", "eva-single", "eva"):
+            jobs = alibaba_like_trace(n_jobs=n_jobs, seed=3,
+                                      multi_task_fraction=f)
+            m = run_sim(sched, jobs, SimConfig(seed=3))
+            rows.append({"multi_task_frac": f, "scheduler": sched,
+                         "total_cost": m["total_cost"],
+                         "jct_hours": m["avg_jct_hours"]})
+    for f in set(r["multi_task_frac"] for r in rows):
+        base = next(r["total_cost"] for r in rows
+                    if r["multi_task_frac"] == f and r["scheduler"] == "no-packing")
+        for r in rows:
+            if r["multi_task_frac"] == f:
+                r["norm_cost_pct"] = round(100 * r["total_cost"] / base, 1)
+    print_table("Figure 7: multi-task share sweep", rows,
+                ["multi_task_frac", "scheduler", "norm_cost_pct", "jct_hours"])
+    return rows
+
+
+def run(quick=False):
+    out = {"table6": table6(quick=quick), "figure7": figure7(quick=quick)}
+    save_results("bench_multitask", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Roofline table (§Roofline): one row per (arch × shape × mesh) from the
+dry-run artifact + analytic terms.  Requires results/dryrun.json (produced
+by ``python -m repro.launch.dryrun``)."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.configs import ARCHS, SHAPES
+
+from .common import RESULTS_DIR, print_table, save_results
+
+
+def run(quick=False, dryrun_path=None):
+    path = dryrun_path or os.path.join(RESULTS_DIR, "dryrun.json")
+    if not os.path.exists(path):
+        print(f"[roofline] {path} missing — run `python -m repro.launch.dryrun`"
+              " first; skipping")
+        return []
+    from repro.launch.roofline import roofline_row
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for key, cell in sorted(cells.items()):
+        if not cell.get("ok"):
+            rows.append({"arch": cell.get("arch"), "shape": cell.get("shape"),
+                         "mesh": cell.get("mesh"), "bottleneck": "FAILED"})
+            continue
+        if cell["mesh"] != "single_pod":
+            continue  # roofline table is single-pod; multi-pod proves sharding
+        cfg = ARCHS[cell["arch"]]
+        shape = SHAPES[cell["shape"]]
+        r = roofline_row(cell, cfg, shape)
+        for k in ("t_compute_s", "t_memory_s", "t_collective_s"):
+            r[k] = round(r[k], 5)
+        r["useful_ratio"] = round(r["useful_ratio"], 3)
+        r["roofline_frac"] = round(r["roofline_frac"], 3)
+        rows.append(r)
+    print_table("Roofline (single-pod 16x16, per-device terms)", rows,
+                ["arch", "shape", "t_compute_s", "t_memory_s",
+                 "t_collective_s", "bottleneck", "useful_ratio",
+                 "roofline_frac"])
+    save_results("bench_roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

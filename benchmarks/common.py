@@ -1,0 +1,70 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.cluster import SimConfig, Simulator, alibaba_like_trace, physical_trace
+from repro.core import EvaScheduler, NoPackingScheduler, aws_catalog
+from repro.core.workloads import M_TRUE
+from repro.schedulers import OwlScheduler, StratusScheduler, SynergyScheduler
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
+    if name == "no-packing":
+        return NoPackingScheduler(catalog)
+    if name == "stratus":
+        return StratusScheduler(catalog)
+    if name == "synergy":
+        return SynergyScheduler(catalog)
+    if name == "owl":
+        profile = M_TRUE
+        if simcfg.uniform_interference is not None:
+            profile = np.full_like(M_TRUE, simcfg.uniform_interference)
+            np.fill_diagonal(profile, 1.0)
+        return OwlScheduler(catalog, profile)
+    if name.startswith("eva"):
+        opts = dict(migration_delay_scale=simcfg.migration_delay_scale)
+        if name == "eva-rp":
+            opts["interference_aware"] = False
+        if name == "eva-single":
+            opts["multi_task_aware"] = False
+        if name == "eva-full-only":
+            opts["mode"] = "full-only"
+        if name == "eva-partial-only":
+            opts["mode"] = "partial-only"
+        opts.update(kw)
+        return EvaScheduler(catalog, **opts)
+    raise KeyError(name)
+
+
+def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None, **kw):
+    simcfg = simcfg or SimConfig()
+    cat = aws_catalog()
+    sched = scheduler_factory(sched_name, cat, simcfg, **kw)
+    t0 = time.time()
+    sim = Simulator(cat, jobs, sched, simcfg)
+    m = sim.run()
+    out = m.summary()
+    out["wall_s"] = round(time.time() - t0, 1)
+    if hasattr(sched, "full_adoption_rate"):
+        out["full_adoption"] = round(sched.full_adoption_rate, 3)
+    return out
+
+
+def save_results(name: str, data) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(data, f, indent=1)
+
+
+def print_table(title: str, rows, cols):
+    print(f"\n== {title} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

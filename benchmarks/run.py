@@ -1,0 +1,49 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--full] [--only NAME]
+
+Emits CSV-style tables to stdout and JSON artifacts under results/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes (CI-scale)")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale end-to-end (6,274 jobs)")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench: micro|endtoend|multitask|"
+                         "interference|migration|composition|arrival|roofline")
+    args = ap.parse_args()
+
+    from . import (bench_arrival, bench_composition, bench_endtoend,
+                   bench_interference, bench_micro, bench_migration,
+                   bench_multitask, bench_roofline)
+    benches = {
+        "micro": lambda: bench_micro.run(quick=args.quick),
+        "endtoend": lambda: bench_endtoend.run(quick=args.quick,
+                                               full=args.full),
+        "multitask": lambda: bench_multitask.run(quick=args.quick),
+        "interference": lambda: bench_interference.run(quick=args.quick),
+        "migration": lambda: bench_migration.run(quick=args.quick),
+        "composition": lambda: bench_composition.run(quick=args.quick),
+        "arrival": lambda: bench_arrival.run(quick=args.quick),
+        "roofline": lambda: bench_roofline.run(quick=args.quick),
+    }
+    todo = [args.only] if args.only else list(benches)
+    t0 = time.time()
+    for name in todo:
+        t1 = time.time()
+        print(f"\n#### bench: {name} " + "#" * 40)
+        benches[name]()
+        print(f"#### bench {name} done in {time.time() - t1:.1f}s")
+    print(f"\nall benches done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

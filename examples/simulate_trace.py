@@ -1,0 +1,36 @@
+"""End-to-end simulation: all five schedulers on an Alibaba-like trace.
+
+    PYTHONPATH=src python examples/simulate_trace.py [--jobs 400] [--model gavel]
+"""
+import argparse
+
+from repro.cluster import SimConfig, Simulator, alibaba_like_trace
+from repro.core import EvaScheduler, NoPackingScheduler, aws_catalog
+from repro.core.workloads import M_TRUE
+from repro.schedulers import OwlScheduler, StratusScheduler, SynergyScheduler
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--jobs", type=int, default=400)
+ap.add_argument("--model", default="gavel", choices=["alibaba", "gavel"])
+args = ap.parse_args()
+
+cat = aws_catalog()
+factories = {
+    "no-packing": lambda: NoPackingScheduler(cat),
+    "stratus": lambda: StratusScheduler(cat),
+    "synergy": lambda: SynergyScheduler(cat),
+    "owl": lambda: OwlScheduler(cat, M_TRUE),
+    "eva": lambda: EvaScheduler(cat),
+}
+base = None
+print(f"{args.jobs} jobs, {args.model} durations")
+for name, f in factories.items():
+    jobs = alibaba_like_trace(n_jobs=args.jobs, seed=42,
+                              duration_model=args.model)
+    m = Simulator(cat, jobs, f(), SimConfig(seed=1)).run()
+    base = base or m.total_cost
+    s = m.summary()
+    print(f"  {name:11s} ${s['total_cost']:>10.2f} "
+          f"({m.total_cost / base * 100:5.1f}%)  "
+          f"jct={s['avg_jct_hours']:6.2f}h tput={s['norm_job_tput']:.3f} "
+          f"tasks/inst={s['tasks_per_instance']:.2f}")

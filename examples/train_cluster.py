@@ -1,0 +1,47 @@
+"""End-to-end driver: Eva schedules REAL JAX training jobs on the local
+"cloud" (threads = instances, billing by uptime, migration =
+checkpoint/restore, interference = genuine CPU contention).
+
+    PYTHONPATH=src python examples/train_cluster.py [--steps 120]
+
+Three jobs (smollm / qwen3 / mamba2 reduced configs) are trained to
+completion under Eva's scheduler; compare the bill against No-Packing.
+"""
+import argparse
+
+from repro.cluster.localcloud import LocalCloud, LocalJob
+from repro.configs import ARCHS
+from repro.core import Catalog, EvaScheduler, NoPackingScheduler
+from repro.core.catalog import InstanceType
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--scheduler", default="eva", choices=["eva", "no-packing"])
+args = ap.parse_args()
+
+# a tiny local "cloud": slots measured in CPU shares
+local_catalog = Catalog.from_types([
+    InstanceType("local.large", "c7i", (0, 4, 16), 1.0),
+    InstanceType("local.small", "c7i", (0, 2, 8), 0.55),
+    InstanceType("local.micro", "c7i", (0, 1, 4), 0.30),
+])
+
+jobs = [
+    LocalJob(job_id=1, workload=7, arch_cfg=ARCHS["smollm-135m"].reduced(),
+             total_steps=args.steps, demand=(0, 1, 4), standalone_sps=20.0),
+    LocalJob(job_id=2, workload=6, arch_cfg=ARCHS["qwen3-0.6b"].reduced(),
+             total_steps=args.steps, demand=(0, 1, 4), standalone_sps=15.0),
+    LocalJob(job_id=3, workload=9, arch_cfg=ARCHS["mamba2-780m"].reduced(),
+             total_steps=max(args.steps // 2, 20), demand=(0, 2, 8),
+             standalone_sps=10.0),
+]
+
+sched = (EvaScheduler(local_catalog) if args.scheduler == "eva"
+         else NoPackingScheduler(local_catalog))
+cloud = LocalCloud(local_catalog, sched, jobs, round_s=3.0)
+print(f"[cluster] scheduler={args.scheduler}: 3 real training jobs "
+      f"({args.steps} steps each) ...")
+out = cloud.run(timeout_s=900)
+print(f"[cluster] all_done={out['all_done']} steps={out['steps']}")
+print(f"[cluster] bill=${out['cost'] * 3600:.4f} (per-second billing), "
+      f"migrations={out['migrations']}")

@@ -1,0 +1,6 @@
+"""repro: Eva (EuroSys'25) cost-efficient cloud cluster scheduling as a
+production-grade JAX framework — scheduler core, cloud simulator, baselines,
+10 assigned architectures with FSDP/TP/EP sharding, Pallas TPU kernels,
+multi-pod dry-run and roofline tooling."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,572 @@
+"""High-fidelity event-driven simulator of a cloud-based cluster (paper §5).
+
+The scheduler under test operates exactly as in a real deployment: it sees
+only task demands, live placements and observed throughputs (through the
+ThroughputMonitor hooks) and returns abstract cluster configurations.  The
+simulated cloud models:
+
+* instance acquisition + setup delays (Table 1; acquisition ~ 6+Exp(13) s
+  clipped to [6, 83] (mean ≈ 19 s), setup ~ U[140, 251] s),
+* per-workload checkpoint / launch migration delays (Table 7),
+* co-location interference from the hidden ground-truth pairwise matrix
+  (Figure 1 model) — tasks progress at the product of pairwise throughputs,
+* data-parallel multi-task jobs progressing at the slowest task's rate,
+* per-second billing from instance request to termination,
+* optional instance failures (spot-style) for fault-tolerance experiments.
+
+Progress accounting is lazy: every state change accrues Δt into cost /
+allocation / idle-time integrals and re-projects job-completion events
+(versioned to invalidate stale projections).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from ..core.catalog import Catalog, FAMILIES
+from ..core.cluster_types import ClusterConfig, Job, TaskSet
+from ..core.plan import LiveInstance, diff_configs
+from ..core.scheduler import SchedulerBase, SchedulerView
+from ..core.workloads import M_TRUE, WORKLOADS
+
+# task states
+PENDING, WAITING, CKPT, LAUNCH, RUNNING = range(5)
+
+
+@dataclasses.dataclass
+class SimConfig:
+    round_interval_s: float = 300.0
+    migration_delay_scale: float = 1.0
+    # override ground-truth interference: None -> M_TRUE; float x -> uniform
+    # pairwise matrix with all off-diagonal entries x (Fig. 4 sweeps)
+    uniform_interference: Optional[float] = None
+    failure_mtbf_hours: float = 0.0  # 0 = no failures
+    checkpoint_period_s: float = 600.0  # progress-loss bound on failure
+    seed: int = 0
+    max_time_s: float = 1e9
+
+
+@dataclasses.dataclass
+class _TaskState:
+    task: object
+    job_id: int
+    workload: int
+    state: int = PENDING
+    src: Optional[int] = None  # instance where physically resident
+    dst: Optional[int] = None  # instance assigned by the scheduler
+    epoch: int = 0  # bumps invalidate in-flight ckpt/launch events
+    migrations: int = 0
+    placed_once: bool = False
+
+
+@dataclasses.dataclass
+class _JobState:
+    job: Job
+    iters_done: float = 0.0
+    rate: float = 0.0
+    version: int = 0
+    idle_s: float = 0.0
+    running_s: float = 0.0
+    tput_weighted: float = 0.0  # ∫ tput dt while running
+    done_t: Optional[float] = None
+    arrived: bool = False
+
+
+@dataclasses.dataclass
+class _Instance:
+    iid: int
+    type_index: int
+    request_t: float
+    ready_t: float
+    ready: bool = False
+    terminated_t: Optional[float] = None
+    draining: bool = False
+    assigned: Set[int] = dataclasses.field(default_factory=set)
+    residents: Set[int] = dataclasses.field(default_factory=set)  # outbound ckpt
+
+    @property
+    def alive(self) -> bool:
+        return self.terminated_t is None
+
+
+@dataclasses.dataclass
+class Metrics:
+    total_cost: float = 0.0
+    instances_launched: int = 0
+    migrations: int = 0
+    n_tasks: int = 0
+    n_jobs: int = 0
+    jct_sum: float = 0.0
+    idle_sum: float = 0.0
+    running_sum: float = 0.0
+    tput_weighted_sum: float = 0.0
+    alloc_integral: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(3))
+    cap_integral: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(3))
+    ninst_integral: float = 0.0
+    ntask_integral: float = 0.0
+    failures: int = 0
+    end_time: float = 0.0
+
+    @property
+    def avg_jct_hours(self) -> float:
+        return self.jct_sum / max(self.n_jobs, 1) / 3600.0
+
+    @property
+    def avg_idle_hours(self) -> float:
+        return self.idle_sum / max(self.n_jobs, 1) / 3600.0
+
+    @property
+    def norm_job_tput(self) -> float:
+        return self.tput_weighted_sum / max(self.running_sum, 1e-9)
+
+    @property
+    def tasks_per_instance(self) -> float:
+        return self.ntask_integral / max(self.ninst_integral, 1e-9)
+
+    @property
+    def migrations_per_task(self) -> float:
+        return self.migrations / max(self.n_tasks, 1)
+
+    def resource_allocation(self) -> Dict[str, float]:
+        out = {}
+        for i, r in enumerate(("gpu", "cpu", "ram")):
+            out[r] = float(self.alloc_integral[i] / max(self.cap_integral[i], 1e-9))
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        d = {"total_cost": round(self.total_cost, 2),
+             "avg_jct_hours": round(self.avg_jct_hours, 3),
+             "avg_idle_hours": round(self.avg_idle_hours, 4),
+             "norm_job_tput": round(self.norm_job_tput, 4),
+             "tasks_per_instance": round(self.tasks_per_instance, 3),
+             "migrations_per_task": round(self.migrations_per_task, 3),
+             "instances_launched": self.instances_launched,
+             "failures": self.failures}
+        d.update({f"alloc_{k}": round(v, 4)
+                  for k, v in self.resource_allocation().items()})
+        return d
+
+
+# event kinds (ordering within same timestamp: arrivals & completions before
+# rounds so the round sees fresh state)
+ARRIVAL, INSTANCE_READY, CKPT_DONE, LAUNCH_DONE, JOB_DONE, FAILURE, ROUND = range(7)
+
+
+class Simulator:
+    def __init__(self, catalog: Catalog, jobs: Sequence[Job],
+                 scheduler: SchedulerBase, cfg: Optional[SimConfig] = None):
+        self.catalog = catalog
+        self.scheduler = scheduler
+        self.cfg = cfg or SimConfig()
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.jobs: Dict[int, _JobState] = {}
+        self.tasks: Dict[int, _TaskState] = {}
+        self.instances: Dict[int, _Instance] = {}
+        self._iid = itertools.count()
+        self._seq = itertools.count()
+        self._heap: List[Tuple[float, int, int, int, tuple]] = []
+        self._round_scheduled_at: float = -1.0
+        self.now = 0.0
+        self._last_accrue = 0.0
+        self.metrics = Metrics()
+        if self.cfg.uniform_interference is not None:
+            x = float(self.cfg.uniform_interference)
+            self._m = np.full_like(M_TRUE, x)
+            np.fill_diagonal(self._m, 1.0)
+        else:
+            self._m = M_TRUE
+        for job in jobs:
+            self._push(job.arrival_time, ARRIVAL, (job,))
+        self.metrics.n_jobs = len(jobs)
+        self.metrics.n_tasks = sum(j.n_tasks for j in jobs)
+
+    # ------------------------------------------------------------------ util
+    def _push(self, t: float, kind: int, payload: tuple):
+        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+
+    def _live_instances(self) -> List[_Instance]:
+        return [i for i in self.instances.values() if i.alive and not i.draining]
+
+    def _alloc_of(self, inst: _Instance) -> np.ndarray:
+        fam = FAMILIES[self.catalog.types[inst.type_index].family_id]
+        a = np.zeros(3)
+        for tid in inst.assigned:
+            a += np.array(self.tasks[tid].task.demand_for_family(fam))
+        return a
+
+    # ------------------------------------------------------------ accounting
+    def _accrue(self, now: float):
+        dt = now - self._last_accrue
+        if dt <= 0:
+            self._last_accrue = now
+            return
+        m = self.metrics
+        for inst in self.instances.values():
+            if not inst.alive:
+                continue
+            m.ninst_integral += dt
+            m.ntask_integral += len(inst.assigned) * dt
+            m.cap_integral += self.catalog.capacities[inst.type_index] * dt
+            m.alloc_integral += self._alloc_of(inst) * dt
+        for js in self.jobs.values():
+            if not js.arrived or js.done_t is not None:
+                continue
+            if js.rate > 0:
+                js.iters_done += js.rate * dt
+                js.running_s += dt
+                js.tput_weighted += js.rate * dt
+            else:
+                js.idle_s += dt
+        self._last_accrue = now
+
+    # ----------------------------------------------------------- throughputs
+    def _colocated_running(self, tid: int) -> List[int]:
+        """Workloads of other RUNNING tasks resident on tid's instance."""
+        ts = self.tasks[tid]
+        if ts.state != RUNNING or ts.src is None:
+            return []
+        inst = self.instances[ts.src]
+        out = []
+        for other in inst.residents:
+            if other == tid:
+                continue
+            if self.tasks[other].state == RUNNING:
+                out.append(self.tasks[other].workload)
+        return out
+
+    def _task_tput(self, tid: int) -> float:
+        ts = self.tasks[tid]
+        if ts.state != RUNNING:
+            return 0.0
+        t = 1.0
+        for w2 in self._colocated_running(tid):
+            t *= self._m[ts.workload, w2]
+        return t
+
+    def _job_rate(self, jid: int) -> float:
+        js = self.jobs[jid]
+        rate = math.inf
+        for task in js.job.tasks:
+            rate = min(rate, self._task_tput(task.task_id))
+        return 0.0 if not math.isfinite(rate) else rate
+
+    def _touch_job(self, jid: int):
+        """Recompute a job's rate and (re)project its completion event."""
+        js = self.jobs.get(jid)
+        if js is None or not js.arrived or js.done_t is not None:
+            return
+        js.rate = self._job_rate(jid)
+        js.version += 1
+        if js.rate > 0:
+            remaining = js.job.total_iters - js.iters_done
+            eta = self.now + max(remaining, 0.0) / js.rate
+            self._push(eta, JOB_DONE, (jid, js.version))
+
+    def _touch_instance_jobs(self, iid: int):
+        inst = self.instances.get(iid)
+        if inst is None:
+            return
+        jids = {self.tasks[t].job_id for t in inst.residents | inst.assigned}
+        for j in jids:
+            self._touch_job(j)
+
+    # -------------------------------------------------------------- executor
+    def _new_instance(self, k: int) -> _Instance:
+        iid = next(self._iid)
+        acq = float(np.clip(6.0 + self.rng.exponential(13.0), 6.0, 83.0))
+        setup = float(self.rng.uniform(140.0, 251.0))
+        inst = _Instance(iid, k, self.now, self.now + acq + setup)
+        self.instances[iid] = inst
+        self.metrics.instances_launched += 1
+        self._push(inst.ready_t, INSTANCE_READY, (iid,))
+        if self.cfg.failure_mtbf_hours > 0:
+            dt = self.rng.exponential(self.cfg.failure_mtbf_hours * 3600.0)
+            self._push(self.now + dt, FAILURE, (iid,))
+        return inst
+
+    def _terminate(self, inst: _Instance):
+        if not inst.alive:
+            return
+        inst.terminated_t = self.now
+        self.metrics.total_cost += ((self.now - inst.request_t) / 3600.0
+                                    * self.catalog.costs[inst.type_index])
+
+    def _maybe_finish_drain(self, inst: _Instance):
+        if inst.draining and inst.alive and not inst.residents and not inst.assigned:
+            self._terminate(inst)
+
+    def _start_launch(self, tid: int):
+        """Task is checkpointed (or fresh) and assigned; launch when dst ready."""
+        ts = self.tasks[tid]
+        inst = self.instances[ts.dst]
+        if not inst.alive:  # dst died meanwhile
+            self._make_pending(tid)
+            return
+        if inst.ready:
+            ts.state = LAUNCH
+            w = WORKLOADS[ts.workload]
+            delay = w.launch_delay_s * self.cfg.migration_delay_scale
+            self._push(self.now + delay, LAUNCH_DONE, (tid, ts.epoch))
+        else:
+            ts.state = WAITING
+
+    def _make_pending(self, tid: int):
+        ts = self.tasks[tid]
+        ts.state = PENDING
+        ts.src = None
+        ts.dst = None
+        ts.epoch += 1
+
+    def _execute_config(self, config: ClusterConfig):
+        live = self._live_instances()
+        live_view = [LiveInstance(i.iid, i.type_index, tuple(sorted(i.assigned)))
+                     for i in live]
+        plan = diff_configs(live_view, config)
+
+        # map plan slots to concrete instances (reuse matched, launch fresh)
+        slot_inst: Dict[int, _Instance] = {}
+        for slot, (k, tids, matched) in enumerate(plan.slots):
+            if matched is not None:
+                slot_inst[slot] = self.instances[matched]
+            else:
+                slot_inst[slot] = self._new_instance(k)
+
+        # Migrations.  Tasks mid-flight (WAITING/CKPT/LAUNCH) are pinned: the
+        # executor defers moving them until they are RUNNING again.
+        for mig in plan.migrations:
+            ts = self.tasks[mig.task_id]
+            dst = slot_inst[mig.dst_slot]
+            if ts.state in (WAITING, CKPT, LAUNCH):
+                continue  # pinned
+            if ts.dst == dst.iid:
+                continue  # no-op
+            if ts.state == RUNNING:
+                # leave src: checkpoint first
+                src = self.instances[ts.src]
+                src.assigned.discard(mig.task_id)
+                ts.epoch += 1
+                ts.state = CKPT
+                ts.dst = dst.iid
+                dst.assigned.add(mig.task_id)
+                w = WORKLOADS[ts.workload]
+                delay = w.checkpoint_delay_s * self.cfg.migration_delay_scale
+                self._push(self.now + delay, CKPT_DONE, (mig.task_id, ts.epoch))
+                ts.migrations += 1
+                self.metrics.migrations += 1
+                self._touch_instance_jobs(src.iid)
+            else:  # PENDING -> fresh placement
+                ts.epoch += 1
+                ts.dst = dst.iid
+                dst.assigned.add(mig.task_id)
+                if ts.placed_once:
+                    ts.migrations += 1
+                    self.metrics.migrations += 1
+                ts.placed_once = True
+                self._start_launch(mig.task_id)
+
+        # Terminations: instances not matched by any slot.
+        for iid in plan.terminations:
+            inst = self.instances[iid]
+            if inst.assigned:
+                continue  # defensive: scheduler kept tasks here implicitly
+            if inst.residents:
+                inst.draining = True
+            else:
+                self._terminate(inst)
+
+    # ----------------------------------------------------------- monitoring
+    def _report_throughputs(self):
+        for jid, js in self.jobs.items():
+            if not js.arrived or js.done_t is not None:
+                continue
+            tasks = js.job.tasks
+            states = [self.tasks[t.task_id] for t in tasks]
+            if any(s.state != RUNNING for s in states):
+                continue
+            placements = []
+            tputs = []
+            for t in tasks:
+                colo = self._colocated_running(t.task_id)
+                placements.append((self.tasks[t.task_id].workload,
+                                   tuple(sorted(colo))))
+                tputs.append(self._task_tput(t.task_id))
+            value = min(tputs)
+            if len(tasks) == 1:
+                w, colo = placements[0]
+                if colo:
+                    self.scheduler.observe_single(w, colo, value)
+            else:
+                self.scheduler.observe_job(placements, value)
+
+    # ------------------------------------------------------------ round
+    def _live_task_ids(self) -> List[int]:
+        out = []
+        for js in self.jobs.values():
+            if js.arrived and js.done_t is None:
+                out.extend(t.task_id for t in js.job.tasks)
+        return sorted(out)
+
+    def _run_round(self):
+        self._report_throughputs()
+        tids = self._live_task_ids()
+        if not tids:
+            # nothing to schedule; terminate any empty instances
+            for inst in self._live_instances():
+                if not inst.assigned and not inst.residents:
+                    self._terminate(inst)
+            return
+        taskset = TaskSet([self.tasks[t].task for t in tids])
+        pending = {t for t in tids if self.tasks[t].dst is None}
+        live_view = [LiveInstance(i.iid, i.type_index, tuple(sorted(i.assigned)))
+                     for i in self._live_instances()]
+        remaining = {}
+        if self.scheduler.needs_runtime_estimates:
+            for t in tids:
+                js = self.jobs[self.tasks[t].job_id]
+                remaining[t] = max(js.job.total_iters - js.iters_done, 0.0)
+        view = SchedulerView(
+            time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
+            task_workload={t: self.tasks[t].workload for t in tids},
+            remaining_s=remaining or None)
+        config = self.scheduler.schedule(view)
+        self._execute_config(config)
+
+    def _schedule_next_round(self):
+        interval = self.cfg.round_interval_s
+        nxt = math.floor(self.now / interval + 1.0) * interval
+        if nxt > self._round_scheduled_at:
+            self._round_scheduled_at = nxt
+            self._push(nxt, ROUND, ())
+
+    # ------------------------------------------------------------- handlers
+    def _on_arrival(self, job: Job):
+        js = _JobState(job=job, arrived=True)
+        self.jobs[job.job_id] = js
+        for t in job.tasks:
+            self.tasks[t.task_id] = _TaskState(task=t, job_id=job.job_id,
+                                               workload=t.workload)
+        self.scheduler.on_event(self.now)
+        self._schedule_next_round()
+
+    def _on_instance_ready(self, iid: int):
+        inst = self.instances.get(iid)
+        if inst is None or not inst.alive:
+            return
+        inst.ready = True
+        for tid in sorted(inst.assigned):
+            if self.tasks[tid].state == WAITING:
+                self._start_launch(tid)
+
+    def _on_ckpt_done(self, tid: int, epoch: int):
+        ts = self.tasks[tid]
+        if ts.epoch != epoch or ts.state != CKPT:
+            return
+        if ts.src is not None:
+            src = self.instances[ts.src]
+            src.residents.discard(tid)
+            self._touch_instance_jobs(src.iid)
+            self._maybe_finish_drain(src)
+        ts.src = None
+        self._start_launch(tid)
+
+    def _on_launch_done(self, tid: int, epoch: int):
+        ts = self.tasks[tid]
+        if ts.epoch != epoch or ts.state != LAUNCH:
+            return
+        inst = self.instances[ts.dst]
+        ts.state = RUNNING
+        ts.src = inst.iid
+        inst.residents.add(tid)
+        self._touch_instance_jobs(inst.iid)
+
+    def _on_job_done(self, jid: int, version: int):
+        js = self.jobs[jid]
+        if js.version != version or js.done_t is not None:
+            return
+        if js.iters_done < js.job.total_iters - 1e-6:
+            return  # stale projection
+        js.done_t = self.now
+        js.job.completion_time = self.now
+        self.metrics.jct_sum += self.now - js.job.arrival_time
+        self.metrics.idle_sum += js.idle_s
+        self.metrics.running_sum += js.running_s
+        self.metrics.tput_weighted_sum += js.tput_weighted
+        for t in js.job.tasks:
+            ts = self.tasks[t.task_id]
+            for ref in (ts.src, ts.dst):
+                if ref is not None and ref in self.instances:
+                    inst = self.instances[ref]
+                    inst.assigned.discard(t.task_id)
+                    inst.residents.discard(t.task_id)
+                    self._touch_instance_jobs(inst.iid)
+                    self._maybe_finish_drain(inst)
+            ts.state = PENDING
+            ts.src = ts.dst = None
+            ts.epoch += 1
+        # housekeeping: empty instances release immediately (applies equally
+        # to all schedulers; non-empty ones wait for the next round)
+        for inst in self._live_instances():
+            if not inst.assigned and not inst.residents:
+                self._terminate(inst)
+        self.scheduler.on_event(self.now)
+
+    def _on_failure(self, iid: int):
+        inst = self.instances.get(iid)
+        if inst is None or not inst.alive:
+            return
+        self.metrics.failures += 1
+        victims = set(inst.assigned) | set(inst.residents)
+        self._terminate(inst)
+        jids = set()
+        for tid in victims:
+            ts = self.tasks[tid]
+            jids.add(ts.job_id)
+            # progress loss up to one checkpoint period
+            js = self.jobs[ts.job_id]
+            loss = js.rate * self.rng.uniform(0, self.cfg.checkpoint_period_s)
+            js.iters_done = max(0.0, js.iters_done - loss)
+            # clear any other reservation
+            if ts.dst is not None and ts.dst in self.instances and ts.dst != iid:
+                self.instances[ts.dst].assigned.discard(tid)
+            self._make_pending(tid)
+        for j in jids:
+            self._touch_job(j)
+        self._schedule_next_round()
+
+    # ----------------------------------------------------------------- main
+    def run(self) -> Metrics:
+        while self._heap:
+            t, kind, _, payload = heapq.heappop(self._heap)
+            if t > self.cfg.max_time_s:
+                break
+            self._accrue(t)
+            self.now = t
+            if kind == ARRIVAL:
+                self._on_arrival(*payload)
+            elif kind == INSTANCE_READY:
+                self._on_instance_ready(*payload)
+            elif kind == CKPT_DONE:
+                self._on_ckpt_done(*payload)
+            elif kind == LAUNCH_DONE:
+                self._on_launch_done(*payload)
+            elif kind == JOB_DONE:
+                self._on_job_done(*payload)
+            elif kind == FAILURE:
+                self._on_failure(*payload)
+            elif kind == ROUND:
+                self._run_round()
+                if self._live_task_ids():
+                    self._schedule_next_round()
+        # drain any leftover instances at the end
+        for inst in self.instances.values():
+            if inst.alive:
+                self._terminate(inst)
+        self.metrics.end_time = self.now
+        return self.metrics

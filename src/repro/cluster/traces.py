@@ -1,0 +1,162 @@
+"""Workload trace generation (§6.1).
+
+* ``physical_trace`` — synthetic traces like the paper's physical experiments:
+  N jobs sampled from the 10 Table-7 workloads, durations U[0.5, 3] h,
+  Poisson arrivals with 20-min mean inter-arrival.
+* ``alibaba_like_trace`` — the Alibaba production trace
+  (cluster-trace-gpu-v2023) is not redistributable offline, so we synthesize
+  a 6,274-job trace matching its published statistics: GPU-demand mix from
+  Table 8, job durations matching Table 9's quantiles (mean 9.1 h, median
+  0.2 h, P80 1.0 h, P95 5.2 h) or the Gavel duration model (10^x minutes,
+  x ~ U[1.5,3] w.p. 0.8 else U[3,4]).  Each job is mapped to a Table-7
+  workload for its migration delays and interference behaviour, while
+  keeping the trace's own resource demands — exactly the paper's procedure.
+* knobs for §6.6-6.8: multi-GPU composition (5:4:1 of 2/4/8-GPU jobs),
+  multi-task share (1:1 of 2-/4-task jobs), arrival-rate scaling.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional
+
+import numpy as np
+
+from ..core.catalog import FAMILIES
+from ..core.cluster_types import Job, Task
+from ..core.workloads import NUM_WORKLOADS, WORKLOADS
+
+_GPU_WORKLOADS = [i for i, w in enumerate(WORKLOADS) if w.demands["p3"][0] > 0]
+_CPU_WORKLOADS = [i for i, w in enumerate(WORKLOADS) if w.demands["p3"][0] == 0]
+
+_job_ids = itertools.count(1)
+_task_ids = itertools.count(1_000_000)
+
+
+def _table7_job(rng, workload: int, arrival: float, duration: float) -> Job:
+    prof = WORKLOADS[workload]
+    job_id = next(_job_ids)
+    job = Job(job_id=job_id, workload=workload, arrival_time=arrival,
+              duration_s=duration, n_tasks=prof.n_tasks)
+    for _ in range(prof.n_tasks):
+        demands = {f: prof.demand_for_family(f) for f in FAMILIES}
+        job.tasks.append(Task(next(_task_ids), job_id, workload, demands))
+    return job
+
+
+def _custom_job(workload: int, arrival: float, duration: float,
+                demand, n_tasks: int) -> Job:
+    job_id = next(_job_ids)
+    job = Job(job_id=job_id, workload=workload, arrival_time=arrival,
+              duration_s=duration, n_tasks=n_tasks)
+    d = {f: tuple(map(float, demand)) for f in FAMILIES}
+    for _ in range(n_tasks):
+        job.tasks.append(Task(next(_task_ids), job_id, workload, d))
+    return job
+
+
+def physical_trace(n_jobs: int = 120, seed: int = 0,
+                   mean_interarrival_s: float = 1200.0,
+                   duration_range_h=(0.5, 3.0)) -> List[Job]:
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    jobs = []
+    for _ in range(n_jobs):
+        t += rng.exponential(mean_interarrival_s)
+        w = int(rng.integers(NUM_WORKLOADS))
+        dur = rng.uniform(*duration_range_h) * 3600.0
+        jobs.append(_table7_job(rng, w, t, dur))
+    return jobs
+
+
+# ---------------------------------------------------------------- durations
+# piecewise log-linear inverse CDF through Table 9's Alibaba quantiles, with
+# a log-uniform tail beyond P95 on [5.2 h, 900 h]: E[tail] = Δ/ln-ratio ≈
+# 174 h, so the overall mean lands at 0.95·0.31 + 0.05·174 ≈ 9 h (Table 9
+# reports mean 9.1 h, median 0.2 h — the mass is in week-long trainings).
+_ALI_ANCHORS_P = np.array([0.0, 0.25, 0.50, 0.80, 0.95])
+_ALI_ANCHORS_H = np.array([0.003, 0.05, 0.20, 1.00, 5.20])
+_ALI_TAIL_MAX_H = 900.0
+
+
+def sample_alibaba_duration_h(rng, n: int) -> np.ndarray:
+    u = rng.uniform(0, 1, size=n)
+    out = np.empty(n)
+    body = u < 0.95
+    out[body] = np.exp(np.interp(u[body], _ALI_ANCHORS_P,
+                                 np.log(_ALI_ANCHORS_H)))
+    k = (~body).sum()
+    if k:
+        out[~body] = np.exp(rng.uniform(np.log(5.2), np.log(_ALI_TAIL_MAX_H),
+                                        size=k))
+    return out
+
+
+def sample_gavel_duration_h(rng, n: int) -> np.ndarray:
+    lo = rng.uniform(1.5, 3.0, size=n)
+    hi = rng.uniform(3.0, 4.0, size=n)
+    x = np.where(rng.uniform(0, 1, size=n) < 0.8, lo, hi)
+    return (10.0 ** x) / 60.0  # minutes -> hours
+
+
+# Table 8 GPU-demand mix.
+_GPU_MIX = [(0, 0.1341), (1, 0.8617), (2, 0.0020), (4, 0.0018), (8, 0.0004)]
+
+
+def alibaba_like_trace(n_jobs: int = 6274, seed: int = 0,
+                       duration_model: str = "alibaba",
+                       mean_interarrival_s: float = 1200.0,
+                       multi_gpu_fraction: Optional[float] = None,
+                       multi_task_fraction: float = 0.0) -> List[Job]:
+    """Synthesize the paper's simulation trace.
+
+    multi_gpu_fraction: if set, overrides the share of GPU jobs that are
+    multi-GPU, keeping a 5:4:1 ratio among 2-/4-/8-GPU jobs (§6.6).
+    multi_task_fraction: share of jobs duplicated into 2- or 4-task jobs,
+    1:1 mix (§6.7).
+    """
+    rng = np.random.default_rng(seed)
+    sampler = {"alibaba": sample_alibaba_duration_h,
+               "gavel": sample_gavel_duration_h}[duration_model]
+    durations = sampler(rng, n_jobs) * 3600.0
+
+    gpus, probs = zip(*_GPU_MIX)
+    gpu_demand = rng.choice(gpus, size=n_jobs, p=probs)
+    if multi_gpu_fraction is not None:
+        # rewrite GPU jobs: fraction f multi-GPU at ratio 5:4:1 (2:4:8 GPUs)
+        is_gpu = gpu_demand > 0
+        idx = np.nonzero(is_gpu)[0]
+        multi = rng.uniform(0, 1, size=idx.size) < multi_gpu_fraction
+        kinds = rng.choice([2, 4, 8], size=idx.size, p=[0.5, 0.4, 0.1])
+        gpu_demand[idx] = np.where(multi, kinds, 1)
+
+    t = 0.0
+    jobs: List[Job] = []
+    for i in range(n_jobs):
+        t += rng.exponential(mean_interarrival_s)
+        g = int(gpu_demand[i])
+        if g > 0:
+            # ~55 % of GPU tasks request CPU/RAM beyond their GPU-count's
+            # instance tier ("straddle" demands): a 1-GPU task asking for
+            # 16 vCPU / 100 GB forces a p3.8xlarge on its own — the
+            # fragmentation Eva exploits.  The real cluster-trace-gpu-v2023
+            # comes from Alibaba's GPU-sharing cluster with exactly this
+            # demand pattern; the fraction is calibrated so the No-Packing
+            # per-job cost matches Table 13 (≈ $76/job ≈ $8.4/job-hour).
+            w = int(rng.choice(_GPU_WORKLOADS))
+            if rng.uniform() < 0.55 and 8 * g < 64:
+                cpu = float(rng.integers(8 * g + 1, min(24 * g, 64) + 1))
+                ram = float(np.round(rng.uniform(61.0 * g,
+                                                 min(200.0 * g, 488.0)), 1))
+            else:
+                cpu = float(rng.integers(1, 8 * g + 1))
+                ram = float(np.round(rng.uniform(2.0, 55.0 * g), 1))
+        else:
+            w = int(rng.choice(_CPU_WORKLOADS))
+            cpu = float(np.round(np.exp(rng.uniform(0.0, np.log(32.0)))))
+            ram = float(np.round(np.exp(rng.uniform(np.log(2.0), np.log(256.0))), 1))
+        n_tasks = 1
+        if multi_task_fraction > 0 and rng.uniform() < multi_task_fraction:
+            n_tasks = int(rng.choice([2, 4]))
+        jobs.append(_custom_job(w, t, float(durations[i]), (g, cpu, ram),
+                                n_tasks))
+    return jobs

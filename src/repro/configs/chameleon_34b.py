@@ -1,0 +1,4 @@
+"""Config: chameleon_34b (see registry.py for the full definition)."""
+from .registry import CHAMELEON_34B as CONFIG
+
+__all__ = ["CONFIG"]

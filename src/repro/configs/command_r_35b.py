@@ -1,0 +1,4 @@
+"""Config: command_r_35b (see registry.py for the full definition)."""
+from .registry import COMMAND_R_35B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config: deepseek_moe_16b (see registry.py for the full definition)."""
+from .registry import DEEPSEEK_MOE_16B as CONFIG
+
+__all__ = ["CONFIG"]

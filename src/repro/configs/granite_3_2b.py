@@ -1,0 +1,4 @@
+"""Config: granite_3_2b (see registry.py for the full definition)."""
+from .registry import GRANITE_3_2B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config: granite_moe_3b_a800m (see registry.py for the full definition)."""
+from .registry import GRANITE_MOE_3B as CONFIG
+
+__all__ = ["CONFIG"]

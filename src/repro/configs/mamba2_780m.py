@@ -1,0 +1,4 @@
+"""Config: mamba2_780m (see registry.py for the full definition)."""
+from .registry import MAMBA2_780M as CONFIG
+
+__all__ = ["CONFIG"]

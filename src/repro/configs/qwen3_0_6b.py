@@ -1,0 +1,4 @@
+"""Config: qwen3_0_6b (see registry.py for the full definition)."""
+from .registry import QWEN3_0_6B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config: recurrentgemma_2b (see registry.py for the full definition)."""
+from .registry import RECURRENTGEMMA_2B as CONFIG
+
+__all__ = ["CONFIG"]

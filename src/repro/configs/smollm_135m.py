@@ -1,0 +1,4 @@
+"""Config: smollm_135m (see registry.py for the full definition)."""
+from .registry import SMOLLM_135M as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Config: whisper_medium (see registry.py for the full definition)."""
+from .registry import WHISPER_MEDIUM as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,119 @@
+"""Instance-type catalog.
+
+The paper evaluates 21 AWS EC2 instance types from 3 families (P3 GPU
+instances, C7i compute-optimized, R7i memory-optimized).  We encode the real
+published specs/prices (us-east-1, on-demand, 2024).  Resources are the
+3-vector (GPU, CPU, RAM-GB) used throughout the paper.
+
+``example_catalog`` reproduces Table 3 of the paper and is used by unit tests
+to check the Algorithm-1 walkthrough verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+RESOURCES = ("gpu", "cpu", "ram")
+NUM_RESOURCES = len(RESOURCES)
+
+# Instance families.  Per-family demand vectors (Table 7: CPU tasks need fewer
+# vCPUs on C7i/R7i because of higher clocks) are indexed by these ids.
+FAMILIES = ("p3", "c7i", "r7i")
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceType:
+    name: str
+    family: str
+    capacity: tuple  # (gpu, cpu, ram_gb)
+    hourly_cost: float
+
+    @property
+    def family_id(self) -> int:
+        return FAMILIES.index(self.family) if self.family in FAMILIES else 0
+
+
+def _it(name, family, gpu, cpu, ram, cost):
+    return InstanceType(name, family, (float(gpu), float(cpu), float(ram)), float(cost))
+
+
+# 21 types: 3 P3 + 9 C7i + 9 R7i (matches the paper's setup).
+AWS_CATALOG: tuple = (
+    _it("p3.2xlarge", "p3", 1, 8, 61, 3.06),
+    _it("p3.8xlarge", "p3", 4, 32, 244, 12.24),
+    _it("p3.16xlarge", "p3", 8, 64, 488, 24.48),
+    _it("c7i.large", "c7i", 0, 2, 4, 0.0893),
+    _it("c7i.xlarge", "c7i", 0, 4, 8, 0.1785),
+    _it("c7i.2xlarge", "c7i", 0, 8, 16, 0.357),
+    _it("c7i.4xlarge", "c7i", 0, 16, 32, 0.714),
+    _it("c7i.8xlarge", "c7i", 0, 32, 64, 1.428),
+    _it("c7i.12xlarge", "c7i", 0, 48, 96, 2.142),
+    _it("c7i.16xlarge", "c7i", 0, 64, 128, 2.856),
+    _it("c7i.24xlarge", "c7i", 0, 96, 192, 4.284),
+    _it("c7i.48xlarge", "c7i", 0, 192, 384, 8.568),
+    _it("r7i.large", "r7i", 0, 2, 16, 0.1323),
+    _it("r7i.xlarge", "r7i", 0, 4, 32, 0.2646),
+    _it("r7i.2xlarge", "r7i", 0, 8, 64, 0.5292),
+    _it("r7i.4xlarge", "r7i", 0, 16, 128, 1.0584),
+    _it("r7i.8xlarge", "r7i", 0, 32, 256, 2.1168),
+    _it("r7i.12xlarge", "r7i", 0, 48, 384, 3.1752),
+    _it("r7i.16xlarge", "r7i", 0, 64, 512, 4.2336),
+    _it("r7i.24xlarge", "r7i", 0, 96, 768, 6.3504),
+    _it("r7i.48xlarge", "r7i", 0, 192, 1536, 12.7008),
+)
+
+
+def example_catalog() -> tuple:
+    """Table 3(a) of the paper: it1..it4."""
+    return (
+        _it("it1", "p3", 4, 16, 244, 12.0),
+        _it("it2", "p3", 1, 4, 61, 3.0),
+        _it("it3", "c7i", 0, 8, 32, 0.8),
+        _it("it4", "c7i", 0, 4, 16, 0.4),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Catalog:
+    """Vectorized view over a set of instance types.
+
+    Attributes
+    ----------
+    capacities : (K, R) float64
+    costs      : (K,)   float64
+    order_desc : indices of types sorted by descending cost (Algorithm 1 order)
+    """
+
+    types: tuple
+    capacities: np.ndarray
+    costs: np.ndarray
+    family_ids: np.ndarray
+    order_desc: np.ndarray
+
+    @staticmethod
+    def from_types(types: Sequence[InstanceType]) -> "Catalog":
+        types = tuple(types)
+        caps = np.array([t.capacity for t in types], dtype=np.float64)
+        costs = np.array([t.hourly_cost for t in types], dtype=np.float64)
+        fam = np.array([t.family_id for t in types], dtype=np.int64)
+        order = np.argsort(-costs, kind="stable")
+        return Catalog(types, caps, costs, fam, order)
+
+    def __len__(self) -> int:
+        return len(self.types)
+
+    def index_of(self, name: str) -> int:
+        for i, t in enumerate(self.types):
+            if t.name == name:
+                return i
+        raise KeyError(name)
+
+
+def aws_catalog() -> Catalog:
+    return Catalog.from_types(AWS_CATALOG)
+
+
+def table3_catalog() -> Catalog:
+    return Catalog.from_types(example_catalog())

@@ -1,0 +1,130 @@
+"""Core data model: tasks, jobs, instances, cluster configurations.
+
+The scheduler-facing representation is deliberately array-friendly: a
+``TaskSet`` holds (T, F, R) demand tensors so reservation prices and packing
+feasibility are vectorized across all tasks and instance types at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .catalog import FAMILIES, NUM_RESOURCES, Catalog
+from .workloads import WORKLOADS
+
+
+@dataclasses.dataclass
+class Task:
+    task_id: int
+    job_id: int
+    workload: int  # index into the workload-profile table (interference key)
+    # demands[f] = (gpu, cpu, ram) for family f; missing families fall back to
+    # demands[0] (the "p3" vector), mirroring Table 7.
+    demands: Dict[str, Tuple[float, float, float]]
+
+    def demand_for_family(self, family: str) -> Tuple[float, float, float]:
+        return self.demands.get(family, self.demands.get("p3"))
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    workload: int
+    arrival_time: float  # seconds
+    duration_s: float  # standalone (no-interference) runtime
+    n_tasks: int
+    tasks: List[Task] = dataclasses.field(default_factory=list)
+    # runtime bookkeeping (filled by the simulator)
+    completion_time: Optional[float] = None
+
+    @property
+    def total_iters(self) -> float:
+        # normalize standalone rate to 1 iter/sec
+        return self.duration_s
+
+
+@dataclasses.dataclass
+class Instance:
+    instance_id: int
+    type_index: int  # into the catalog
+    launch_time: float = 0.0  # when requested from the cloud
+    ready_time: float = 0.0  # after acquisition + setup
+    terminate_time: Optional[float] = None
+
+
+# A cluster configuration: list of (type_index, tuple-of-task-ids).  Instances
+# are anonymous at the algorithm level; the executor diffs configurations
+# against live instances to minimize actual migrations.
+Assignment = Tuple[int, Tuple[int, ...]]
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    assignments: List[Assignment] = dataclasses.field(default_factory=list)
+
+    def total_hourly_cost(self, catalog: Catalog) -> float:
+        return float(sum(catalog.costs[k] for k, _ in self.assignments))
+
+    def task_to_slot(self) -> Dict[int, int]:
+        out = {}
+        for slot, (_, tids) in enumerate(self.assignments):
+            for t in tids:
+                out[t] = slot
+        return out
+
+    def num_tasks(self) -> int:
+        return sum(len(tids) for _, tids in self.assignments)
+
+
+class TaskSet:
+    """Array view over a list of tasks.
+
+    demand_by_family : (T, F, R) — demand of task t if placed on family f
+    job_ids, workloads : (T,) int64
+    """
+
+    def __init__(self, tasks: Sequence[Task]):
+        self.tasks = list(tasks)
+        self.ids = np.array([t.task_id for t in self.tasks], dtype=np.int64)
+        self.job_ids = np.array([t.job_id for t in self.tasks], dtype=np.int64)
+        self.workloads = np.array([t.workload for t in self.tasks], dtype=np.int64)
+        T = len(self.tasks)
+        d = np.zeros((T, len(FAMILIES), NUM_RESOURCES), dtype=np.float64)
+        for i, t in enumerate(self.tasks):
+            for fi, fam in enumerate(FAMILIES):
+                d[i, fi] = t.demand_for_family(fam)
+        self.demand_by_family = d
+        self._index_of = {tid: i for i, tid in enumerate(self.ids.tolist())}
+
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def row(self, task_id: int) -> int:
+        return self._index_of[task_id]
+
+    def subset(self, task_ids: Sequence[int]) -> "TaskSet":
+        rows = [self._index_of[t] for t in task_ids]
+        return TaskSet([self.tasks[r] for r in rows])
+
+
+_task_counter = itertools.count()
+
+
+def make_task(job_id: int, workload: int, task_id: Optional[int] = None) -> Task:
+    prof = WORKLOADS[workload]
+    demands = {fam: prof.demand_for_family(fam) for fam in FAMILIES}
+    tid = next(_task_counter) if task_id is None else task_id
+    return Task(task_id=tid, job_id=job_id, workload=workload, demands=demands)
+
+
+def make_job(job_id: int, workload: int, arrival_time: float, duration_s: float,
+             n_tasks: Optional[int] = None) -> Job:
+    prof = WORKLOADS[workload]
+    n = prof.n_tasks if n_tasks is None else n_tasks
+    job = Job(job_id=job_id, workload=workload, arrival_time=arrival_time,
+              duration_s=duration_s, n_tasks=n)
+    job.tasks = [make_task(job_id, workload) for _ in range(n)]
+    return job

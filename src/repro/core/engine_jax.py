@@ -1,0 +1,132 @@
+"""Jitted packing engine (beyond-paper optimization).
+
+Algorithm 1's inner argmax is reformulated incrementally so each add step is
+O(W² + T) instead of O(|members| · T):
+
+  TNRP(T ∪ {c}) = cur − Σ_m jobrp_m·tput_m·(1 − P[w_m, w_c])
+                      + rp_c − (1 − Π_m P[w_c, w_m])·jobrp_c
+
+The member sum collapses onto per-workload aggregates agg_w = Σ_{m:w_m=w}
+jobrp_m·tput_m (updated in O(W) per add, queried via agg·P), and candidate
+throughputs are maintained as running log-products.  The whole
+instances×adds loop for one instance type runs as nested lax.while_loops in
+a single jitted call; the 21-type outer loop stays in Python.
+
+Single-task TNRP (tput·RP) is the multi-task formula with jobrp ≡ rp, so one
+code path serves both.  This engine replaces the paper's 22 s / 8k-task
+Python scheduler (Table 5) with a ~milliseconds-scale packing round.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .catalog import Catalog
+
+_EPS = 1e-9
+_NEG = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _pack_one_type(demand, workloads, rp, job_rp, logP, P, cap_full, cost,
+                   avail0):
+    """Pack instances of ONE type until the fill is not cost-efficient.
+
+    demand: (T, R) on this type's family; workloads: (T,); rp/job_rp: (T,);
+    logP/P: (W, W); cap_full: (R,); cost: scalar; avail0: (T,) bool.
+    Returns (slot: (T,) int32 assignment for this type (-1 = none),
+             n_slots, avail_after).
+    """
+    T = demand.shape[0]
+
+    def fill_instance(avail):
+        """Greedy-fill a fresh instance; returns (sel, tnrp)."""
+        sel0 = jnp.zeros(T, bool)
+        state = (sel0, cap_full, jnp.zeros(T), jnp.zeros(logP.shape[0]),
+                 jnp.float64(0.0) if False else jnp.float32(0.0), False)
+
+        def cond(s):
+            return ~s[-1]
+
+        def body(s):
+            sel, capr, logtput, agg, cur, _ = s
+            feas = avail & ~sel & jnp.all(demand <= capr[None] + _EPS, axis=1)
+            vec = agg @ P  # (W,)
+            cand_tput = jnp.exp(logtput)
+            score = (cur - (agg.sum() - vec[workloads])
+                     + rp - (1.0 - cand_tput) * job_rp)
+            score = jnp.where(feas, score, _NEG)
+            best = jnp.argmax(score)
+            bv = score[best]
+            ok = feas.any() & (bv >= cur - _EPS)
+
+            wb = workloads[best]
+            tput_b = cand_tput[best]
+            new_sel = sel.at[best].set(True)
+            new_capr = capr - demand[best]
+            new_logtput = logtput + logP[workloads, wb]
+            new_agg = agg * P[:, wb]
+            new_agg = new_agg.at[wb].add(job_rp[best] * tput_b)
+
+            sel = jnp.where(ok, new_sel, sel)
+            capr = jnp.where(ok, new_capr, capr)
+            logtput = jnp.where(ok, new_logtput, logtput)
+            agg = jnp.where(ok, new_agg, agg)
+            cur = jnp.where(ok, bv.astype(cur.dtype), cur)
+            return (sel, capr, logtput, agg, cur, ~ok)
+
+        sel, _, _, _, cur, _ = jax.lax.while_loop(cond, body, state)
+        return sel, cur
+
+    def outer_cond(s):
+        return s[-1]
+
+    def outer_body(s):
+        slot_arr, n_slots, avail, _ = s
+        sel, tnrp = fill_instance(avail)
+        accept = sel.any() & (tnrp >= cost - _EPS)
+        slot_arr = jnp.where(accept & sel, n_slots, slot_arr)
+        avail = jnp.where(accept, avail & ~sel, avail)
+        n_slots = n_slots + jnp.where(accept, 1, 0)
+        return (slot_arr, n_slots, avail, accept)
+
+    init = (jnp.full(T, -1, jnp.int32), jnp.int32(0), avail0, True)
+    slot_arr, n_slots, avail, _ = jax.lax.while_loop(outer_cond, outer_body,
+                                                     init)
+    return slot_arr, n_slots, avail
+
+
+def pack_jax(demand_by_family: np.ndarray, workloads: np.ndarray,
+             rp: np.ndarray, job_rp: Optional[np.ndarray], catalog: Catalog,
+             pairwise: np.ndarray) -> List[Tuple[int, List[int]]]:
+    """Engine entry point (same contract as the numpy/python engines)."""
+    T = demand_by_family.shape[0]
+    if job_rp is None:
+        job_rp = rp  # single-task TNRP == multi-task with jobrp = rp
+    w = jnp.asarray(workloads, jnp.int32)
+    rp_j = jnp.asarray(rp, jnp.float32)
+    jr_j = jnp.asarray(job_rp, jnp.float32)
+    P = jnp.asarray(pairwise, jnp.float32)
+    logP = jnp.log(jnp.maximum(P, 1e-9))
+    avail = jnp.ones(T, bool)
+    out: List[Tuple[int, List[int]]] = []
+    for k in catalog.order_desc.tolist():
+        fam = catalog.family_ids[k]
+        d = jnp.asarray(demand_by_family[:, fam, :], jnp.float32)
+        slot_arr, n_slots, avail = _pack_one_type(
+            d, w, rp_j, jr_j, logP, P,
+            jnp.asarray(catalog.capacities[k], jnp.float32),
+            jnp.float32(catalog.costs[k]), avail)
+        ns = int(n_slots)
+        if ns:
+            sa = np.asarray(slot_arr)
+            for s in range(ns):
+                rows = np.nonzero(sa == s)[0].tolist()
+                out.append((k, rows))
+        if not bool(avail.any()):
+            break
+    return out

@@ -1,0 +1,94 @@
+"""Partial Reconfiguration (§4.5).
+
+Keeps every live instance whose task set is still cost-efficient
+(TNRP(T_i) ≥ C_i after completions / observed interference) and re-packs only
+
+  * tasks from recently submitted jobs not yet assigned to any instance, and
+  * tasks on instances that are no longer cost-efficient,
+
+via Algorithm 1.  Multi-task RP penalties are computed over the *system-wide*
+job membership (non-migrating siblings still count).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Set
+
+import numpy as np
+
+from .catalog import Catalog
+from .cluster_types import Assignment, ClusterConfig, TaskSet
+from .full_reconfig import EPS, evaluate_assignments, full_reconfiguration
+from .reservation_price import job_rp_sums, reservation_prices
+from .throughput_table import ThroughputTable
+
+
+def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignment],
+                            pending_ids: Set[int], catalog: Catalog,
+                            table: Optional[ThroughputTable] = None, *,
+                            interference_aware: bool = True,
+                            multi_task_aware: bool = True,
+                            engine: str = "numpy") -> ClusterConfig:
+    live_task_ids = {t for _, tids in live_assignments for t in tids}
+    # Drop completed tasks from live assignments.
+    system_ids = set(tasks.ids.tolist())
+    trimmed: List[Assignment] = []
+    for k, tids in live_assignments:
+        alive = tuple(t for t in tids if t in system_ids)
+        if alive:
+            trimmed.append((k, alive))
+
+    repack: Set[int] = set(pending_ids) & system_ids
+    keep: List[Assignment] = []
+    if trimmed:
+        tnrps, costs = evaluate_assignments(trimmed, tasks, catalog, table,
+                                            multi_task_aware)
+        for (k, tids), s, c in zip(trimmed, tnrps, costs):
+            if s >= c - EPS:
+                keep.append((k, tids))
+            else:  # no longer cost-efficient -> evict for re-packing
+                repack |= set(tids)
+
+    if not repack:
+        return ClusterConfig(keep)
+
+    rp_all = reservation_prices(tasks, catalog)
+    job_rp_all = job_rp_sums(tasks, rp_all) if multi_task_aware else None
+
+    # First, best-fit repack tasks into spare capacity on KEPT instances
+    # (no extra provisioning, no migration of existing tenants) whenever the
+    # grown set stays cost-efficient under TNRP.
+    keep = [list(a) for a in keep]
+    for tid in sorted(repack, key=lambda t: -rp_all[tasks.row(t)]):
+        row = tasks.row(tid)
+        best, best_left = -1, np.inf
+        for i, (k, tids) in enumerate(keep):
+            fam = catalog.family_ids[k]
+            used = tasks.demand_by_family[
+                [tasks.row(x) for x in tids], fam, :].sum(axis=0)
+            d = tasks.demand_by_family[row, fam, :]
+            if np.any(used + d > catalog.capacities[k] + EPS):
+                continue
+            grown = (k, tuple(tids) + (tid,))
+            s, c = evaluate_assignments([grown], tasks, catalog, table,
+                                        multi_task_aware)
+            if s[0] < c[0] - EPS:
+                continue
+            left = float(((catalog.capacities[k] - used - d)
+                          / np.maximum(catalog.capacities[k], 1.0)).sum())
+            if left < best_left:
+                best, best_left = i, left
+        if best >= 0:
+            keep[best][1] = tuple(keep[best][1]) + (tid,)
+            repack.discard(tid)
+    keep = [(k, tuple(tids)) for k, tids in keep]
+
+    if not repack:
+        return ClusterConfig(keep)
+    sub = tasks.subset(sorted(repack))
+    rows = np.array([tasks.row(t) for t in sub.ids.tolist()])
+    packed = full_reconfiguration(
+        sub, catalog, table, interference_aware=interference_aware,
+        multi_task_aware=multi_task_aware, engine=engine,
+        rp=rp_all[rows],
+        job_rp=job_rp_all[rows] if job_rp_all is not None else None)
+    return ClusterConfig(keep + packed.assignments)

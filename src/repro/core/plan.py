@@ -1,0 +1,109 @@
+"""Configuration diffing: turn an abstract ClusterConfig into an execution
+plan against live instances, minimizing actual task migrations.
+
+Algorithm-level configurations are anonymous (type, task-set) slots.  The
+executor matches each slot to a live instance of the same type maximizing
+task overlap (greedy by overlap size), so tasks that stay on their matched
+instance do not migrate.  The same plan is used to *estimate* migration cost
+M_F / M_P for the ensemble criterion (§4.5) before committing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .catalog import Catalog
+from .cluster_types import ClusterConfig
+from .workloads import (INSTANCE_ACQUISITION_S, INSTANCE_SETUP_S, WORKLOADS)
+
+
+@dataclasses.dataclass
+class LiveInstance:
+    instance_id: int
+    type_index: int
+    task_ids: Tuple[int, ...]
+
+
+@dataclasses.dataclass
+class Migration:
+    task_id: int
+    src_instance: Optional[int]  # None = task was pending (fresh launch)
+    dst_slot: int  # index into plan.slots
+
+
+@dataclasses.dataclass
+class Plan:
+    # slot -> (type_index, task_ids, matched live instance id or None)
+    slots: List[Tuple[int, Tuple[int, ...], Optional[int]]]
+    migrations: List[Migration]
+    terminations: List[int]  # live instance ids
+    launches: List[int]  # slot indices needing a fresh instance
+
+    @property
+    def num_migrations(self) -> int:
+        return len(self.migrations)
+
+
+def diff_configs(live: Sequence[LiveInstance], new: ClusterConfig) -> Plan:
+    task_loc: Dict[int, int] = {}
+    for inst in live:
+        for t in inst.task_ids:
+            task_loc[t] = inst.instance_id
+    by_id = {i.instance_id: i for i in live}
+
+    # Greedy matching: per type, order (slot, live instance) pairs by overlap.
+    pairs = []
+    for slot, (k, tids) in enumerate(new.assignments):
+        want = set(tids)
+        for inst in live:
+            if inst.type_index != k:
+                continue
+            ov = len(want & set(inst.task_ids))
+            pairs.append((ov, slot, inst.instance_id))
+    pairs.sort(key=lambda x: (-x[0], x[1], x[2]))
+    slot_match: Dict[int, int] = {}
+    used = set()
+    for ov, slot, iid in pairs:
+        if slot in slot_match or iid in used:
+            continue
+        slot_match[slot] = iid
+        used.add(iid)
+
+    slots, migrations, launches = [], [], []
+    for slot, (k, tids) in enumerate(new.assignments):
+        matched = slot_match.get(slot)
+        slots.append((k, tuple(tids), matched))
+        if matched is None:
+            launches.append(slot)
+        stay = set(by_id[matched].task_ids) if matched is not None else set()
+        for t in tids:
+            if t in stay:
+                continue
+            migrations.append(Migration(t, task_loc.get(t), slot))
+    terminations = [i.instance_id for i in live if i.instance_id not in used]
+    return Plan(slots, migrations, terminations, launches)
+
+
+def migration_cost(plan: Plan, live: Sequence[LiveInstance], catalog: Catalog,
+                   task_workload: Dict[int, int],
+                   delay_scale: float = 1.0) -> float:
+    """Dollar estimate of a plan's migration overhead (§4.5 M term).
+
+    Per migrated task: (checkpoint + launch delay) during which both the
+    source and destination instances are provisioned but the task is idle.
+    Per fresh launch: acquisition + setup time billed idle.
+    """
+    by_id = {i.instance_id: i for i in live}
+    cost = 0.0
+    for slot in plan.launches:
+        k = plan.slots[slot][0]
+        cost += (INSTANCE_ACQUISITION_S + INSTANCE_SETUP_S) / 3600.0 * catalog.costs[k]
+    for m in plan.migrations:
+        w = WORKLOADS[task_workload[m.task_id]]
+        delay = (w.checkpoint_delay_s + w.launch_delay_s) * delay_scale
+        dst_k = plan.slots[m.dst_slot][0]
+        involved = catalog.costs[dst_k]
+        if m.src_instance is not None:
+            involved += catalog.costs[by_id[m.src_instance].type_index]
+        cost += delay / 3600.0 * involved
+    return float(cost)

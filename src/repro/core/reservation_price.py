@@ -1,0 +1,68 @@
+"""Reservation price (§4.2) and throughput-normalized reservation price (§4.3).
+
+RP(τ) = hourly cost of the cheapest instance type whose capacity fits τ's
+demand (per-family demand vectors supported).  TNRP(τ, T) = tput(τ,T) · RP(τ);
+for a task of a multi-task job j (§4.4):
+
+    TNRP(τ, T) = RP(τ) − Σ_{τ'∈j} (1 − tput(τ,T)) · RP(τ')
+
+which reduces to tput·RP for single-task jobs.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .catalog import Catalog, FAMILIES
+from .cluster_types import TaskSet
+
+
+def feasibility_matrix(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
+    """(T, K) bool: does task t fit alone on an empty instance of type k?"""
+    # demand of task t as seen by type k's family: (T, K, R)
+    fam = catalog.family_ids  # (K,)
+    d = tasks.demand_by_family[:, fam, :]  # (T, K, R)
+    return np.all(d <= catalog.capacities[None, :, :], axis=-1)
+
+
+def reservation_prices(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
+    """(T,) RP(τ).  Raises if some task fits no instance type (the paper
+    removes such jobs from the trace; callers should filter first)."""
+    feas = feasibility_matrix(tasks, catalog)
+    costs = np.where(feas, catalog.costs[None, :], np.inf)
+    rp = costs.min(axis=1)
+    if np.any(~np.isfinite(rp)):
+        bad = tasks.ids[~np.isfinite(rp)]
+        raise ValueError(f"tasks {bad.tolist()} fit no instance type")
+    return rp
+
+
+def cheapest_type(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
+    """(T,) index of the reservation-price instance type of each task."""
+    feas = feasibility_matrix(tasks, catalog)
+    costs = np.where(feas, catalog.costs[None, :], np.inf)
+    return costs.argmin(axis=1)
+
+
+def job_rp_sums(tasks: TaskSet, rp: np.ndarray) -> np.ndarray:
+    """(T,) Σ_{τ'∈job(τ)} RP(τ') — the multi-task penalty base for each task."""
+    out = np.zeros_like(rp)
+    sums: dict = {}
+    for i, j in enumerate(tasks.job_ids.tolist()):
+        sums[j] = sums.get(j, 0.0) + rp[i]
+    for i, j in enumerate(tasks.job_ids.tolist()):
+        out[i] = sums[j]
+    return out
+
+
+def tnrp(rp: np.ndarray, tput: np.ndarray,
+         job_rp: Optional[np.ndarray] = None) -> np.ndarray:
+    """Vectorized TNRP for tasks with throughputs ``tput`` (both (T,)).
+
+    With ``job_rp`` (Σ RP over the task's whole job), applies the §4.4
+    multi-task definition; otherwise the single-task tput·RP definition.
+    """
+    if job_rp is None:
+        return tput * rp
+    return rp - (1.0 - tput) * job_rp

@@ -1,0 +1,166 @@
+"""Scheduler interface + the Eva scheduler (ensemble of Full/Partial, §4.5).
+
+The simulator (and the local-cloud physical harness) call ``schedule(view)``
+each scheduling round and execute the returned abstract configuration via
+``core.plan.diff_configs``.  Throughput observations flow back through
+``observe_*`` callbacks, and arrival/completion events through ``on_event``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .catalog import Catalog
+from .cluster_types import ClusterConfig, TaskSet
+from .ensemble import EnsembleDecision, EventRateEstimator, choose, instantaneous_saving
+from .full_reconfig import evaluate_assignments, full_reconfiguration
+from .partial_reconfig import partial_reconfiguration
+from .plan import LiveInstance, diff_configs, migration_cost
+from .reservation_price import cheapest_type
+from .throughput_table import ThroughputTable
+from .workloads import NUM_WORKLOADS
+
+
+@dataclasses.dataclass
+class SchedulerView:
+    """Snapshot handed to a scheduler at each round."""
+    time: float
+    tasks: TaskSet  # all live tasks (placed + pending)
+    pending_ids: Set[int]
+    live: List[LiveInstance]
+    task_workload: Dict[int, int]
+    # runtime estimates (iters remaining / standalone rate), only for
+    # schedulers that declare needs_runtime_estimates (Stratus best-case).
+    remaining_s: Optional[Dict[int, float]] = None
+
+
+class SchedulerBase:
+    name = "base"
+    needs_runtime_estimates = False
+    needs_true_profile = False
+
+    def __init__(self, catalog: Catalog):
+        self.catalog = catalog
+
+    # -- monitor hooks ------------------------------------------------------
+    def on_event(self, time_s: float) -> None:  # job arrival/completion
+        pass
+
+    def observe_single(self, workload: int, colocated: Sequence[int],
+                       value: float) -> None:
+        pass
+
+    def observe_job(self, placements, value: float) -> None:
+        pass
+
+    # -- main entry ---------------------------------------------------------
+    def schedule(self, view: SchedulerView) -> ClusterConfig:
+        raise NotImplementedError
+
+
+class EvaScheduler(SchedulerBase):
+    """Eva (§4): ensemble of Full and Partial Reconfiguration over TNRP.
+
+    Variants used in the paper's ablations:
+      * interference_aware=False  -> Eva-RP  (Fig. 4)
+      * multi_task_aware=False    -> Eva-Single (Table 6 / Fig. 7)
+      * mode="full-only" / "partial-only"  (Fig. 5b / Fig. 6)
+    """
+
+    name = "eva"
+
+    def __init__(self, catalog: Catalog, *, interference_aware: bool = True,
+                 multi_task_aware: bool = True, mode: str = "ensemble",
+                 default_t: float = 0.95, engine: str = "numpy",
+                 migration_delay_scale: float = 1.0):
+        super().__init__(catalog)
+        assert mode in ("ensemble", "full-only", "partial-only")
+        self.interference_aware = interference_aware
+        self.multi_task_aware = multi_task_aware
+        self.mode = mode
+        self.engine = engine
+        self.migration_delay_scale = migration_delay_scale
+        self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
+        self.estimator = EventRateEstimator()
+        self.decisions: List[EnsembleDecision] = []
+        self.full_adoptions = 0
+        self.rounds = 0
+
+    # -- monitor ------------------------------------------------------------
+    def on_event(self, time_s: float) -> None:
+        self.estimator.on_event(time_s)
+
+    def observe_single(self, workload, colocated, value) -> None:
+        if self.interference_aware:
+            self.table.observe_single(workload, colocated, value)
+
+    def observe_job(self, placements, value) -> None:
+        if self.interference_aware:
+            self.table.observe_job(placements, value)
+
+    # -- scheduling ---------------------------------------------------------
+    def schedule(self, view: SchedulerView) -> ClusterConfig:
+        self.rounds += 1
+        table = self.table if self.interference_aware else None
+        kw = dict(interference_aware=self.interference_aware,
+                  multi_task_aware=self.multi_task_aware, engine=self.engine)
+        live_assignments = [(i.type_index, i.task_ids) for i in view.live]
+
+        if self.mode == "full-only":
+            cfg = full_reconfiguration(view.tasks, self.catalog, table, **kw)
+            self.full_adoptions += 1
+            return cfg
+        partial = partial_reconfiguration(view.tasks, live_assignments,
+                                          view.pending_ids, self.catalog,
+                                          table, **kw)
+        if self.mode == "partial-only":
+            return partial
+        full = full_reconfiguration(view.tasks, self.catalog, table, **kw)
+
+        s_f = instantaneous_saving(*evaluate_assignments(
+            full.assignments, view.tasks, self.catalog, table,
+            self.multi_task_aware))
+        s_p = instantaneous_saving(*evaluate_assignments(
+            partial.assignments, view.tasks, self.catalog, table,
+            self.multi_task_aware))
+        m_f = migration_cost(diff_configs(view.live, full), view.live,
+                             self.catalog, view.task_workload,
+                             self.migration_delay_scale)
+        m_p = migration_cost(diff_configs(view.live, partial), view.live,
+                             self.catalog, view.task_workload,
+                             self.migration_delay_scale)
+        decision = choose(s_f, m_f, s_p, m_p, self.estimator.d_hat())
+        self.decisions.append(decision)
+        if decision.adopt_full:
+            self.full_adoptions += 1
+            self.estimator.on_full_reconfig()
+            return full
+        return partial
+
+    @property
+    def full_adoption_rate(self) -> float:
+        return self.full_adoptions / max(self.rounds, 1)
+
+
+class NoPackingScheduler(SchedulerBase):
+    """One task per instance, each on its reservation-price type (§6.1)."""
+
+    name = "no-packing"
+
+    def schedule(self, view: SchedulerView) -> ClusterConfig:
+        system_ids = set(view.tasks.ids.tolist())
+        assignments = []
+        for inst in view.live:
+            alive = tuple(t for t in inst.task_ids if t in system_ids)
+            if alive:
+                assignments.append((inst.type_index, alive))
+        placed = {t for _, tids in assignments for t in tids}
+        todo = sorted(t for t in system_ids if t not in placed)
+        if todo:
+            sub = view.tasks.subset(todo)
+            kinds = cheapest_type(sub, self.catalog)
+            for tid, k in zip(todo, kinds.tolist()):
+                assignments.append((int(k), (tid,)))
+        return ClusterConfig(assignments)

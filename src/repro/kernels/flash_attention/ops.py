@@ -1,0 +1,41 @@
+"""Jit'd attention entry point: dispatches to the Pallas TPU kernel on TPU
+backends and the pure-jnp reference elsewhere (CPU dry-run / smoke tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_chunked, attention_ref
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    q_positions=None, k_positions=None,
+                    impl: str = "auto", interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KH, hd).
+
+    The Pallas path covers the contiguous-position train/prefill case.  On
+    non-TPU backends, long sequences use the chunked online-softmax
+    implementation so memory/traffic in the lowered HLO match a flash-style
+    schedule (the dry-run depends on this).  Decode (explicit position
+    arrays, single-token queries) uses the naive einsum path — a bandwidth-
+    bound matvec where a custom kernel buys nothing.
+    """
+    if impl == "auto":
+        impl = _default_impl()
+    contiguous = q_positions is None and k_positions is None \
+        and q.shape[1] == k.shape[1]
+    if impl == "pallas" and contiguous and q.shape[1] >= 8:
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      interpret=interpret)
+    if impl in ("reference", "chunked") and contiguous and q.shape[1] > 512:
+        return attention_chunked(q, k, v, causal=causal, window=window)
+    return attention_ref(q, k, v, causal=causal, window=window,
+                         q_positions=q_positions, k_positions=k_positions)

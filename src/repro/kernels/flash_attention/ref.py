@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for (GQA, causal/local) attention.
+
+``attention_ref``      — naive O(S²)-memory softmax attention (the oracle).
+``attention_chunked``  — memory-efficient online-softmax attention (scan over
+query blocks × kv blocks), numerically equivalent; this is what the dry-run
+lowers on non-TPU backends so HLO memory/traffic reflects a flash-style
+schedule instead of a materialized score matrix.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_positions: Optional[jnp.ndarray] = None,
+                  k_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KH, hd) with H % KH == 0.
+
+    Masking uses absolute positions (default arange).  Scores/softmax in f32.
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KH, _ = k.shape
+    g = H // KH
+    if q_positions is None:
+        q_positions = jnp.arange(Sq)
+    if k_positions is None:
+        k_positions = jnp.arange(Sk)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, g, hd)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) / jnp.sqrt(hd).astype(jnp.float32)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= q_positions[:, None] >= k_positions[None, :]
+    if window is not None:
+        mask &= q_positions[:, None] - k_positions[None, :] < window
+    mask &= k_positions[None, :] >= 0  # slots marked invalid with pos=-1
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: Optional[int] = None,
+                      block_q: int = 512) -> jnp.ndarray:
+    """Flash-style memory in pure XLA: sequential map over query blocks,
+    each block rematerialized in backward (jax.checkpoint), so live memory
+    is one (bq × Sk) score block and the saved residuals are just the block
+    outputs — O(S·hd) like a flash kernel, at ~1.5× recompute.  Same
+    contract as ``attention_ref`` with contiguous positions."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KH, _ = k.shape
+    g = H // KH
+    bq = min(block_q, Sq)
+    if Sq % bq:
+        return attention_ref(q, k, v, causal=causal, window=window)
+    nq = Sq // bq
+    scale = 1.0 / float(hd) ** 0.5
+    qb = q.reshape(B, nq, bq, KH, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kpos = jnp.arange(Sk)
+
+    @jax.checkpoint
+    def q_block(qi, q_i):
+        q_f = q_i.astype(jnp.float32) * scale  # (B, bq, KH, g, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_f, kf)  # (B, KH, g, bq, Sk)
+        qpos = qi * bq + jnp.arange(bq)
+        mask = jnp.ones((bq, Sk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        # finite sentinel (not -inf): keeps exp/backward NaN-free even for
+        # fully-masked rows
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.where(mask[None, None, None], jnp.exp(s - m), 0.0)
+        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+        return o  # (B, bq, KH, g, hd)
+
+    ob = jax.lax.map(lambda args: q_block(*args), (jnp.arange(nq), qb))
+    o = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return o.astype(q.dtype)

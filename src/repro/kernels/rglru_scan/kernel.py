@@ -1,0 +1,63 @@
+"""Pallas TPU kernel for the RG-LRU linear recurrence.
+
+Grid: (batch, R/block_r, S/block_s) with the sequence dimension innermost
+and sequential; the hidden state is carried across sequence blocks in VMEM
+scratch.  Within a block, a fori_loop walks the rows — each step is a fused
+multiply-add over a (block_r,) vector lane, which is VPU-bound by nature
+(the recurrence has no matmul to feed the MXU; the surrounding projections
+do that).  block_r = 512 lanes amortizes loop overhead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, u_ref, h0_ref, o_ref, h_scr, *, block_s: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)  # (block_s, block_r)
+    u = u_ref[0].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[t] * h + u[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+    h_scr[...] = h
+
+
+def rglru_scan_pallas(a, u, h0, *, block_r: int = 512, block_s: int = 256,
+                      interpret: bool = False):
+    """a, u: (B, S, R); h0: (B, R).  Returns h_seq (B, S, R)."""
+    B, S, R = a.shape
+    block_r = min(block_r, R)
+    block_s = min(block_s, S)
+    assert R % block_r == 0 and S % block_s == 0
+    kernel = functools.partial(_kernel, block_s=block_s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, R // block_r, S // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_r), lambda b, ri, si: (b, si, ri)),
+            pl.BlockSpec((1, block_s, block_r), lambda b, ri, si: (b, si, ri)),
+            pl.BlockSpec((1, block_r), lambda b, ri, si: (b, ri)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_r),
+                               lambda b, ri, si: (b, si, ri)),
+        out_shape=jax.ShapeDtypeStruct((B, S, R), u.dtype),
+        scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, u, h0)
+    return out

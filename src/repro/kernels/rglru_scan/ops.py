@@ -1,0 +1,26 @@
+"""Jit'd RG-LRU scan entry point."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import rglru_scan_pallas
+from .ref import rglru_scan_assoc, rglru_scan_ref  # noqa: F401
+
+
+def _default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def rglru_scan(a, u, h0=None, *, impl: str = "auto", interpret: bool = False):
+    """h_t = a_t h_{t-1} + u_t over axis 1.  Returns (h_seq, h_final)."""
+    if impl == "auto":
+        impl = _default_impl()
+    if impl == "pallas":
+        import jax.numpy as jnp
+        if h0 is None:
+            h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+        hs = rglru_scan_pallas(a, u, h0, interpret=interpret)
+        return hs, hs[:, -1].astype(jnp.float32)
+    if impl == "sequential":
+        return rglru_scan_ref(a, u, h0)
+    return rglru_scan_assoc(a, u, h0)

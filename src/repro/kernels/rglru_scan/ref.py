@@ -1,0 +1,48 @@
+"""RG-LRU (RecurrentGemma) gated linear recurrence oracles.
+
+Given per-step decay a_t ∈ (0,1) and pre-gated input u_t:
+
+    h_t = a_t · h_{t-1} + u_t
+
+(with u_t = sqrt(1 − a_t²) · i_t ⊙ x_t computed by the caller).  The
+sequential scan is the oracle; an associative log-depth scan is the fast
+XLA path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, u, h0=None):
+    """a, u: (B, S, R).  Returns (h_seq (B,S,R), h_final (B,R))."""
+    B, S, R = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, R), jnp.float32)
+
+    def step(h, inp):
+        at, ut = inp
+        h = at * h + ut
+        return h, h
+
+    h_final, hs = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.astype(jnp.float32).transpose(1, 0, 2),
+         u.astype(jnp.float32).transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2).astype(u.dtype), h_final
+
+
+def rglru_scan_assoc(a, u, h0=None):
+    """Log-depth associative scan: compose (a1,u1)∘(a2,u2) = (a1a2, a2u1+u2)."""
+    af = a.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+    if h0 is not None:
+        uf = uf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def combine(x, y):
+        ax, ux = x
+        ay, uy = y
+        return ax * ay, ay * ux + uy
+
+    _, hs = jax.lax.associative_scan(combine, (af, uf), axis=1)
+    return hs.astype(u.dtype), hs[:, -1].astype(jnp.float32)

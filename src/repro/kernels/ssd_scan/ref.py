@@ -1,0 +1,108 @@
+"""Mamba2 SSD (state-space duality) oracles.
+
+``ssd_ref`` is the literal sequential recurrence:
+
+    h_t = exp(A·dt_t) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t + D ⊙ x_t
+
+``ssd_chunked_ref`` is the matmul-friendly chunked form (the algorithm the
+Pallas kernel implements): within a chunk the quadratic "attention-like"
+masked C·Bᵀ path, across chunks a state-passing scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C, D, h0=None):
+    """x: (Bt, S, H, P); dt: (Bt, S, H); A: (H,) (negative); B, C:
+    (Bt, S, G, N) with H % G == 0; D: (H,).  Returns (y, h_final) with
+    h shape (Bt, H, P, N)."""
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)  # (Bt,S,H,N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (Bt,H,P), (Bt,H), (Bt,H,N), (Bt,H,N)
+        a = jnp.exp(A * dtt)  # (Bt,H)
+        h = h * a[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2, 3) + xf * D[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_chunked_ref(x, dt, A, B, C, D, chunk: int, h0=None):
+    """Chunked SSD, same contract as ``ssd_ref``; S % chunk == 0."""
+    Bt, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    nc = S // chunk
+    xf = x.astype(jnp.float32).reshape(Bt, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bt, nc, chunk, H)
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32).reshape(
+        Bt, nc, chunk, H, N)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32).reshape(
+        Bt, nc, chunk, H, N)
+
+    cum = jnp.cumsum(A[None, None, None, :] * dtf, axis=2)  # (Bt,nc,Q,H)
+    # intra-chunk "attention": L[q,k] = exp(cum_q - cum_k) for q >= k.
+    # Mask BEFORE exp: masked (q < k) entries have positive diff whose exp
+    # can overflow, and inf·0 in the backward pass poisons gradients.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (Bt,nc,Q,K,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", Ch, Bh) * L
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", scores, dtf, xf)
+
+    # per-chunk input->state contribution and full-chunk decay
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (Bt,nc,Q,H)
+    chunk_in = jnp.einsum("bckh,bckh,bckhp,bckhn->bchpn",
+                          dtf, decay_to_end, xf, Bh)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (Bt,nc,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+
+    def pass_state(h, inp):
+        dec, cin = inp  # (Bt,H), (Bt,H,P,N)
+        h_out = h * dec[..., None, None] + cin
+        return h_out, h  # emit the INCOMING state for each chunk
+
+    (h_final, h_ins) = jax.lax.scan(
+        pass_state, h0.astype(jnp.float32),
+        (chunk_decay.transpose(1, 0, 2), chunk_in.transpose(1, 0, 2, 3, 4)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)  # (Bt,nc,H,P,N)
+
+    # carry-in contribution: y_carry[q] = (C_q · h_in) * exp(cum_q)
+    y_carry = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, h_ins, jnp.exp(cum))
+    y = (y_intra + y_carry).reshape(Bt, S, H, P) + \
+        x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(h, x, dt, A, B, C, D):
+    """Single-token recurrent update.  x: (Bt,H,P); dt: (Bt,H); B/C: (Bt,G,N).
+    Returns (y (Bt,H,P), h_new)."""
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(A * dt.astype(jnp.float32))
+    h = h * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt.astype(jnp.float32), x.astype(jnp.float32), Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + x.astype(jnp.float32) * D[None, :, None]
+    return y.astype(x.dtype), h

@@ -1,0 +1,200 @@
+"""Loop-aware analysis of partitioned HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
+undercounts scan-over-layers models by ~n_layers.  This module parses
+``compiled.as_text()`` into computations, recovers each while loop's trip
+count from its ``backend_config={"known_trip_count":{"n":...}}`` (falling
+back to the largest constant in the loop condition), propagates multipliers
+through nested loops, and then accumulates:
+
+  * matmul FLOPs        — 2 · prod(output dims) · contracted size per dot
+  * collective bytes    — output bytes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute
+  * HBM traffic proxy   — Σ (output bytes + operand bytes) over non-trivial
+                          ops (fusion roots, dots, convs, scatters/gathers)
+
+All quantities are PER DEVICE (the text is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f64": 8,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+                "f8e4m3fn": 1, "f8e5m2": 1, "s16": 2, "u16": 2, "c64": 8,
+                "u4": 1, "s4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# shape group is non-greedy "anything" because tuple shapes embed
+# /*index=N*/ comments; the op is the first word directly before a '('.
+_INSTR_RE = re.compile(
+    r"^(?:ROOT )?%?([\w\.\-]+) = (.*?) ([\w\-]+)\((.*)$")
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_str: str
+    op: str
+    rest: str
+
+
+def parse_computations(text: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        if raw and not raw[0].isspace():
+            m = re.match(r"(?:ENTRY )?%?([\w\.\-]+)", raw)
+            if m and ("->" in raw or raw.rstrip().endswith("{")):
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        s = raw.strip()
+        m = _INSTR_RE.match(s)
+        if m:
+            comps[cur].append(Instr(m.group(1), m.group(2), m.group(3),
+                                    m.group(4)))
+    return comps
+
+
+def loop_multipliers(comps: Dict[str, List[Instr]]) -> Dict[str, int]:
+    whiles = []  # (parent, body, cond, trip)
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.op != "while":
+                continue
+            mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+            mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+            mt = re.search(r'known_trip_count[^\d]*(\d+)', ins.rest)
+            trip = int(mt.group(1)) if mt else None
+            whiles.append((cname, mb.group(1) if mb else None,
+                           mc.group(1) if mc else None, trip))
+
+    def cond_trip(cond: Optional[str]) -> int:
+        best = 1
+        for ins in comps.get(cond or "", []):
+            for m in re.finditer(r"constant\((\d+)\)", ins.rest):
+                best = max(best, int(m.group(1)))
+        return best
+
+    # map called computations (fusions/calls) to parents as multiplier 1;
+    # while bodies get trip multipliers; iterate to fixpoint for nesting.
+    parent_of: Dict[str, List[Tuple[str, int]]] = {}
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            for m in re.finditer(r"(?:calls|body|to_apply)=%?([\w\.\-]+)",
+                                 ins.rest):
+                trip = 1
+                if ins.op == "while":
+                    mt = re.search(r'known_trip_count[^\d]*(\d+)', ins.rest)
+                    mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                    trip = int(mt.group(1)) if mt else cond_trip(
+                        mc.group(1) if mc else None)
+                parent_of.setdefault(m.group(1), []).append((cname, trip))
+
+    mult: Dict[str, int] = {}
+
+    def resolve(c: str, depth=0) -> int:
+        if c in mult:
+            return mult[c]
+        if depth > 50 or c not in parent_of:
+            mult[c] = 1
+            return 1
+        best = 1
+        for parent, trip in parent_of[c]:
+            if parent == c:
+                continue
+            best = max(best, resolve(parent, depth + 1) * trip)
+        mult[c] = best
+        return best
+
+    for c in comps:
+        resolve(c)
+    return mult
+
+
+def analyze(text: str) -> Dict[str, object]:
+    comps = parse_computations(text)
+    mult = loop_multipliers(comps)
+
+    # instruction shapes per computation, for dot contraction sizes
+    flops = 0.0
+    coll = {k: 0 for k in COLLECTIVES}
+    coll_ops = 0
+    traffic = 0.0
+    for cname, instrs in comps.items():
+        m_c = mult.get(cname, 1)
+        shapes = {ins.name: ins.shape_str for ins in instrs}
+        for ins in instrs:
+            out_b = _shape_bytes(ins.shape_str)
+            if ins.op in ("dot", "dot_general", "convolution"):
+                dims = _shape_dims(ins.shape_str)
+                out_n = _numel(dims[0][1]) if dims else 0
+                k = 1
+                mlhs = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                ops = re.findall(r"%([\w\.\-]+)", ins.rest)
+                if mlhs and ops:
+                    lhs_shape = shapes.get(ops[0])
+                    if lhs_shape:
+                        ldims = _shape_dims(lhs_shape)
+                        if ldims:
+                            for ci in (mlhs.group(1).split(",")
+                                       if mlhs.group(1) else []):
+                                idx = int(ci)
+                                if idx < len(ldims[0][1]):
+                                    k *= ldims[0][1][idx]
+                flops += 2.0 * out_n * max(k, 1) * m_c
+                traffic += out_b * 2.0 * m_c  # output + ~operands
+            elif any(ins.op == c or ins.op.startswith(c + "-start")
+                     for c in COLLECTIVES):
+                for c in COLLECTIVES:
+                    if ins.op == c or ins.op.startswith(c + "-start"):
+                        coll[c] += out_b * m_c
+                        coll_ops += m_c
+                        break
+                traffic += out_b * 2.0 * m_c
+            elif ins.op in ("fusion", "gather", "scatter", "reduce",
+                            "dynamic-slice", "dynamic-update-slice", "copy",
+                            "transpose", "reshape", "broadcast", "concatenate",
+                            "sort", "custom-call"):
+                traffic += out_b * 1.5 * m_c  # output + amortized reads
+
+    return {"flops": flops,
+            "collective_bytes": int(sum(coll.values())),
+            "collective_by_kind": {k: int(v) for k, v in coll.items() if v},
+            "collective_ops": int(coll_ops),
+            "traffic_bytes": float(traffic)}

@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape)
+dry-run cell: weak-type-correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..models import lm
+from ..models.params import abstract_tree, spec_tree
+from ..models.sharding import spec_for
+from ..train.optimizer import OptConfig
+
+
+def batch_spec(mesh) -> P:
+    names = [n for n in ("pod", "data") if n in mesh.shape]
+    return P(tuple(names) if len(names) > 1 else (names[0] if names else None))
+
+
+def _shard(mesh, tree, specs):
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree, specs)
+
+
+def _batched(mesh, shape: Tuple[int, ...], dtype, profile: str = "2d"):
+    from ..models.sharding import PROFILES
+    spec = spec_for(shape, ("batch",) + (None,) * (len(shape) - 1), mesh,
+                    rules=PROFILES[profile][1])
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def train_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh, profile: str = "2d"):
+    """(state, batch) abstract inputs for train_step."""
+    params = lm.abstract_params(cfg)
+    pspecs = lm.param_pspecs(cfg, mesh, profile)
+    params = _shard(mesh, params, pspecs)
+    opt = {"m": params, "v": params,
+           "step": jax.ShapeDtypeStruct((), jnp.int32,
+                                        sharding=NamedSharding(mesh, P()))}
+    state = {"params": params, "opt": opt}
+    B, S = shape.batch, shape.seq
+    batch = {"tokens": _batched(mesh, (B, S), jnp.int32, profile),
+             "labels": _batched(mesh, (B, S), jnp.int32, profile)}
+    if cfg.enc_dec:
+        batch["enc_embeds"] = _batched(mesh, (B, cfg.enc_seq, cfg.d_model),
+                                       jnp.dtype(cfg.compute_dtype), profile)
+    return state, batch
+
+
+def prefill_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh, profile: str = "2d"):
+    params = _shard(mesh, lm.abstract_params(cfg), lm.param_pspecs(cfg, mesh, profile))
+    B, S = shape.batch, shape.seq
+    batch = {"tokens": _batched(mesh, (B, S), jnp.int32, profile)}
+    if cfg.enc_dec:
+        batch["enc_embeds"] = _batched(mesh, (B, cfg.enc_seq, cfg.d_model),
+                                       jnp.dtype(cfg.compute_dtype), profile)
+    return params, batch
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeSpec, mesh, profile: str = "2d"):
+    """(params, cache, tokens, pos) for decode_step: one new token against a
+    KV cache / state of shape.seq context."""
+    params = _shard(mesh, lm.abstract_params(cfg), lm.param_pspecs(cfg, mesh, profile))
+    B, S = shape.batch, shape.seq
+    cache = _shard(mesh, lm.abstract_cache(cfg, B, S),
+                   lm.cache_pspecs(cfg, B, S, mesh, profile))
+    tokens = _batched(mesh, (B, 1), jnp.int32, profile)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return params, cache, tokens, pos
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh, profile: str = "2d"):
+    if shape.kind == "train":
+        return train_inputs(cfg, shape, mesh, profile)
+    if shape.kind == "prefill":
+        return prefill_inputs(cfg, shape, mesh, profile)
+    return decode_inputs(cfg, shape, mesh, profile)

@@ -1,0 +1,94 @@
+"""Training launcher: ``python -m repro.launch.train --arch smollm-135m
+--reduced --steps 200``.
+
+Supports every assigned architecture, reduced or full configs, optional
+(data, model) meshes, periodic async checkpointing with restart-resume
+(fault tolerance), and deterministic data so a restart reproduces the run.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS
+from ..data.pipeline import Prefetcher, SyntheticTokens, shard_batch
+from ..models import lm
+from ..models.sharding import mesh_context
+from ..models.steps import init_train_state, make_train_step
+from ..train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from ..train.optimizer import OptConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="structure-preserving small config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. 2x2 for a (data,model) mesh")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = ARCHS[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+
+    key = jax.random.PRNGKey(args.seed)
+    start_step = 0
+    state = init_train_state(cfg, key)
+    if args.checkpoint_dir and latest_step(args.checkpoint_dir) is not None:
+        state, start_step, _ = restore_checkpoint(args.checkpoint_dir)
+        print(f"[train] resumed from step {start_step}")
+
+    oc = OptConfig(lr=args.lr, total_steps=max(args.steps, 1000))
+    step_fn = jax.jit(make_train_step(cfg, oc), donate_argnums=0)
+    src = SyntheticTokens(cfg.vocab, args.batch, args.seq, seed=args.seed,
+                          start_step=start_step)
+    ckpt = AsyncCheckpointer(args.checkpoint_dir) if args.checkpoint_dir else None
+
+    n_params = lm.num_params(cfg)
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq} steps={args.steps}")
+    tok_per_step = args.batch * args.seq
+    t0 = time.time()
+    with mesh_context(mesh):
+        for step in range(start_step, args.steps):
+            batch = shard_batch(src.next_batch(), mesh)
+            if cfg.enc_dec:
+                batch["enc_embeds"] = jnp.zeros(
+                    (args.batch, cfg.enc_seq, cfg.d_model),
+                    jnp.dtype(cfg.compute_dtype))
+            state, metrics = step_fn(state, batch)
+            if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                tps = tok_per_step * (step + 1 - start_step) / max(dt, 1e-9)
+                print(f"[train] step={step + 1} loss={loss:.4f} "
+                      f"tok/s={tps:,.0f}")
+                assert np.isfinite(loss), "loss diverged"
+            if ckpt and (step + 1) % args.checkpoint_every == 0:
+                ckpt.save(state, step + 1)
+    if ckpt:
+        ckpt.save(state, args.steps)
+        ckpt.wait()
+        print(f"[train] checkpointed at {args.checkpoint_dir}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

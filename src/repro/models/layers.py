@@ -1,0 +1,252 @@
+"""Core transformer layers: norms, RoPE, GQA attention (full/local/cross,
+qk-norm, KV caches), gated MLP."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.flash_attention.ops import flash_attention
+from .params import ParamDef
+from .sharding import constrain
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def norm_defs(d_model: int) -> ParamDef:
+    return ParamDef((d_model,), (None,), init="ones")
+
+
+# -------------------------------------------------------------------- rope
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (S,) or scalar broadcastable."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(positions, d_model: int):
+    half = d_model // 2
+    freqs = 10000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --------------------------------------------------------------- attention
+def attn_defs(cfg: ArchConfig, cross: bool = False):
+    D, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    d = {
+        "wq": ParamDef((D, H, hd), ("embed", "heads", "head_dim"), fan_in=D),
+        "wk": ParamDef((D, KH, hd), ("embed", "kv_heads", "head_dim"), fan_in=D),
+        "wv": ParamDef((D, KH, hd), ("embed", "kv_heads", "head_dim"), fan_in=D),
+        "wo": ParamDef((H, hd, D), ("heads", "head_dim", "embed"), fan_in=H * hd),
+    }
+    if cfg.use_bias:
+        d["bq"] = ParamDef((H, hd), ("heads", "head_dim"), init="zeros")
+        d["bv"] = ParamDef((KH, hd), ("kv_heads", "head_dim"), init="zeros")
+        d["bo"] = ParamDef((D,), (None,), init="zeros")
+    if cfg.qk_norm and not cross:
+        d["qn"] = ParamDef((hd,), (None,), init="ones")
+        d["kn"] = ParamDef((hd,), (None,), init="ones")
+    return d
+
+
+def _proj_qkv(p, xq, xkv, cfg: ArchConfig, positions_q, positions_k,
+              use_rope: bool):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(xq.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(xkv.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(xkv.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    if "qn" in p:
+        q = rmsnorm(q, p["qn"], cfg.norm_eps)
+        k = rmsnorm(k, p["kn"], cfg.norm_eps)
+    if use_rope and cfg.rope_theta > 0:
+        q = rope(q, positions_q, cfg.rope_theta)
+        k = rope(k, positions_k, cfg.rope_theta)
+    return q, k, v
+
+
+def _out_proj(p, o, dtype):
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(dtype)
+    return y
+
+
+def _heads_shardable(cfg: ArchConfig) -> bool:
+    from .sharding import current_mesh, current_profile
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return True
+    if current_profile() == "fsdp":
+        return True  # no TP axis in use
+    return cfg.n_heads % mesh.shape["model"] == 0
+
+
+def attention_ctx_parallel(q, k, v, *, causal: bool, window: Optional[int]):
+    """Context-parallel attention: the query SEQUENCE dim is sharded on the
+    `model` axis (K/V replicated), so score blocks shard 16-way even when the
+    head count doesn't divide the mesh (e.g. smollm's 9 heads).  One big
+    masked einsum — per-device score memory is S²/model_shards.
+    [Perf iteration 3 — see EXPERIMENTS.md §Perf.]"""
+    B, Sq, H, hd = q.shape
+    q = constrain(q, "batch", "qseq", None, None)
+    qf = q.astype(jnp.float32).reshape(B, Sq, k.shape[2], H // k.shape[2], hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    s = s / float(hd) ** 0.5
+    s = constrain(s, "batch", None, None, "qseq", None)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p_ = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p_, v.astype(jnp.float32))
+    o = o.reshape(B, Sq, H, hd).astype(q.dtype)
+    return constrain(o, "batch", "qseq", None, None)
+
+
+def attention_full_seq(p, x, cfg: ArchConfig, *, causal: bool,
+                       window: Optional[int], impl: str = "auto"):
+    """Train / encoder path: self-attention over the full sequence."""
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    q, k, v = _proj_qkv(p, x, x, cfg, pos, pos, use_rope=True)
+    if not _heads_shardable(cfg) and S >= 1024:
+        o = attention_ctx_parallel(q, k, v, causal=causal, window=window)
+    else:
+        q = constrain(q, "batch", None, "heads", None)
+        o = flash_attention(q, k, v, causal=causal, window=window, impl=impl)
+        o = constrain(o, "batch", None, "heads", None)
+    return _out_proj(p, o, x.dtype), (k, v)
+
+
+def attn_cache_defs(cfg: ArchConfig, batch: int, ctx: int):
+    KH, hd = cfg.n_kv_heads, cfg.hd
+    cap = min(ctx, cfg.local_window) if cfg.attn_kind == "local" else ctx
+    return {
+        "k": ParamDef((batch, cap, KH, hd), ("batch", None, "kv_heads", None),
+                      init="zeros"),
+        "v": ParamDef((batch, cap, KH, hd), ("batch", None, "kv_heads", None),
+                      init="zeros"),
+        "pos": ParamDef((cap,), (None,), init="zeros", dtype="int32"),
+    }
+
+
+def attention_prefill_cache(k, v, cfg: ArchConfig, ctx: int):
+    """Trim prefill K/V to the cache capacity (ring tail for local attn)."""
+    S = k.shape[1]
+    cap = min(ctx, cfg.local_window) if cfg.attn_kind == "local" else ctx
+    if cfg.attn_kind == "local" and S > cap:
+        # ring layout: slot = pos % cap
+        start = S - cap
+        k_t, v_t = k[:, start:], v[:, start:]
+        pos = jnp.arange(start, S)
+        slots = pos % cap
+        order = jnp.argsort(slots)
+        return {"k": k_t[:, order], "v": v_t[:, order], "pos": pos[order]}
+    pad = cap - S
+    if pad > 0:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.concatenate([jnp.arange(S), jnp.full((pad,), -1, jnp.int32)])
+    else:
+        pos = jnp.arange(cap)
+    return {"k": k, "v": v, "pos": pos}
+
+
+def attention_decode(p, x, cfg: ArchConfig, cache, pos, *,
+                     window: Optional[int]):
+    """One-token self-attention against a (ring) KV cache.
+
+    x: (B, 1, D); pos: scalar int32 (position of the new token);
+    cache: {"k": (B, cap, KH, hd), "v": ..., "pos": (cap,)}.
+    """
+    cap = cache["k"].shape[1]
+    q, k_new, v_new = _proj_qkv(p, x, x, cfg, pos[None], pos[None],
+                                use_rope=True)
+    slot = pos % cap if (window is not None) else jnp.minimum(pos, cap - 1)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        pos[None].astype(jnp.int32), (slot,))
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        q_positions=pos[None], k_positions=kpos,
+                        impl="reference")
+    y = _out_proj(p, o, x.dtype)
+    return y, {"k": k, "v": v, "pos": kpos}
+
+
+def cross_attention(p, x, cfg: ArchConfig, enc_kv=None, enc_out=None):
+    """Decoder cross-attention; K/V from encoder output (train/prefill) or
+    precomputed in the cache (decode)."""
+    if enc_kv is None:
+        t = jnp.arange(enc_out.shape[1])
+        k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"].astype(enc_out.dtype))
+        if "bv" in p:
+            v = v + p["bv"].astype(v.dtype)
+        enc_kv = (k, v)
+    k, v = enc_kv
+    pos = jnp.arange(x.shape[1])
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    o = flash_attention(q, k, v, causal=False, impl="reference")
+    return _out_proj(p, o, x.dtype), enc_kv
+
+
+# ---------------------------------------------------------------------- MLP
+def mlp_defs(cfg: ArchConfig, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    d = {
+        "w_in": ParamDef((D, F), ("embed", "ffn"), fan_in=D),
+        "w_out": ParamDef((F, D), ("ffn", "embed"), fan_in=F),
+    }
+    if cfg.gated_mlp:
+        d["w_gate"] = ParamDef((D, F), ("embed", "ffn"), fan_in=D)
+    if cfg.use_bias:
+        d["b_in"] = ParamDef((F,), ("ffn",), init="zeros")
+        d["b_out"] = ParamDef((D,), (None,), init="zeros")
+    return d
+
+
+def _act(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    h = x @ p["w_in"].astype(x.dtype)
+    if "b_in" in p:
+        h = h + p["b_in"].astype(x.dtype)
+    if "w_gate" in p:
+        h = _act(h, cfg.act) * (x @ p["w_gate"].astype(x.dtype))
+    else:
+        h = _act(h, cfg.act)
+    h = constrain(h, "batch", None, "ffn")
+    y = h @ p["w_out"].astype(x.dtype)
+    if "b_out" in p:
+        y = y + p["b_out"].astype(x.dtype)
+    return y

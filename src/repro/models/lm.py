@@ -1,0 +1,314 @@
+"""Model assembly: every assigned architecture as one composable LM.
+
+Layers are grouped into *superblocks* (one period of the temporal pattern —
+a single layer for uniform stacks, (rglru, rglru, attn) for RecurrentGemma)
+and stacked with ``jax.lax.scan`` (+ per-superblock remat in training), which
+keeps the HLO small, compiles fast, and bounds activation memory.  Caches
+for decode are stacked along the same leading dimension and threaded through
+the scan as per-step xs/ys.
+
+Modes: "train" (full seq, no cache), "prefill" (full seq, returns cache),
+"decode" (one token against the cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (attn_cache_defs, attn_defs, attention_decode,
+                     attention_full_seq, attention_prefill_cache,
+                     cross_attention, mlp_apply, mlp_defs, norm_defs, rmsnorm,
+                     sinusoidal_embedding)
+from .moe import moe_apply, moe_defs
+from .params import (ParamDef, abstract_tree, count_params, init_tree,
+                     map_defs, spec_tree, stack_defs)
+from .rglru import rglru_block, rglru_cache_defs, rglru_defs
+from .sharding import constrain
+from .ssm import ssm_block, ssm_cache_defs, ssm_defs
+
+
+# --------------------------------------------------------------- structure
+def layer_kinds(cfg: ArchConfig) -> Tuple[str, ...]:
+    if cfg.enc_dec:
+        return ("xdense",) * cfg.n_layers
+    return cfg.layer_kinds
+
+
+def structure(cfg: ArchConfig):
+    """(pre_kinds, superblock_kinds, n_super, tail_kinds)."""
+    kinds = layer_kinds(cfg)
+    if cfg.block_pattern:
+        p = len(cfg.block_pattern)
+        n_super = cfg.n_layers // p
+        return (), tuple(cfg.block_pattern), n_super, kinds[n_super * p:]
+    pre = kinds[:cfg.first_dense_layers]
+    rest = kinds[cfg.first_dense_layers:]
+    assert all(k == rest[0] for k in rest), "non-pattern stack must be uniform"
+    return pre, (rest[0],), len(rest), ()
+
+
+def block_defs(cfg: ArchConfig, kind: str, d_ff_override: Optional[int] = None):
+    D = cfg.d_model
+    if kind == "ssm":
+        return {"ln1": norm_defs(D), "ssm": ssm_defs(cfg)}
+    if kind == "rglru":
+        return {"ln1": norm_defs(D), "rec": rglru_defs(cfg),
+                "ln2": norm_defs(D), "mlp": mlp_defs(cfg)}
+    d = {"ln1": norm_defs(D), "attn": attn_defs(cfg), "ln2": norm_defs(D)}
+    if kind == "moe":
+        d["moe"] = moe_defs(cfg)
+    else:
+        d["mlp"] = mlp_defs(cfg, d_ff=d_ff_override)
+    if kind == "xdense":
+        d["lnx"] = norm_defs(D)
+        d["xattn"] = attn_defs(cfg, cross=True)
+    return d
+
+
+def block_cache_defs(cfg: ArchConfig, kind: str, batch: int, ctx: int):
+    if kind == "ssm":
+        return ssm_cache_defs(cfg, batch)
+    if kind == "rglru":
+        return rglru_cache_defs(cfg, batch)
+    d = attn_cache_defs(cfg, batch, ctx)
+    if kind == "xdense":
+        KH, hd = cfg.n_kv_heads, cfg.hd
+        d["xk"] = ParamDef((batch, cfg.enc_seq, KH, hd),
+                           ("batch", None, "kv_heads", None), init="zeros")
+        d["xv"] = ParamDef((batch, cfg.enc_seq, KH, hd),
+                           ("batch", None, "kv_heads", None), init="zeros")
+    return d
+
+
+def model_defs(cfg: ArchConfig):
+    D, V = cfg.d_model, cfg.vocab
+    defs = {
+        "embed": ParamDef((V, D), ("vocab", "embed+"), fan_in=D),
+        "final_norm": norm_defs(D),
+    }
+    pre, sb_kinds, n_super, tail = structure(cfg)
+    dec = {}
+    for i, k in enumerate(pre):
+        dec[f"pre{i}"] = block_defs(cfg, "dense",
+                                    d_ff_override=cfg.first_dense_d_ff or None)
+    sb = {f"b{j}": block_defs(cfg, kind) for j, kind in enumerate(sb_kinds)}
+    dec["stack"] = stack_defs(sb, n_super)
+    for i, k in enumerate(tail):
+        dec[f"tail{i}"] = block_defs(cfg, k)
+    defs["dec"] = dec
+    if cfg.enc_dec:
+        enc_sb = {"b0": block_defs(cfg, "enc")}
+        defs["enc"] = {"stack": stack_defs(enc_sb, cfg.n_enc_layers)}
+        defs["enc_norm"] = norm_defs(D)
+    return defs
+
+
+def cache_defs(cfg: ArchConfig, batch: int, ctx: int):
+    pre, sb_kinds, n_super, tail = structure(cfg)
+    dec = {}
+    for i, k in enumerate(pre):
+        dec[f"pre{i}"] = block_cache_defs(cfg, k, batch, ctx)
+    sb = {f"b{j}": block_cache_defs(cfg, kind, batch, ctx)
+          for j, kind in enumerate(sb_kinds)}
+    dec["stack"] = stack_defs(sb, n_super)
+    for i, k in enumerate(tail):
+        dec[f"tail{i}"] = block_cache_defs(cfg, k, batch, ctx)
+    return {"dec": dec}
+
+
+# ---------------------------------------------------------------- builders
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return init_tree(model_defs(cfg), key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ArchConfig):
+    return abstract_tree(model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def param_pspecs(cfg: ArchConfig, mesh, profile: str = "2d"):
+    from .sharding import PROFILES
+    return spec_tree(model_defs(cfg), mesh, rules=PROFILES[profile][0])
+
+
+def init_cache(cfg: ArchConfig, batch: int, ctx: int):
+    return init_tree(cache_defs(cfg, batch, ctx), jax.random.PRNGKey(0),
+                     jnp.dtype(cfg.compute_dtype))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, ctx: int):
+    return abstract_tree(cache_defs(cfg, batch, ctx),
+                         jnp.dtype(cfg.compute_dtype))
+
+
+def cache_pspecs(cfg: ArchConfig, batch: int, ctx: int, mesh,
+                 profile: str = "2d"):
+    from .sharding import PROFILES
+    return spec_tree(cache_defs(cfg, batch, ctx), mesh,
+                     rules=PROFILES[profile][0])
+
+
+def num_params(cfg: ArchConfig) -> int:
+    return count_params(model_defs(cfg))
+
+
+# ------------------------------------------------------------------ blocks
+def block_apply(p, x, cfg: ArchConfig, kind: str, mode: str, cache, pos,
+                enc_out, impl: str):
+    """Returns (x, cache_out)."""
+    window = cfg.local_window if (kind == "attn" or cfg.attn_kind == "local") \
+        else None
+    cache_out = None
+    if kind == "ssm":
+        h, cache_out = ssm_block(p["ssm"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                 cfg, mode, cache, impl=impl)
+        return x + h, cache_out
+    if kind == "rglru":
+        h, cache_out = rglru_block(p["rec"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                                   cfg, mode, cache, impl=impl)
+        x = x + h
+        x = x + mlp_apply(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps), cfg)
+        return x, cache_out
+
+    # attention families
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if mode == "decode":
+        ao, cache_out = attention_decode(p["attn"], h, cfg, cache, pos,
+                                         window=window)
+    else:
+        causal = kind != "enc"
+        ao, kv = attention_full_seq(p["attn"], h, cfg, causal=causal,
+                                    window=window, impl=impl)
+        if mode == "prefill":
+            ctx = cache  # int: cache capacity threaded through
+            cache_out = attention_prefill_cache(kv[0], kv[1], cfg, ctx)
+    x = x + ao
+    if kind == "xdense":
+        h = rmsnorm(x, p["lnx"], cfg.norm_eps)
+        if mode == "decode":
+            xo, _ = cross_attention(p["xattn"], h, cfg,
+                                    enc_kv=(cache["xk"], cache["xv"]))
+            cache_out["xk"], cache_out["xv"] = cache["xk"], cache["xv"]
+        else:
+            xo, enc_kv = cross_attention(p["xattn"], h, cfg, enc_out=enc_out)
+            if mode == "prefill":
+                cache_out["xk"], cache_out["xv"] = enc_kv
+        x = x + xo
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if kind == "moe":
+        x = x + moe_apply(p["moe"], h, cfg)
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg)
+    return x, cache_out
+
+
+def _superblock_apply(sb_params, x, cfg, sb_kinds, mode, sb_cache, pos,
+                      enc_out, impl, ctx):
+    cache_out = {}
+    for j, kind in enumerate(sb_kinds):
+        name = f"b{j}"
+        if mode == "prefill":
+            c = ctx
+        elif mode == "decode":
+            c = sb_cache[name]
+        else:
+            c = None
+        x, co = block_apply(sb_params[name], x, cfg, kind, mode, c, pos,
+                            enc_out, impl)
+        if co is not None:
+            cache_out[name] = co
+    return x, cache_out
+
+
+# ----------------------------------------------------------------- forward
+def forward(params, cfg: ArchConfig, tokens=None, *, mode: str = "train",
+            cache=None, pos=None, enc_embeds=None, embeds=None,
+            impl: str = "auto", cache_len=None):
+    """Returns (hidden (B,S,D), new_cache | None).
+
+    tokens: (B, S) int32 (S == 1 for decode); enc_embeds: (B, T_enc, D)
+    precomputed frontend features (whisper stub); pos: scalar int32 decode
+    position; cache: pytree from init_cache/prefill.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    pre, sb_kinds, n_super, tail = structure(cfg)
+
+    enc_out = None
+    if cfg.enc_dec and mode != "decode":
+        e = enc_embeds.astype(cdt)
+        e = e + sinusoidal_embedding(jnp.arange(e.shape[1]),
+                                     cfg.d_model).astype(cdt)
+
+        def enc_body(carry, p_i):
+            y, _ = block_apply(p_i["b0"], carry, cfg, "enc", "train", None,
+                               None, None, impl)
+            return y, None
+
+        if cfg.remat and mode == "train":
+            enc_body = jax.checkpoint(enc_body)
+        e, _ = jax.lax.scan(enc_body, e, params["enc"]["stack"])
+        enc_out = rmsnorm(e, params["enc_norm"], cfg.norm_eps)
+
+    if embeds is not None:
+        x = embeds.astype(cdt)
+    else:
+        x = params["embed"].astype(cdt)[tokens]
+    x = constrain(x, "batch", "seq", "embed")
+    if cfg.rope_theta == 0.0:  # absolute sinusoidal positions (whisper)
+        if mode == "decode":
+            x = x + sinusoidal_embedding(pos[None], cfg.d_model).astype(cdt)
+        else:
+            x = x + sinusoidal_embedding(jnp.arange(x.shape[1]),
+                                         cfg.d_model).astype(cdt)
+
+    ctx = None
+    if mode == "prefill":
+        ctx = cache_len or (tokens.shape[1] if tokens is not None
+                            else x.shape[1])
+    dec_p = params["dec"]
+    new_cache = {}
+
+    for i, k in enumerate(pre):
+        c = (cache["dec"][f"pre{i}"] if mode == "decode" else
+             (ctx if mode == "prefill" else None))
+        x, co = block_apply(dec_p[f"pre{i}"], x, cfg, k, mode, c, pos,
+                            enc_out, impl)
+        if co is not None:
+            new_cache[f"pre{i}"] = co
+
+    def body(carry, xs):
+        if mode == "decode":
+            p_i, c_i = xs
+        else:
+            p_i, c_i = xs, None
+        y, co = _superblock_apply(p_i, carry, cfg, sb_kinds, mode,
+                                  c_i, pos, enc_out, impl, ctx)
+        return y, (co if co else None)
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body, policy=None)
+    xs = (dec_p["stack"], cache["dec"]["stack"]) if mode == "decode" \
+        else dec_p["stack"]
+    x, stack_cache = jax.lax.scan(body, x, xs)
+    if mode in ("prefill", "decode") and stack_cache is not None:
+        new_cache["stack"] = stack_cache
+
+    for i, k in enumerate(tail):
+        c = (cache["dec"][f"tail{i}"] if mode == "decode" else
+             (ctx if mode == "prefill" else None))
+        x, co = block_apply(dec_p[f"tail{i}"], x, cfg, k, mode, c, pos,
+                            enc_out, impl)
+        if co is not None:
+            new_cache[f"tail{i}"] = co
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, ({"dec": new_cache} if mode in ("prefill", "decode") else None)
+
+
+def logits_from_hidden(params, h, cfg: ArchConfig):
+    """Tied-embedding LM head (full logits; training uses the chunked CE)."""
+    return jnp.einsum("bsd,vd->bsv", h.astype(jnp.float32),
+                      params["embed"].astype(jnp.float32))

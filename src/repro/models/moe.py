@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer (DeepSeekMoE-style: shared + routed top-k).
+
+Dispatch is sort-based with fixed per-expert capacity: token→expert
+assignments are sorted by expert id, positions beyond capacity are dropped
+(standard GShard-style token dropping), expert FFNs run as one batched
+einsum over the (E, C, D) buffer with experts sharded on the `model` axis
+(expert parallelism), and outputs scatter back weighted by router gates.
+All shapes are static — no ragged ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import _act, mlp_defs, mlp_apply
+from .params import ParamDef
+from .sharding import constrain
+
+
+def moe_defs(cfg: ArchConfig):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    d = {
+        "router": ParamDef((D, E), ("embed", "experts"), fan_in=D),
+        "w_in": ParamDef((E, D, F), ("experts", "embed", "ffn"), fan_in=D),
+        "w_gate": ParamDef((E, D, F), ("experts", "embed", "ffn"), fan_in=D),
+        "w_out": ParamDef((E, F, D), ("experts", "ffn", "embed"), fan_in=F),
+    }
+    if cfg.n_shared_experts:
+        d["shared"] = mlp_defs(cfg, d_ff=cfg.n_shared_experts * cfg.expert_d_ff)
+    return d
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """x: (B, S, D) -> (B, S, D).
+
+    Dispatch is per-sequence-row: each batch row sorts its own S·K
+    (token, expert) assignments and packs them into an (E, C_row, D) buffer.
+    Because the batch dim is data-sharded and every op here maps over B,
+    dispatch is entirely shard-local under SPMD — no collectives are needed
+    until the expert einsum (experts on `model`) and the standard TP
+    all-reduce of the combined output.  [Perf iteration 1: a global
+    argsort/scatter formulation lowered to ~4.3 TB/device of all-reduces;
+    this row-local form removes them — see EXPERIMENTS.md §Perf.]
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    if S == 1:
+        # decode: a handful of tokens — the dense per-token path is exact
+        # (no capacity drops) and cheap at S == 1.
+        return moe_apply_oracle(p, x, cfg)
+    cap = int(max(1, (S * K / E) * cfg.capacity_factor))
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (B, S, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)  # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # flatten assignments within each row and sort by expert (row-local)
+    e_flat = expert_idx.reshape(B, S * K)
+    t_flat = jnp.broadcast_to(jnp.arange(S)[:, None], (S, K)).reshape(S * K)
+    g_flat = gate_vals.reshape(B, S * K)
+    order = jnp.argsort(e_flat, axis=1)
+    e_s = jnp.take_along_axis(e_flat, order, axis=1)
+    g_s = jnp.take_along_axis(g_flat, order, axis=1)
+    t_s = t_flat[order]  # (B, S*K)
+    # position within expert = global sorted position - segment start
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(e_flat)
+    seg_start = jnp.cumsum(counts, axis=1) - counts  # (B, E)
+    pos_in_e = jnp.arange(S * K)[None, :] - jnp.take_along_axis(
+        seg_start, e_s, axis=1)
+    keep = pos_in_e < cap
+    slot = e_s * cap + jnp.minimum(pos_in_e, cap - 1)  # (B, S*K)
+
+    gathered = jnp.where(keep[..., None],
+                         jnp.take_along_axis(x, t_s[..., None], axis=1), 0)
+    buf = jnp.zeros((B, E * cap, D), x.dtype)
+    buf = jax.vmap(lambda b, s, g: b.at[s].add(g))(buf, slot, gathered)
+    buf = constrain(buf.reshape(B, E, cap, D), "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, p["w_in"].astype(x.dtype))
+    h = _act(h, cfg.act) * jnp.einsum("becd,edf->becf", buf,
+                                      p["w_gate"].astype(x.dtype))
+    h = constrain(h, "batch", "experts", None, "ffn")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_out"].astype(x.dtype))
+    out_buf = out_buf.reshape(B, E * cap, D)
+
+    contrib = jnp.take_along_axis(out_buf, slot[..., None], axis=1) \
+        * (g_s * keep).astype(x.dtype)[..., None]
+    y = jnp.zeros((B, S, D), x.dtype)
+    y = jax.vmap(lambda y_, t, c: y_.at[t].add(c))(y, t_s, contrib)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y
+
+
+def moe_apply_oracle(p, x, cfg: ArchConfig):
+    """Per-token dense oracle (no capacity drops) for unit tests."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xf = x.reshape(-1, D)
+    logits = (xf @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # compute every expert for every token, then select
+    h = jnp.einsum("nd,edf->nef", xf, p["w_in"].astype(x.dtype))
+    h = _act(h, cfg.act) * jnp.einsum("nd,edf->nef", xf,
+                                      p["w_gate"].astype(x.dtype))
+    all_out = jnp.einsum("nef,efd->ned", h, p["w_out"].astype(x.dtype))
+    sel = jnp.take_along_axis(all_out, expert_idx[:, :, None], axis=1)
+    y = (sel * gate_vals[:, :, None].astype(x.dtype)).sum(axis=1)
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg)
+    return y

@@ -1,0 +1,99 @@
+"""Parameter/cache definition trees.
+
+Components describe their parameters once as nested dicts of ``ParamDef``
+(shape + logical sharding axes + init); the same tree materializes as
+initialized arrays, ShapeDtypeStructs (dry-run), or PartitionSpecs (mesh
+sharding) — so shapes, inits and shardings can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sharding import PARAM_RULES, spec_for
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple
+    init: str = "normal"  # normal | zeros | ones
+    fan_in: Optional[int] = None  # for normal init scale 1/sqrt(fan_in)
+    dtype: Optional[str] = None  # override tree dtype (e.g. f32 states)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def map_defs(fn, tree):
+    if is_def(tree):
+        return fn(tree)
+    return {k: map_defs(fn, v) for k, v in tree.items()}
+
+
+def stack_defs(tree, n: int):
+    """Prepend a stacked-layers dim (unsharded) to every def."""
+    def f(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n,) + tuple(d.shape),
+                                   axes=(None,) + tuple(d.axes))
+    return map_defs(f, tree)
+
+
+def init_tree(tree, key: jax.Array, dtype):
+    leaves = []
+
+    def collect(t):
+        if is_def(t):
+            leaves.append(t)
+        else:
+            for v in t.values():
+                collect(v)
+
+    collect(tree)
+    keys = iter(jax.random.split(key, max(len(leaves), 1)))
+
+    def make(d: ParamDef):
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        k = next(keys)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dt)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dt)
+        if d.init == "a_log":  # mamba A_log init: log(uniform[1,16])
+            h = d.shape[-1] if d.shape else 1
+            return jnp.broadcast_to(
+                jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+                d.shape).astype(dt)
+        fan = d.fan_in or (d.shape[0] if d.shape else 1)
+        return (jax.random.normal(k, d.shape, jnp.float32)
+                / np.sqrt(fan)).astype(dt)
+
+    return map_defs(make, tree)
+
+
+def abstract_tree(tree, dtype):
+    def make(d: ParamDef):
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        return jax.ShapeDtypeStruct(tuple(d.shape), dt)
+    return map_defs(make, tree)
+
+
+def spec_tree(tree, mesh, rules=PARAM_RULES):
+    return map_defs(lambda d: spec_for(d.shape, d.axes, mesh, rules), tree)
+
+
+def count_params(tree) -> int:
+    n = 0
+
+    def f(d: ParamDef):
+        nonlocal n
+        n += int(np.prod(d.shape)) if d.shape else 1
+        return d
+
+    map_defs(f, tree)
+    return n

@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma): dual-branch with causal conv and
+a gated linear recurrence:
+
+    i_t = σ(x_t W_i),  r_t = σ(x_t W_r)
+    a_t = exp(−c · softplus(Λ) · r_t),   c = 8
+    h_t = a_t h_{t−1} + sqrt(1 − a_t²) · (i_t ⊙ x_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.rglru_scan.ops import rglru_scan
+from .params import ParamDef
+from .sharding import constrain
+
+_C = 8.0
+
+
+def rglru_defs(cfg: ArchConfig):
+    D = cfg.d_model
+    R = cfg.rnn_width or D
+    W = cfg.conv_width
+    return {
+        "wx": ParamDef((D, R), ("embed", "inner"), fan_in=D),
+        "wgate": ParamDef((D, R), ("embed", "inner"), fan_in=D),
+        "conv_w": ParamDef((W, R), ("conv", "inner"), fan_in=W),
+        "conv_b": ParamDef((R,), ("inner",), init="zeros"),
+        "w_i": ParamDef((R, R), ("inner", None), fan_in=R),
+        "b_i": ParamDef((R,), ("inner",), init="zeros"),
+        "w_r": ParamDef((R, R), ("inner", None), fan_in=R),
+        "b_r": ParamDef((R,), ("inner",), init="zeros"),
+        "lam": ParamDef((R,), ("inner",), init="ones"),
+        "out": ParamDef((R, D), ("inner", "embed"), fan_in=R),
+    }
+
+
+def rglru_cache_defs(cfg: ArchConfig, batch: int):
+    R = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": ParamDef((batch, cfg.conv_width - 1, R),
+                         ("batch", None, "inner"), init="zeros"),
+        "h": ParamDef((batch, R), ("batch", "inner"), init="zeros",
+                      dtype="float32"),
+    }
+
+
+def _gates(p, xc):
+    i = jax.nn.sigmoid(xc @ p["w_i"].astype(xc.dtype) + p["b_i"].astype(xc.dtype))
+    r = jax.nn.sigmoid(xc @ p["w_r"].astype(xc.dtype) + p["b_r"].astype(xc.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    u = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) \
+        * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+    return a, u
+
+
+def rglru_block(p, x, cfg: ArchConfig, mode: str, cache=None, impl="auto"):
+    """x: (B, S, D). Returns (y, new_cache | None)."""
+    B, S, D = x.shape
+    W = cfg.conv_width
+    xb = x @ p["wx"].astype(x.dtype)
+    xb = constrain(xb, "batch", None, "inner")
+    gate = jax.nn.gelu(x @ p["wgate"].astype(x.dtype))
+
+    if mode in ("train", "prefill"):
+        pad = jnp.pad(xb, ((0, 0), (W - 1, 0), (0, 0)))
+        xc = jnp.zeros_like(xb)
+        for i in range(W):
+            xc = xc + pad[:, i:i + S] * p["conv_w"][i].astype(x.dtype)
+        xc = xc + p["conv_b"].astype(x.dtype)
+        a, u = _gates(p, xc)
+        hs, h_final = rglru_scan(a, u, h0=None, impl=impl)
+        y = hs.astype(x.dtype)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": xb[:, -(W - 1):, :], "h": h_final}
+    else:  # decode
+        xb_full = jnp.concatenate([cache["conv"].astype(xb.dtype), xb], axis=1)
+        xc = jnp.einsum("bwc,wc->bc", xb_full, p["conv_w"].astype(x.dtype))
+        xc = (xc + p["conv_b"].astype(x.dtype))[:, None, :]
+        a, u = _gates(p, xc)
+        h = a[:, 0] * cache["h"] + u[:, 0]
+        y = h[:, None, :].astype(x.dtype)
+        new_cache = {"conv": xb_full[:, 1:, :], "h": h}
+
+    y = y * gate
+    y = constrain(y, "batch", None, "inner")
+    return y @ p["out"].astype(x.dtype), new_cache

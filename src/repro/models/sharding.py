@@ -1,0 +1,162 @@
+"""Logical-axis sharding: params and activations carry logical axis names;
+resolution against the active mesh picks the first candidate whose size
+divides the dimension (so e.g. a 51,865-entry vocab falls back to feature-dim
+sharding instead of failing on a 16-way model axis).
+
+Param FSDP dim ("embed") shards on `data`; tensor dims ("vocab", "heads",
+"ffn", "experts", "inner") shard on `model`; everything is replicated over
+`pod` (pure cross-pod DP).  Activations: "batch" -> (pod, data), tensor dims
+-> model.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# candidate mesh axes per logical axis, in priority order; entries may be
+# tuples (sharded over several mesh axes jointly).
+PARAM_RULES = {
+    "batch": [("pod", "data"), "data"],  # caches / batched state
+    "vocab": ["model"],
+    "embed": ["data"],
+    "embed+": ["data", "model"],  # embedding feature dim (vocab fallback)
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "ffn": ["model"],
+    "experts": ["model"],
+    "inner": ["model"],
+    "head_dim": [],
+    "conv": [],
+    None: [],
+}
+
+ACT_RULES = {
+    "batch": [("pod", "data"), "data"],
+    "heads": ["model"],
+    "kv_heads": ["model"],
+    "ffn": ["model"],
+    "experts": ["model"],
+    "inner": ["model"],
+    "embed": [],
+    "seq": [],
+    "qseq": ["model"],  # context-parallel attention (unshardable heads)
+    "vocab": ["model"],
+    None: [],
+}
+
+# --- sharding profiles (perf iterations, see EXPERIMENTS.md §Perf) ---------
+# "fsdp": no tensor parallelism — batch and parameters shard across the
+# combined (data, model) axes; collectives become overlappable weight
+# all-gathers + gradient reduce-scatters instead of per-layer activation
+# all-reduces.  Best for big dense training at batch >= n_chips.
+_FSDP_PARAM_RULES = {
+    "batch": [("pod", "data", "model"), ("data", "model"), "data"],
+    "vocab": [("data", "model"), "data", "model"],
+    "embed": [("data", "model"), "data"],
+    "embed+": [("data", "model"), "data", "model"],
+    "heads": [],
+    "kv_heads": [],
+    "ffn": [("data", "model"), "data"],
+    "experts": [("data", "model"), "data", "model"],
+    "inner": [("data", "model"), "data"],
+    "head_dim": [], "conv": [], None: [],
+}
+_FSDP_ACT_RULES = {
+    "batch": [("pod", "data", "model"), ("data", "model"), "data"],
+    "heads": [], "kv_heads": [], "ffn": [], "experts": [], "inner": [],
+    "embed": [], "seq": [], "qseq": [], "vocab": [], None: [],
+}
+# "inference-tp": weights live model-sharded and data-replicated — zero
+# per-step weight all-gathers (decode is bandwidth-bound; FSDP gathers
+# dominate otherwise).
+_INF_PARAM_RULES = dict(PARAM_RULES, embed=[], inner=["model"])
+
+PROFILES = {
+    "2d": (PARAM_RULES, ACT_RULES),
+    "fsdp": (_FSDP_PARAM_RULES, _FSDP_ACT_RULES),
+    "inference-tp": (_INF_PARAM_RULES, ACT_RULES),
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    profile: str = "2d"
+
+
+_ctx = _Ctx()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh], profile: str = "2d"):
+    prev = (_ctx.mesh, getattr(_ctx, "profile", "2d"))
+    _ctx.mesh = mesh
+    _ctx.profile = profile
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.profile = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ctx.mesh
+
+
+def current_profile() -> str:
+    return getattr(_ctx, "profile", "2d")
+
+
+def _axis_size(mesh: Mesh, cand) -> int:
+    names = (cand,) if isinstance(cand, str) else tuple(cand)
+    size = 1
+    for n in names:
+        if n not in mesh.shape:
+            return 0  # axis not present in this mesh
+        size *= mesh.shape[n]
+    return size
+
+
+def _resolve_dim(dim: int, logical, mesh: Mesh, taken: set, rules) -> Optional[tuple]:
+    for cand in rules.get(logical, []):
+        names = (cand,) if isinstance(cand, str) else tuple(cand)
+        if any(n in taken for n in names):
+            continue
+        size = _axis_size(mesh, cand)
+        if size <= 1 or dim % size != 0:
+            continue
+        taken.update(names)
+        return names
+    return None
+
+
+def spec_for(shape: Sequence[int], axes: Sequence, mesh: Mesh,
+             rules=PARAM_RULES) -> P:
+    assert len(shape) == len(axes), (shape, axes)
+    taken: set = set()
+    out = []
+    for dim, ax in zip(shape, axes):
+        names = _resolve_dim(int(dim), ax, mesh, taken, rules)
+        if names is None:
+            out.append(None)
+        elif len(names) == 1:
+            out.append(names[0])
+        else:
+            out.append(names)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """Activation sharding constraint (no-op outside a mesh context)."""
+    mesh = _ctx.mesh
+    if mesh is None:
+        return x
+    spec = spec_for(x.shape, axes, mesh, rules=ACT_RULES)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape, axes, mesh: Mesh, rules=PARAM_RULES) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, axes, mesh, rules))

@@ -1,0 +1,117 @@
+"""Mamba2 (SSD) block: projections + causal depthwise conv + selective state
+space scan + gated RMSNorm output."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..kernels.ssd_scan.ops import ssd, ssd_decode_step
+from .layers import rmsnorm
+from .params import ParamDef
+from .sharding import constrain
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    G, N, W = cfg.ssm_groups, cfg.ssm_state, cfg.conv_width
+    conv_ch = d_inner + 2 * G * N
+    return d_inner, H, G, N, W, conv_ch
+
+
+def ssm_defs(cfg: ArchConfig):
+    D = cfg.d_model
+    d_inner, H, G, N, W, conv_ch = _dims(cfg)
+    return {
+        "wz": ParamDef((D, d_inner), ("embed", "inner"), fan_in=D),
+        "wx": ParamDef((D, d_inner), ("embed", "inner"), fan_in=D),
+        "wB": ParamDef((D, G * N), ("embed", None), fan_in=D),
+        "wC": ParamDef((D, G * N), ("embed", None), fan_in=D),
+        "wdt": ParamDef((D, H), ("embed", "heads"), fan_in=D),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "conv_w": ParamDef((W, conv_ch), ("conv", "inner"), fan_in=W),
+        "conv_b": ParamDef((conv_ch,), ("inner",), init="zeros"),
+        "A_log": ParamDef((H,), ("heads",), init="a_log"),
+        "D": ParamDef((H,), ("heads",), init="ones"),
+        "norm": ParamDef((d_inner,), ("inner",), init="ones"),
+        "out": ParamDef((d_inner, D), ("inner", "embed"), fan_in=d_inner),
+    }
+
+
+def ssm_cache_defs(cfg: ArchConfig, batch: int):
+    d_inner, H, G, N, W, conv_ch = _dims(cfg)
+    return {
+        "conv": ParamDef((batch, W - 1, conv_ch), ("batch", None, "inner"),
+                         init="zeros"),
+        "state": ParamDef((batch, H, cfg.ssm_headdim, N),
+                          ("batch", "heads", None, None), init="zeros",
+                          dtype="float32"),
+    }
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv over (B, S, C); w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    y = jnp.zeros_like(u)
+    for i in range(W):
+        y = y + pad[:, i:i + u.shape[1]] * w[i].astype(u.dtype)
+    return jax.nn.silu(y + b.astype(u.dtype))
+
+
+def _projections(p, x, cfg: ArchConfig):
+    d_inner, H, G, N, W, conv_ch = _dims(cfg)
+    dt_raw = x @ p["wdt"].astype(x.dtype)
+    z = x @ p["wz"].astype(x.dtype)
+    u = jnp.concatenate([x @ p["wx"].astype(x.dtype),
+                         x @ p["wB"].astype(x.dtype),
+                         x @ p["wC"].astype(x.dtype)], axis=-1)
+    return z, u, dt_raw
+
+
+def _split_conv(cu, cfg: ArchConfig, batch_shape):
+    d_inner, H, G, N, _, _ = _dims(cfg)
+    xc = cu[..., :d_inner]
+    Bc = cu[..., d_inner:d_inner + G * N].reshape(*batch_shape, G, N)
+    Cc = cu[..., d_inner + G * N:].reshape(*batch_shape, G, N)
+    return xc, Bc, Cc
+
+
+def ssm_block(p, x, cfg: ArchConfig, mode: str, cache=None, impl="auto"):
+    """x: (B, S, D) (S == 1 for decode). Returns (y, new_cache | None)."""
+    B, S, D = x.shape
+    d_inner, H, G, N, W, conv_ch = _dims(cfg)
+    z, u, dt_raw = _projections(p, x, cfg)
+    z = constrain(z, "batch", None, "inner")
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Dskip = p["D"].astype(jnp.float32)
+
+    if mode in ("train", "prefill"):
+        cu = _causal_conv(u, p["conv_w"], p["conv_b"])
+        xc, Bc, Cc = _split_conv(cu, cfg, (B, S))
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        xh = xc.reshape(B, S, H, cfg.ssm_headdim)
+        y, h_final = ssd(xh, dt, A, Bc, Cc, Dskip, chunk=cfg.ssd_chunk,
+                         impl=impl)
+        y = y.reshape(B, S, d_inner)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"conv": u[:, -(W - 1):, :], "state": h_final}
+    else:  # decode
+        u_full = jnp.concatenate([cache["conv"].astype(u.dtype), u], axis=1)
+        cu = jnp.einsum("bwc,wc->bc", u_full, p["conv_w"].astype(u.dtype))
+        cu = jax.nn.silu(cu + p["conv_b"].astype(u.dtype))[:, None, :]
+        xc, Bc, Cc = _split_conv(cu[:, 0], cfg, (B,))
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        xh = xc.reshape(B, H, cfg.ssm_headdim)
+        y, h_new = ssd_decode_step(cache["state"], xh, dt, A, Bc, Cc, Dskip)
+        y = y.reshape(B, 1, d_inner)
+        new_cache = {"conv": u_full[:, 1:, :], "state": h_new}
+
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm"], cfg.norm_eps)
+    y = constrain(y, "batch", None, "inner")
+    return y @ p["out"].astype(x.dtype), new_cache

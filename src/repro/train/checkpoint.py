@@ -1,0 +1,114 @@
+"""Checkpointing: flat-key npz + JSON manifest, async save thread, restore
+with resharding — the substrate for Eva's task migration (checkpoint on the
+source instance, restart on the destination) and for elastic re-scaling
+(restore onto a different mesh: arrays are re-sharded on load).
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = v
+    return root
+
+
+def save_checkpoint(path: str, state, step: int, *,
+                    extra: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+    tmp = os.path.join(path, f".tmp-{step}.npz")
+    np.savez(tmp, **arrays)
+    final = os.path.join(path, f"step-{step}.npz")
+    os.replace(tmp, final)
+    manifest = {"step": step, "keys": sorted(arrays),
+                "extra": extra or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (one in flight at a time)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, state, step: int, extra=None) -> None:
+        self.wait()
+        # device_get on the caller thread (consistent snapshot), IO async
+        flat = _flatten(state)
+        arrays = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def write():
+            os.makedirs(self.path, exist_ok=True)
+            tmp = os.path.join(self.path, f".tmp-{step}.npz")
+            np.savez(tmp, **arrays)
+            os.replace(tmp, os.path.join(self.path, f"step-{step}.npz"))
+            with open(os.path.join(self.path, "manifest.json"), "w") as f:
+                json.dump({"step": step, "keys": sorted(arrays),
+                           "extra": extra or {}}, f)
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(path: str) -> Optional[int]:
+    mf = os.path.join(path, "manifest.json")
+    if not os.path.exists(mf):
+        return None
+    with open(mf) as f:
+        return json.load(f)["step"]
+
+
+def restore_checkpoint(path: str, *, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, int, dict]:
+    """Load a checkpoint; with ``shardings`` (a matching pytree of
+    NamedSharding), arrays are placed directly onto the (possibly different)
+    mesh — elastic restart onto a new cluster shape."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {path}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, f"step-{step}.npz"))
+    flat = {k: data[k] for k in data.files}
+    tree = _unflatten(flat)
+    if shardings is not None:
+        flat_s = _flatten(shardings)
+        tree = _unflatten({
+            k: jax.device_put(v, flat_s[k]) if k in flat_s else jnp.asarray(v)
+            for k, v in _flatten(tree).items()})
+    else:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree, step, manifest.get("extra", {})

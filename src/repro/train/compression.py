@@ -1,0 +1,45 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Per-tensor symmetric int8 quantization of gradients before the data-parallel
+reduction, with an error-feedback accumulator (Karimireddy et al., 2019) so
+quantization error is re-injected next step and convergence is preserved.
+
+On a real mesh this pairs with a shard_map reduce over the `data`/`pod`
+axes (quantize → psum int32 → dequantize), cutting cross-pod gradient
+traffic 4× vs f32; under jit-with-shardings we apply the
+quantize-dequantize + error feedback transform to the gradient pytree (the
+numerics are identical; the collective itself is emitted by XLA).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_dequantize_int8(g: jax.Array):
+    """Symmetric per-tensor int8 quantize->dequantize; returns (ĝ, error)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    deq = q * scale
+    return deq, gf - deq
+
+
+def compress_grads(grads, error_state):
+    """Apply error feedback + int8 q/dq to every gradient leaf.
+
+    error_state: pytree like grads (running quantization error), or None
+    on the first step.  Returns (compressed_grads, new_error_state).
+    """
+    if error_state is None:
+        error_state = jax.tree.map(
+            lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, grads, error_state)
+    out = jax.tree.map(quantize_dequantize_int8, corrected)
+    comp = jax.tree.map(lambda ge: ge[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda ge: ge[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    comp = jax.tree.map(lambda c, g: c.astype(g.dtype), comp, grads)
+    return comp, err

@@ -1,0 +1,73 @@
+"""AdamW with global-norm clipping and cosine schedule (no external deps)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def lr_at(step, oc: OptConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - oc.warmup_steps)
+                 / jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * cos
+
+
+def init_opt_state(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p), params)
+    return {"m": zeros,
+            "v": jax.tree.map(lambda p: jnp.zeros_like(p), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, opt_state, oc: OptConfig):
+    step = opt_state["step"] + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gn, 1e-9))
+    lr = lr_at(step, oc)
+    c1 = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = oc.b1 * m.astype(jnp.float32) + (1 - oc.b1) * g
+        v = oc.b2 * v.astype(jnp.float32) + (1 - oc.b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + oc.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(p.dtype), v.astype(p.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, gn

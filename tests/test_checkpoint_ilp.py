@@ -1,0 +1,96 @@
+"""Checkpoint round-trip / resume determinism + ILP exactness on tiny
+instances."""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import TaskSet, aws_catalog, full_reconfiguration, make_task, table3_catalog
+from repro.core.cluster_types import Task
+from repro.core.ilp import cost_lower_bound, solve_ilp
+from repro.models.steps import init_train_state, make_train_step
+from repro.data.pipeline import SyntheticTokens
+from repro.train.checkpoint import (AsyncCheckpointer, latest_step,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.optimizer import OptConfig
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = ARCHS["smollm-135m"].reduced()
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path), state, step=3, extra={"note": "x"})
+    assert latest_step(str(tmp_path)) == 3
+    restored, step, extra = restore_checkpoint(str(tmp_path))
+    assert step == 3 and extra == {"note": "x"}
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_is_deterministic(tmp_path):
+    """Train 4 steps straight == train 2, checkpoint, restore, train 2."""
+    cfg = ARCHS["smollm-135m"].reduced()
+    oc = OptConfig(total_steps=10)
+    step_fn = jax.jit(make_train_step(cfg, oc))
+
+    def batches(start):
+        return SyntheticTokens(cfg.vocab, 2, 16, seed=1, start_step=start)
+
+    s_a = init_train_state(cfg, jax.random.PRNGKey(0))
+    src = batches(0)
+    for _ in range(4):
+        s_a, _ = step_fn(s_a, {k: jax.numpy.asarray(v)
+                               for k, v in src.next_batch().items()})
+
+    s_b = init_train_state(cfg, jax.random.PRNGKey(0))
+    src = batches(0)
+    for _ in range(2):
+        s_b, _ = step_fn(s_b, {k: jax.numpy.asarray(v)
+                               for k, v in src.next_batch().items()})
+    save_checkpoint(str(tmp_path), s_b, step=2)
+    s_b, step, _ = restore_checkpoint(str(tmp_path))
+    src = batches(step)
+    for _ in range(2):
+        s_b, _ = step_fn(s_b, {k: jax.numpy.asarray(v)
+                               for k, v in src.next_batch().items()})
+
+    for a, b in zip(jax.tree.leaves(s_a["params"]),
+                    jax.tree.leaves(s_b["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   atol=1e-6)
+
+
+def test_async_checkpointer(tmp_path):
+    cfg = ARCHS["smollm-135m"].reduced()
+    state = init_train_state(cfg, jax.random.PRNGKey(1))
+    ck = AsyncCheckpointer(str(tmp_path))
+    ck.save(state, 1)
+    ck.save(state, 2)  # waits for the first
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 2
+
+
+def test_ilp_exact_on_table3():
+    specs = [(2, 8, 24), (1, 4, 10), (0, 6, 20), (0, 4, 12)]
+    ts = TaskSet([Task(i, i, i, {"p3": tuple(map(float, s))})
+                  for i, s in enumerate(specs)])
+    cat = table3_catalog()
+    res = solve_ilp(ts, cat, time_limit_s=30.0)
+    assert res.config is not None
+    # optimal known from the walkthrough: $12.8/hr
+    assert res.cost == pytest.approx(12.8, abs=1e-6)
+
+
+def test_heuristic_close_to_ilp_small():
+    rng = np.random.default_rng(3)
+    ts = TaskSet([make_task(job_id=i, workload=int(rng.integers(10)))
+                  for i in range(10)])
+    cat = aws_catalog()
+    res = solve_ilp(ts, cat, time_limit_s=60.0)
+    cfg = full_reconfiguration(ts, cat, None, interference_aware=False,
+                               multi_task_aware=False)
+    assert res.config is not None
+    # paper Table 4: heuristic within ~1% of ILP; allow 10% slack here
+    assert cfg.total_hourly_cost(cat) <= res.cost * 1.10 + 1e-6
+    assert res.cost >= cost_lower_bound(ts, cat) - 1e-6

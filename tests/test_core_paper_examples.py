@@ -1,0 +1,133 @@
+"""Unit tests reproducing the paper's worked examples verbatim.
+
+* Table 3 + §4.2 walkthrough of Algorithm 1 (τ1,τ2,τ4 on it1; τ3 on it3;
+  hourly cost $12.8 vs $16.2 no-packing).
+* §4.3 TNRP examples (12·0.8 + 3·0.9 = 12.3 > 12; 12·0.7 + 3·0.8 = 10.8 < 12).
+* §4.4 multi-task TNRP reduction to tput·RP for single-task jobs.
+* §4.5 D̂ formula.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, EvaScheduler, TaskSet, ThroughputTable,
+                        evaluate_assignments, full_reconfiguration,
+                        mean_time_to_full_reconfig, reservation_prices,
+                        table3_catalog, tnrp)
+from repro.core.cluster_types import Task
+
+
+def table3_tasks():
+    # τ1..τ4 from Table 3(b); single-task jobs; workload ids 0..3.
+    specs = [
+        (2, 8, 24),
+        (1, 4, 10),
+        (0, 6, 20),
+        (0, 4, 12),
+    ]
+    tasks = [Task(task_id=i, job_id=i, workload=i,
+                  demands={"p3": tuple(map(float, s))})
+             for i, s in enumerate(specs)]
+    return TaskSet(tasks)
+
+
+def test_reservation_prices_match_table3():
+    tasks = table3_tasks()
+    rp = reservation_prices(tasks, table3_catalog())
+    assert rp.tolist() == [12.0, 3.0, 0.8, 0.4]
+
+
+def test_full_reconfiguration_walkthrough():
+    """§4.2 example: τ1, τ2, τ4 on it1 ($12+3+0.4 = 15.4 ≥ 12); τ3 alone on
+    it3 (0.8 ≥ 0.8).  Total $12.8 < $16.2 (separate instances)."""
+    tasks = table3_tasks()
+    cat = table3_catalog()
+    cfg = full_reconfiguration(tasks, cat, table=None,
+                               interference_aware=False,
+                               multi_task_aware=False)
+    got = sorted((cat.types[k].name, tuple(sorted(tids)))
+                 for k, tids in cfg.assignments)
+    assert got == [("it1", (0, 1, 3)), ("it3", (2,))]
+    assert cfg.total_hourly_cost(cat) == pytest.approx(12.8)
+    rp = reservation_prices(tasks, cat)
+    assert rp.sum() == pytest.approx(16.2)
+
+
+@pytest.mark.parametrize("engine", ["python", "numpy"])
+def test_walkthrough_all_engines(engine):
+    tasks = table3_tasks()
+    cat = table3_catalog()
+    cfg = full_reconfiguration(tasks, cat, table=None,
+                               interference_aware=False,
+                               multi_task_aware=False, engine=engine)
+    assert cfg.total_hourly_cost(cat) == pytest.approx(12.8)
+
+
+def test_tnrp_example_cost_efficient():
+    # §4.3: tputs (0.8, 0.9) -> 12.3 >= 12 cost-efficient;
+    #       tputs (0.7, 0.8) -> 10.8 < 12 not cost-efficient.
+    rp = np.array([12.0, 3.0])
+    assert tnrp(rp, np.array([0.8, 0.9])).sum() == pytest.approx(12.3)
+    assert tnrp(rp, np.array([0.7, 0.8])).sum() == pytest.approx(10.8)
+
+
+def test_multitask_tnrp_reduces_to_single():
+    # For a single-task job, RP - (1-tput)·RP == tput·RP.
+    rp = np.array([5.0])
+    t = np.array([0.83])
+    assert tnrp(rp, t, job_rp=rp) == pytest.approx(t * rp)
+
+
+def test_multitask_tnrp_penalty():
+    # 4-task job, each RP=3; one task at tput 0.9 drags the whole job:
+    # TNRP = 3 - (1-0.9)*12 = 1.8 (vs single-task view 2.7).
+    rp = np.array([3.0])
+    job_rp = np.array([12.0])
+    assert tnrp(rp, np.array([0.9]), job_rp) == pytest.approx(1.8)
+
+
+def test_interference_blocks_inefficient_packing():
+    """With pairwise tput 0.7/0.8 between τ1 and τ2, packing both on it1 is
+    not cost-efficient (10.8 < 12) -> Algorithm 1 must keep them apart."""
+    tasks = table3_tasks().subset([0, 1])
+    cat = table3_catalog()
+    table = ThroughputTable(num_workloads=4, default=1.0)
+    table.record(0, (1,), 0.7)  # τ1 with τ2 -> 0.7
+    table.record(1, (0,), 0.8)  # τ2 with τ1 -> 0.8
+    cfg = full_reconfiguration(tasks, cat, table, interference_aware=True,
+                               multi_task_aware=False)
+    names = sorted(cat.types[k].name for k, _ in cfg.assignments)
+    assert names == ["it1", "it2"]  # solo on their RP types
+
+
+def test_interference_allows_efficient_packing():
+    tasks = table3_tasks().subset([0, 1])
+    cat = table3_catalog()
+    table = ThroughputTable(num_workloads=4, default=1.0)
+    table.record(0, (1,), 0.8)
+    table.record(1, (0,), 0.9)  # 12*0.8 + 3*0.9 = 12.3 >= 12
+    cfg = full_reconfiguration(tasks, cat, table, interference_aware=True,
+                               multi_task_aware=False)
+    assert len(cfg.assignments) == 1
+    k, tids = cfg.assignments[0]
+    assert cat.types[k].name == "it1" and sorted(tids) == [0, 1]
+
+
+def test_d_hat_formula():
+    lam, p = 1.0 / 600.0, 0.25
+    d = mean_time_to_full_reconfig(lam, p)
+    assert d == pytest.approx(-1.0 / (lam * np.log(1 - p)))
+    # monotone: higher p -> sooner next full reconfig
+    assert mean_time_to_full_reconfig(lam, 0.5) < d
+
+
+def test_evaluate_assignments_uses_exact_entries():
+    tasks = table3_tasks().subset([0, 1])
+    cat = table3_catalog()
+    table = ThroughputTable(num_workloads=4, default=0.95)
+    table.record(0, (1,), 0.8)
+    table.record(1, (0,), 0.9)
+    k1 = cat.index_of("it1")
+    tnrps, costs = evaluate_assignments([(k1, (0, 1))], tasks, cat, table,
+                                        multi_task_aware=False)
+    assert tnrps[0] == pytest.approx(12 * 0.8 + 3 * 0.9)
+    assert costs[0] == pytest.approx(12.0)

@@ -1,0 +1,82 @@
+"""Equivalence of the three packing engines (paper-faithful python loop,
+vectorized numpy, jitted JAX incremental formulation)."""
+import numpy as np
+import pytest
+
+from repro.core import (TaskSet, ThroughputTable, aws_catalog,
+                        full_reconfiguration, make_task, table3_catalog)
+from repro.core.cluster_types import Task
+from repro.core.workloads import NUM_WORKLOADS
+
+
+def _random_tasks(n, seed):
+    rng = np.random.default_rng(seed)
+    return TaskSet([make_task(job_id=1000 * seed + i,
+                              workload=int(rng.integers(NUM_WORKLOADS)))
+                    for i in range(n)])
+
+
+def _random_table(seed, default=0.95):
+    rng = np.random.default_rng(seed)
+    t = ThroughputTable(NUM_WORKLOADS, default=default)
+    for _ in range(25):
+        w1, w2 = rng.integers(NUM_WORKLOADS, size=2)
+        t.record(int(w1), (int(w2),), float(rng.uniform(0.7, 1.0)))
+    return t
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("interference", [False, True])
+def test_numpy_matches_python(seed, interference):
+    tasks = _random_tasks(40, seed)
+    cat = aws_catalog()
+    table = _random_table(seed) if interference else None
+    kw = dict(interference_aware=interference, multi_task_aware=False)
+    c_py = full_reconfiguration(tasks, cat, table, engine="python", **kw)
+    c_np = full_reconfiguration(tasks, cat, table, engine="numpy", **kw)
+    assert sorted(c_py.assignments) == sorted(c_np.assignments)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_numpy_matches_python_multitask(seed):
+    rng = np.random.default_rng(seed)
+    tasks = []
+    for j in range(12):
+        w = int(rng.integers(NUM_WORKLOADS))
+        for _ in range(int(rng.integers(1, 4))):
+            tasks.append(make_task(job_id=j, workload=w))
+    ts = TaskSet(tasks)
+    cat = aws_catalog()
+    table = _random_table(seed)
+    kw = dict(interference_aware=True, multi_task_aware=True)
+    c_py = full_reconfiguration(ts, cat, table, engine="python", **kw)
+    c_np = full_reconfiguration(ts, cat, table, engine="numpy", **kw)
+    assert sorted(c_py.assignments) == sorted(c_np.assignments)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("interference", [False, True])
+def test_jax_matches_numpy(seed, interference):
+    tasks = _random_tasks(50, seed)
+    cat = aws_catalog()
+    table = _random_table(seed, default=0.97) if interference else None
+    kw = dict(interference_aware=interference, multi_task_aware=True)
+    c_np = full_reconfiguration(tasks, cat, table, engine="numpy", **kw)
+    c_jx = full_reconfiguration(tasks, cat, table, engine="jax", **kw)
+    # same total cost (tie-breaks may differ by float association)
+    assert c_jx.total_hourly_cost(cat) == pytest.approx(
+        c_np.total_hourly_cost(cat), rel=1e-6)
+    # every task assigned exactly once in both
+    for c in (c_np, c_jx):
+        tids = sorted(t for _, ts_ in c.assignments for t in ts_)
+        assert tids == sorted(tasks.ids.tolist())
+
+
+def test_table3_walkthrough_jax_engine():
+    specs = [(2, 8, 24), (1, 4, 10), (0, 6, 20), (0, 4, 12)]
+    ts = TaskSet([Task(i, i, i, {"p3": tuple(map(float, s))})
+                  for i, s in enumerate(specs)])
+    cat = table3_catalog()
+    cfg = full_reconfiguration(ts, cat, None, interference_aware=False,
+                               multi_task_aware=False, engine="jax")
+    assert cfg.total_hourly_cost(cat) == pytest.approx(12.8)

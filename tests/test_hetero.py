@@ -1,0 +1,64 @@
+"""§4.2 heterogeneous-resource extension tests."""
+import numpy as np
+import pytest
+
+from repro.core import TaskSet, aws_catalog, make_task
+from repro.core.hetero import (family_tput_matrix, full_reconfiguration_hetero,
+                               iteration_rp)
+
+
+def test_iteration_rp_prefers_faster_family():
+    cat = aws_catalog()
+    # a3c: (0, 10, 8) on p3, (0, 4, 8) on c7i/r7i
+    t = make_task(job_id=1, workload=7)
+    ts = TaskSet([t])
+    # same speed everywhere -> RP = cheapest fitting type
+    rp_flat = iteration_rp(ts, cat, family_tput_matrix(ts, None))
+    # 1.5x faster on c7i -> cost-per-iteration drops accordingly
+    ft = {t.task_id: {"c7i": 1.5}}
+    rp_fast = iteration_rp(ts, cat, family_tput_matrix(ts, ft))
+    assert rp_fast[0] < rp_flat[0]
+    assert rp_fast[0] == pytest.approx(rp_flat[0] / 1.5, rel=1e-6)
+
+
+def test_hetero_pack_matches_flat_when_uniform():
+    cat = aws_catalog()
+    rng = np.random.default_rng(0)
+    ts = TaskSet([make_task(job_id=i, workload=int(rng.integers(10)))
+                  for i in range(20)])
+    from repro.core import full_reconfiguration
+    flat = full_reconfiguration(ts, cat, None, interference_aware=False,
+                                multi_task_aware=False)
+    het = full_reconfiguration_hetero(ts, cat, None, family_tput=None,
+                                      interference_aware=False)
+    assert het.total_hourly_cost(cat) == pytest.approx(
+        flat.total_hourly_cost(cat), rel=1e-9)
+
+
+def test_hetero_all_tasks_assigned_and_feasible():
+    cat = aws_catalog()
+    rng = np.random.default_rng(1)
+    ts = TaskSet([make_task(job_id=i, workload=int(rng.integers(10)))
+                  for i in range(25)])
+    ft = {int(t): {"c7i": 1.3, "r7i": 1.2} for t in ts.ids.tolist()}
+    cfg = full_reconfiguration_hetero(ts, cat, None, family_tput=ft,
+                                      interference_aware=False)
+    placed = sorted(t for _, tids in cfg.assignments for t in tids)
+    assert placed == sorted(ts.ids.tolist())
+    for k, tids in cfg.assignments:
+        fam = cat.family_ids[k]
+        used = np.zeros(3)
+        for t in tids:
+            used += ts.demand_by_family[ts.row(t), fam]
+        assert np.all(used <= cat.capacities[k] + 1e-6)
+
+
+def test_faster_family_attracts_cpu_tasks():
+    """CPU tasks 2x faster on c7i should never land on r7i when both fit."""
+    cat = aws_catalog()
+    ts = TaskSet([make_task(job_id=i, workload=7) for i in range(6)])  # a3c
+    ft = {int(t): {"c7i": 2.0} for t in ts.ids.tolist()}
+    cfg = full_reconfiguration_hetero(ts, cat, None, family_tput=ft,
+                                      interference_aware=False)
+    fams = {cat.types[k].family for k, _ in cfg.assignments}
+    assert fams == {"c7i"}

@@ -1,0 +1,27 @@
+"""End-to-end physical-mode test: Eva schedules real JAX training jobs on
+the LocalCloud (threads = instances, migration = checkpoint/restore)."""
+import pytest
+
+from repro.cluster.localcloud import LocalCloud, LocalJob
+from repro.configs import ARCHS
+from repro.core import Catalog, EvaScheduler
+from repro.core.catalog import InstanceType
+
+
+@pytest.mark.slow
+def test_local_cluster_trains_real_jobs():
+    catalog = Catalog.from_types([
+        InstanceType("local.large", "c7i", (0, 4, 16), 1.0),
+        InstanceType("local.small", "c7i", (0, 2, 8), 0.55),
+    ])
+    jobs = [
+        LocalJob(job_id=1, workload=7, arch_cfg=ARCHS["smollm-135m"].reduced(),
+                 total_steps=30, demand=(0, 1, 4), standalone_sps=20.0),
+        LocalJob(job_id=2, workload=6, arch_cfg=ARCHS["qwen3-0.6b"].reduced(),
+                 total_steps=30, demand=(0, 1, 4), standalone_sps=15.0),
+    ]
+    cloud = LocalCloud(catalog, EvaScheduler(catalog), jobs, round_s=2.0)
+    out = cloud.run(timeout_s=420)
+    assert out["all_done"], out
+    assert out["cost"] > 0
+    assert all(s >= 30 for s in out["steps"].values())

@@ -1,0 +1,116 @@
+"""Partial Reconfiguration (§4.5) and ensemble-criterion unit tests."""
+import numpy as np
+import pytest
+
+from repro.core import (EventRateEstimator, LiveInstance, TaskSet,
+                        ThroughputTable, aws_catalog, choose, diff_configs,
+                        full_reconfiguration, make_task, migration_cost,
+                        partial_reconfiguration)
+from repro.core.cluster_types import ClusterConfig
+from repro.core.workloads import NUM_WORKLOADS
+
+CAT = aws_catalog()
+
+
+def _tasks(workloads):
+    return TaskSet([make_task(job_id=i, workload=w)
+                    for i, w in enumerate(workloads)])
+
+
+def test_partial_keeps_cost_efficient_instances():
+    tasks = _tasks([0, 3, 7])  # resnet, cyclegan, a3c
+    full = full_reconfiguration(tasks, CAT, None, interference_aware=False,
+                                multi_task_aware=False)
+    # all current instances cost-efficient, nothing pending -> unchanged
+    out = partial_reconfiguration(tasks, full.assignments, set(), CAT, None,
+                                  interference_aware=False,
+                                  multi_task_aware=False)
+    assert sorted(out.assignments) == sorted(full.assignments)
+
+
+def test_partial_packs_only_pending():
+    tasks = _tasks([0, 3, 7, 8])
+    sub = tasks.subset(tasks.ids[:3].tolist())
+    full3 = full_reconfiguration(sub, CAT, None, interference_aware=False,
+                                 multi_task_aware=False)
+    pending = {int(tasks.ids[3])}
+    out = partial_reconfiguration(tasks, full3.assignments, pending, CAT,
+                                  None, interference_aware=False,
+                                  multi_task_aware=False)
+    placed = {t for _, tids in out.assignments for t in tids}
+    assert placed == set(tasks.ids.tolist())
+    # the original instances survive untouched
+    for a in full3.assignments:
+        assert a in out.assignments
+
+
+def test_partial_evicts_inefficient_instance():
+    tasks = _tasks([7])  # a3c: RP = cheapest c7i fitting (10 cpu, 8 ram)
+    # place it on a wildly oversized instance: p3.16xlarge
+    k_big = CAT.index_of("p3.16xlarge")
+    live = [(k_big, tuple(tasks.ids.tolist()))]
+    out = partial_reconfiguration(tasks, live, set(), CAT, None,
+                                  interference_aware=False,
+                                  multi_task_aware=False)
+    types = [CAT.types[k].name for k, _ in out.assignments]
+    assert "p3.16xlarge" not in types  # evicted and re-packed cheaply
+
+
+def test_interference_triggers_eviction():
+    # two tasks co-located; recorded mutual interference so bad that TNRP
+    # falls below the instance cost -> partial reconfig splits them
+    tasks = _tasks([5, 8])  # graphsage + diamond (worst pair in M_TRUE)
+    full = full_reconfiguration(tasks, CAT, None, interference_aware=False,
+                                multi_task_aware=False)
+    packed = [a for a in full.assignments if len(a[1]) == 2]
+    if not packed:
+        pytest.skip("not packed under no-interference")
+    table = ThroughputTable(NUM_WORKLOADS, default=0.95)
+    w = tasks.workloads
+    table.record(int(w[0]), (int(w[1]),), 0.3)
+    table.record(int(w[1]), (int(w[0]),), 0.3)
+    out = partial_reconfiguration(tasks, full.assignments, set(), CAT, table,
+                                  interference_aware=True,
+                                  multi_task_aware=False)
+    assert all(len(tids) == 1 for _, tids in out.assignments)
+
+
+def test_diff_configs_minimizes_migrations():
+    live = [LiveInstance(10, 1, (1, 2)), LiveInstance(11, 3, (3,))]
+    new = ClusterConfig([(1, (1, 2)), (3, (3, 4))])
+    plan = diff_configs(live, new)
+    assert plan.num_migrations == 1  # only task 4 moves (fresh placement)
+    assert plan.migrations[0].task_id == 4
+    assert not plan.terminations
+    assert not plan.launches
+
+
+def test_migration_cost_positive_and_scales():
+    live = [LiveInstance(10, CAT.index_of("p3.8xlarge"), (1,))]
+    new = ClusterConfig([(CAT.index_of("p3.2xlarge"), (1,))])
+    plan = diff_configs(live, new)
+    wmap = {1: 4}  # gpt2: 30 s ckpt + 15 s launch
+    m1 = migration_cost(plan, live, CAT, wmap, delay_scale=1.0)
+    m2 = migration_cost(plan, live, CAT, wmap, delay_scale=4.0)
+    assert m1 > 0
+    assert m2 > 2 * m1  # scales with delay (launch cost dominates)
+
+
+def test_ensemble_prefers_partial_when_migration_expensive():
+    d = choose(s_full=1.0, m_full=100.0, s_partial=0.9, m_partial=0.0,
+               d_hat_s=3600.0)
+    assert not d.adopt_full
+    d2 = choose(s_full=1.0, m_full=0.01, s_partial=0.5, m_partial=0.0,
+                d_hat_s=3600.0)
+    assert d2.adopt_full
+
+
+def test_event_rate_estimator():
+    est = EventRateEstimator()
+    for i in range(20):
+        est.on_event(100.0 * i)
+    assert est.lam == pytest.approx(1 / 100.0, rel=1e-6)
+    for _ in range(5):
+        est.on_full_reconfig()
+    assert 0 < est.p < 1
+    assert est.d_hat() > 0

@@ -1,0 +1,124 @@
+"""Integration tests for the event-driven cluster simulator."""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig, Simulator, physical_trace, alibaba_like_trace
+from repro.core import EvaScheduler, NoPackingScheduler, aws_catalog
+from repro.core.workloads import M_TRUE
+from repro.schedulers import OwlScheduler, StratusScheduler, SynergyScheduler
+
+
+def _run(scheduler_factory, jobs, **cfg):
+    cat = aws_catalog()
+    sim = Simulator(cat, jobs, scheduler_factory(cat), SimConfig(**cfg))
+    return sim.run()
+
+
+def make_all(cat):
+    return {
+        "no-packing": NoPackingScheduler(cat),
+        "stratus": StratusScheduler(cat),
+        "synergy": SynergyScheduler(cat),
+        "owl": OwlScheduler(cat, M_TRUE),
+        "eva": EvaScheduler(cat),
+    }
+
+
+def test_all_jobs_complete_all_schedulers():
+    cat = aws_catalog()
+    jobs_seed = 7
+    for name, sched in make_all(cat).items():
+        jobs = physical_trace(n_jobs=12, seed=jobs_seed,
+                              duration_range_h=(0.2, 0.6))
+        sim = Simulator(cat, jobs, sched, SimConfig(seed=1))
+        m = sim.run()
+        done = sum(1 for j in jobs if j.completion_time is not None)
+        assert done == len(jobs), f"{name}: {done}/{len(jobs)} completed"
+        assert m.total_cost > 0
+        # every instance eventually terminated and billed
+        for inst in sim.instances.values():
+            assert inst.terminated_t is not None
+
+
+def test_no_capacity_violation_during_sim():
+    cat = aws_catalog()
+    jobs = physical_trace(n_jobs=16, seed=3, duration_range_h=(0.2, 0.5))
+    sched = EvaScheduler(cat)
+    sim = Simulator(cat, jobs, sched, SimConfig(seed=2))
+
+    # monkey-patch the executor to validate capacity after each config
+    orig = sim._execute_config
+
+    def checked(config):
+        orig(config)
+        from repro.core.catalog import FAMILIES
+        for inst in sim.instances.values():
+            if not inst.alive:
+                continue
+            fam = FAMILIES[cat.types[inst.type_index].family_id]
+            used = np.zeros(3)
+            for tid in inst.assigned:
+                used += np.array(sim.tasks[tid].task.demand_for_family(fam))
+            assert np.all(used <= cat.capacities[inst.type_index] + 1e-6)
+
+    sim._execute_config = checked
+    m = sim.run()
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_packing_reduces_cost_vs_no_packing():
+    """Headline claim (C1): Eva < No-Packing cost on a packing-friendly
+    trace."""
+    cost = {}
+    for name in ("no-packing", "eva"):
+        cat = aws_catalog()
+        jobs = physical_trace(n_jobs=24, seed=11, duration_range_h=(0.5, 1.5))
+        sched = make_all(cat)[name]
+        m = Simulator(cat, jobs, sched, SimConfig(seed=5)).run()
+        cost[name] = m.total_cost
+    assert cost["eva"] < cost["no-packing"]
+
+
+def test_no_packing_has_full_throughput():
+    cat = aws_catalog()
+    jobs = physical_trace(n_jobs=10, seed=2, duration_range_h=(0.2, 0.4))
+    m = Simulator(cat, jobs, NoPackingScheduler(cat), SimConfig(seed=3)).run()
+    assert m.norm_job_tput == pytest.approx(1.0, abs=1e-6)
+    assert m.migrations == 0
+
+
+def test_failure_recovery():
+    """Beyond-paper fault tolerance: jobs still complete under instance
+    failures (checkpoint/restart path)."""
+    cat = aws_catalog()
+    jobs = physical_trace(n_jobs=8, seed=5, duration_range_h=(0.3, 0.6))
+    sim = Simulator(cat, jobs, EvaScheduler(cat),
+                    SimConfig(seed=4, failure_mtbf_hours=1.0))
+    m = sim.run()
+    assert m.failures > 0
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_uniform_interference_override():
+    cat = aws_catalog()
+    jobs = physical_trace(n_jobs=10, seed=9, duration_range_h=(0.2, 0.4))
+    sim = Simulator(cat, jobs, EvaScheduler(cat),
+                    SimConfig(seed=6, uniform_interference=0.8))
+    m = sim.run()
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_trace_statistics():
+    jobs = alibaba_like_trace(n_jobs=4000, seed=0, duration_model="alibaba")
+    dur_h = np.array([j.duration_s for j in jobs]) / 3600.0
+    assert abs(np.median(dur_h) - 0.2) < 0.06      # Table 9 median 0.2 h
+    assert abs(np.quantile(dur_h, 0.8) - 1.0) < 0.3
+    assert abs(np.quantile(dur_h, 0.95) - 5.2) < 1.2
+    assert 6.0 < dur_h.mean() < 13.0               # Table 9 mean 9.1 h
+    gpus = np.array([j.tasks[0].demands["p3"][0] for j in jobs])
+    assert abs((gpus == 0).mean() - 0.1341) < 0.03  # Table 8 mix
+    assert abs((gpus == 1).mean() - 0.8617) < 0.03
+
+    jobs_g = alibaba_like_trace(n_jobs=2000, seed=1, duration_model="gavel")
+    dur_g = np.array([j.duration_s for j in jobs_g]) / 3600.0
+    assert 2.0 < np.median(dur_g) < 8.0            # Table 9 median 4.5 h

@@ -1,0 +1,47 @@
+"""§4.4 attribution rules, unit-level."""
+from repro.core import ThroughputTable
+
+
+def test_rule1_no_previous_observations():
+    t = ThroughputTable(5)
+    # job with 3 tasks: placements (workload, co-located workloads)
+    placements = [(0, (1,)), (1, (0, 2)), (2, ())]
+    t.observe_job(placements, 0.8)
+    # updates the task co-located with the MOST tasks -> (1, (0, 2))
+    assert t.recorded(1, (0, 2)) == 0.8
+    assert t.recorded(0, (1,)) is None
+
+
+def test_rule2_raise_lowest_recorded():
+    t = ThroughputTable(5)
+    t.record(0, (1,), 0.6)
+    t.record(1, (0, 2), 0.7)
+    placements = [(0, (1,)), (1, (0, 2))]
+    t.observe_job(placements, 0.75)
+    # both recorded below 0.75 -> raise the LOWEST (0, (1,))
+    assert t.recorded(0, (1,)) == 0.75
+    assert t.recorded(1, (0, 2)) == 0.7
+
+
+def test_rule3_unrecorded_straggler():
+    t = ThroughputTable(5)
+    t.record(0, (1,), 0.95)
+    placements = [(0, (1,)), (1, (0, 2)), (3, (4,))]
+    t.observe_job(placements, 0.7)
+    # all recorded (0.95) are higher -> straggler must be unrecorded; the
+    # one with most co-located tasks is (1, (0, 2))
+    assert t.recorded(1, (0, 2)) == 0.7
+    assert t.recorded(0, (1,)) == 0.95
+
+
+def test_solo_tasks_never_updated():
+    t = ThroughputTable(5)
+    t.observe_job([(0, ()), (1, ())], 0.5)  # all solo -> noise, ignore
+    assert len(t) == 0
+
+
+def test_lookup_exact_beats_pairwise():
+    t = ThroughputTable(5, default=0.9)
+    t.record(0, (1, 2), 0.5)
+    assert t.lookup(0, (2, 1)) == 0.5  # order-insensitive exact hit
+    assert abs(t.lookup(0, (1, 3)) - 0.9 * 0.9) < 1e-12  # pairwise product
