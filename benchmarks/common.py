@@ -38,14 +38,17 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
             opts["mode"] = "full-only"
         if name == "eva-partial-only":
             opts["mode"] = "partial-only"
+        if name == "eva-spot":
+            opts["spot_aware"] = True
         opts.update(kw)
         return EvaScheduler(catalog, **opts)
     raise KeyError(name)
 
 
-def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None, **kw):
+def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None,
+            catalog=None, **kw):
     simcfg = simcfg or SimConfig()
-    cat = aws_catalog()
+    cat = catalog if catalog is not None else aws_catalog()
     sched = scheduler_factory(sched_name, cat, simcfg, **kw)
     t0 = time.time()
     sim = Simulator(cat, jobs, sched, simcfg)

@@ -1,0 +1,63 @@
+"""Spot-market walkthrough: dynamic prices, revocations, and spot-aware Eva.
+
+    PYTHONPATH=src python examples/spot_cluster.py [--jobs 24] [--hazard 0.5]
+
+1. Attach a mean-reverting PriceModel to the AWS catalog and inspect how the
+   price of one instance type drifts (and how the Algorithm-1 packing order
+   can change with it).
+2. Run the same trace under spot-aware Eva (dynamic prices + preemptions),
+   on-demand Eva, and No-Packing, and compare cost / JCT / preemptions.
+"""
+import argparse
+
+from repro.cluster import SimConfig, Simulator, physical_trace
+from repro.core import (EvaScheduler, NoPackingScheduler, PriceModel,
+                        aws_catalog)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--jobs", type=int, default=24)
+ap.add_argument("--hazard", type=float, default=0.5,
+                help="baseline preemptions per instance-hour at mean price")
+args = ap.parse_args()
+
+# -- 1. price dynamics ------------------------------------------------------
+pm = PriceModel.mean_reverting(discount=0.35, volatility=0.10, seed=7)
+spot_cat = aws_catalog(price_model=pm)
+k = spot_cat.index_of("p3.8xlarge")
+print("p3.8xlarge on-demand: $%.2f/h; spot price over the first day:"
+      % spot_cat.costs[k])
+for hour in (0, 4, 8, 12, 16, 20, 24):
+    snap = spot_cat.at(hour * 3600.0)
+    print(f"  t={hour:2d}h  ${snap.costs[k]:6.3f}/h   "
+          f"(x{snap.costs[k] / spot_cat.costs[k]:.2f}, "
+          f"rank {list(snap.order_desc).index(k)} in packing order)")
+
+# -- 2. schedulers head to head --------------------------------------------
+print(f"\n{args.jobs} jobs, hazard {args.hazard}/instance-hour, "
+      "2-min revocation notice")
+results = {}
+for name in ("eva-spot", "eva", "no-packing"):
+    jobs = physical_trace(n_jobs=args.jobs, seed=11,
+                          duration_range_h=(0.3, 0.8))
+    if name == "eva-spot":
+        cat = aws_catalog(price_model=pm)
+        sched = EvaScheduler(cat, spot_aware=True)
+        cfg = SimConfig(seed=5, preemption_hazard_per_hour=args.hazard)
+    else:
+        cat = aws_catalog()
+        sched = (EvaScheduler(cat) if name == "eva"
+                 else NoPackingScheduler(cat))
+        cfg = SimConfig(seed=5)
+    m = Simulator(cat, jobs, sched, cfg).run()
+    results[name] = m
+    extra = ""
+    if name == "eva-spot":
+        extra = (f" notices={m.preemption_notices}"
+                 f" preempted={m.preemptions}"
+                 f" forced_partials={sched.forced_partials}")
+    print(f"  {name:10s} ${m.total_cost:8.2f}  jct={m.avg_jct_hours:5.2f}h"
+          f"  migrations={m.migrations}{extra}")
+
+saving = 1.0 - results["eva-spot"].total_cost / results["eva"].total_cost
+print(f"\nspot-aware Eva saves {saving:.1%} vs on-demand Eva "
+      "(pays spot prices; revocation losses bounded by the checkpoint period)")

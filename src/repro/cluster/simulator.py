@@ -12,7 +12,18 @@ simulated cloud models:
   (Figure 1 model) — tasks progress at the product of pairwise throughputs,
 * data-parallel multi-task jobs progressing at the slowest task's rate,
 * per-second billing from instance request to termination,
-* optional instance failures (spot-style) for fault-tolerance experiments.
+* optional instance failures (spot-style) for fault-tolerance experiments,
+* an optional spot market (catalog with a dynamic ``PriceModel``): prices
+  drift on a fixed update grid, billing integrates the current price, and
+  instances face a per-type preemption hazard that rises with price pressure.
+  A revocation arrives as a 2-minute notice (``preemption_notice_s``) visible
+  to the scheduler via ``SchedulerView.revoked`` before the instance is
+  reclaimed; whatever is still on the instance at reclaim time loses at most
+  one checkpoint period of progress (same machinery as failures).
+
+The spot layer is strictly additive: with a static (or absent) price model no
+extra events are scheduled and no extra RNG draws occur, so on-demand runs
+are bit-for-bit identical to the seed simulator.
 
 Progress accounting is lazy: every state change accrues Δt into cost /
 allocation / idle-time integrals and re-projects job-completion events
@@ -49,6 +60,10 @@ class SimConfig:
     checkpoint_period_s: float = 600.0  # progress-loss bound on failure
     seed: int = 0
     max_time_s: float = 1e9
+    # --- spot market (active only when the catalog has a dynamic PriceModel)
+    price_update_interval_s: float = 300.0
+    preemption_notice_s: float = 120.0  # revocation notice before reclaim
+    preemption_hazard_per_hour: float = 0.0  # per-instance baseline; 0 = off
 
 
 @dataclasses.dataclass
@@ -86,6 +101,7 @@ class _Instance:
     ready: bool = False
     terminated_t: Optional[float] = None
     draining: bool = False
+    preempt_deadline: Optional[float] = None  # revocation notice received
     assigned: Set[int] = dataclasses.field(default_factory=set)
     residents: Set[int] = dataclasses.field(default_factory=set)  # outbound ckpt
 
@@ -112,6 +128,8 @@ class Metrics:
     ninst_integral: float = 0.0
     ntask_integral: float = 0.0
     failures: int = 0
+    preemption_notices: int = 0
+    preemptions: int = 0
     end_time: float = 0.0
 
     @property
@@ -148,15 +166,18 @@ class Metrics:
              "tasks_per_instance": round(self.tasks_per_instance, 3),
              "migrations_per_task": round(self.migrations_per_task, 3),
              "instances_launched": self.instances_launched,
-             "failures": self.failures}
+             "failures": self.failures,
+             "preemptions": self.preemptions}
         d.update({f"alloc_{k}": round(v, 4)
                   for k, v in self.resource_allocation().items()})
         return d
 
 
 # event kinds (ordering within same timestamp: arrivals & completions before
-# rounds so the round sees fresh state)
-ARRIVAL, INSTANCE_READY, CKPT_DONE, LAUNCH_DONE, JOB_DONE, FAILURE, ROUND = range(7)
+# rounds so the round sees fresh state; price updates and preemption reclaims
+# also precede rounds so the scheduler reacts to current prices and notices)
+(ARRIVAL, INSTANCE_READY, CKPT_DONE, LAUNCH_DONE, JOB_DONE, FAILURE,
+ PRICE_UPDATE, PREEMPT_FIRE, ROUND) = range(9)
 
 
 class Simulator:
@@ -182,6 +203,28 @@ class Simulator:
             np.fill_diagonal(self._m, 1.0)
         else:
             self._m = M_TRUE
+        # Spot market: active only with a dynamic price model on the catalog.
+        # All spot randomness comes from a dedicated stream so the main RNG's
+        # draw sequence (acquisition/setup/failures) is untouched.
+        pm = catalog.price_model
+        self._spot = pm is not None and not pm.is_static
+        self._jobs_outstanding = len(jobs)
+        if self._spot:
+            self._spot_rng = np.random.default_rng(self.cfg.seed + 0x5B07)
+            self._cur_costs = pm.prices_at(catalog.costs, 0.0)
+            self._last_price_update = 0.0
+            # never sample coarser than the model's own grid (an OU model
+            # with step_s below the configured interval would otherwise be
+            # billed with prices up to one interval stale)
+            self._price_interval = min(self.cfg.price_update_interval_s,
+                                       getattr(pm, "step_s",
+                                               self.cfg.price_update_interval_s))
+            self._push(self._price_interval, PRICE_UPDATE, (True,))
+            # trace models change price at their own breakpoints; bill those
+            # exactly instead of lagging up to one update interval
+            for t in np.asarray(getattr(pm, "times_s", ()), dtype=np.float64):
+                if 0.0 < t <= self.cfg.max_time_s:
+                    self._push(float(t), PRICE_UPDATE, (False,))
         for job in jobs:
             self._push(job.arrival_time, ARRIVAL, (job,))
         self.metrics.n_jobs = len(jobs)
@@ -215,6 +258,8 @@ class Simulator:
             m.ntask_integral += len(inst.assigned) * dt
             m.cap_integral += self.catalog.capacities[inst.type_index] * dt
             m.alloc_integral += self._alloc_of(inst) * dt
+            if self._spot:  # integrate the piecewise-constant spot price
+                m.total_cost += dt / 3600.0 * self._cur_costs[inst.type_index]
         for js in self.jobs.values():
             if not js.arrived or js.done_t is not None:
                 continue
@@ -295,8 +340,9 @@ class Simulator:
         if not inst.alive:
             return
         inst.terminated_t = self.now
-        self.metrics.total_cost += ((self.now - inst.request_t) / 3600.0
-                                    * self.catalog.costs[inst.type_index])
+        if not self._spot:  # spot billing is integrated in _accrue instead
+            self.metrics.total_cost += ((self.now - inst.request_t) / 3600.0
+                                        * self.catalog.costs[inst.type_index])
 
     def _maybe_finish_drain(self, inst: _Instance):
         if inst.draining and inst.alive and not inst.residents and not inst.assigned:
@@ -330,11 +376,20 @@ class Simulator:
                      for i in live]
         plan = diff_configs(live_view, config)
 
-        # map plan slots to concrete instances (reuse matched, launch fresh)
+        # map plan slots to concrete instances (reuse matched, launch fresh).
+        # A revoked instance may only be reused by a slot that keeps some of
+        # its current tasks (a non-spot-aware scheduler rides out the
+        # notice); a zero-overlap match would land brand-new tasks on a
+        # doomed instance, so it launches fresh instead.
         slot_inst: Dict[int, _Instance] = {}
         for slot, (k, tids, matched) in enumerate(plan.slots):
             if matched is not None:
-                slot_inst[slot] = self.instances[matched]
+                minst = self.instances[matched]
+                if (self._spot and minst.preempt_deadline is not None
+                        and not (set(tids) & minst.assigned)):
+                    slot_inst[slot] = self._new_instance(k)
+                else:
+                    slot_inst[slot] = minst
             else:
                 slot_inst[slot] = self._new_instance(k)
 
@@ -380,6 +435,15 @@ class Simulator:
                 inst.draining = True
             else:
                 self._terminate(inst)
+
+        # Evacuated revoked instances stop billing as soon as they are empty
+        # (terminate during the notice window) instead of idling to reclaim.
+        if self._spot:
+            for inst in self.instances.values():
+                if (inst.alive and inst.preempt_deadline is not None
+                        and not inst.assigned and not inst.draining):
+                    inst.draining = True
+                    self._maybe_finish_drain(inst)
 
     # ----------------------------------------------------------- monitoring
     def _report_throughputs(self):
@@ -431,10 +495,12 @@ class Simulator:
             for t in tids:
                 js = self.jobs[self.tasks[t].job_id]
                 remaining[t] = max(js.job.total_iters - js.iters_done, 0.0)
+        revoked = {i.iid for i in self._live_instances()
+                   if i.preempt_deadline is not None}
         view = SchedulerView(
             time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
             task_workload={t: self.tasks[t].workload for t in tids},
-            remaining_s=remaining or None)
+            remaining_s=remaining or None, revoked=revoked or None)
         config = self.scheduler.schedule(view)
         self._execute_config(config)
 
@@ -494,6 +560,12 @@ class Simulator:
             return  # stale projection
         js.done_t = self.now
         js.job.completion_time = self.now
+        self._jobs_outstanding -= 1
+        if self._spot and self._jobs_outstanding == 0:
+            # drop remaining one-shot breakpoint events (a long price trace
+            # would otherwise no-op through the heap and inflate end_time)
+            self._heap = [e for e in self._heap if e[1] != PRICE_UPDATE]
+            heapq.heapify(self._heap)
         self.metrics.jct_sum += self.now - js.job.arrival_time
         self.metrics.idle_sum += js.idle_s
         self.metrics.running_sum += js.running_s
@@ -517,11 +589,11 @@ class Simulator:
                 self._terminate(inst)
         self.scheduler.on_event(self.now)
 
-    def _on_failure(self, iid: int):
-        inst = self.instances.get(iid)
-        if inst is None or not inst.alive:
-            return
-        self.metrics.failures += 1
+    def _kill_instance(self, inst: _Instance, rng):
+        """Reclaim an instance out from under its tasks (failure or spot
+        preemption): victims lose up to one checkpoint period of progress and
+        re-enter PENDING."""
+        iid = inst.iid
         victims = set(inst.assigned) | set(inst.residents)
         self._terminate(inst)
         jids = set()
@@ -530,7 +602,7 @@ class Simulator:
             jids.add(ts.job_id)
             # progress loss up to one checkpoint period
             js = self.jobs[ts.job_id]
-            loss = js.rate * self.rng.uniform(0, self.cfg.checkpoint_period_s)
+            loss = js.rate * rng.uniform(0, self.cfg.checkpoint_period_s)
             js.iters_done = max(0.0, js.iters_done - loss)
             # clear any other reservation
             if ts.dst is not None and ts.dst in self.instances and ts.dst != iid:
@@ -539,6 +611,51 @@ class Simulator:
         for j in jids:
             self._touch_job(j)
         self._schedule_next_round()
+
+    def _on_failure(self, iid: int):
+        inst = self.instances.get(iid)
+        if inst is None or not inst.alive:
+            return
+        self.metrics.failures += 1
+        self._kill_instance(inst, self.rng)
+
+    # --------------------------------------------------------- spot handlers
+    def _on_price_update(self, periodic: bool = True):
+        pm = self.catalog.price_model
+        self._cur_costs = self.catalog.at(self.now).costs
+        dt = self.now - self._last_price_update  # actual elapsed exposure
+        self._last_price_update = self.now
+        noticed: List[int] = []
+        if self.cfg.preemption_hazard_per_hour > 0 and dt > 0:
+            pressure = pm.pressure_at(len(self.catalog), self.now)
+            for iid in sorted(self.instances):
+                inst = self.instances[iid]
+                if not inst.alive or inst.preempt_deadline is not None:
+                    continue
+                lam = (self.cfg.preemption_hazard_per_hour / 3600.0
+                       * float(pressure[inst.type_index]))
+                if self._spot_rng.uniform() < 1.0 - math.exp(-lam * dt):
+                    inst.preempt_deadline = self.now + self.cfg.preemption_notice_s
+                    self.metrics.preemption_notices += 1
+                    self._push(inst.preempt_deadline, PREEMPT_FIRE, (iid,))
+                    noticed.append(iid)
+        if noticed:
+            self.scheduler.on_preemption_notice(noticed, self.now)
+            # immediate extra round so the scheduler can evacuate within the
+            # notice window (unless one is already queued at this instant)
+            if self._round_scheduled_at != self.now:
+                self._push(self.now, ROUND, ())
+        # only the periodic chain self-perpetuates; breakpoint events are
+        # one-shots scheduled up-front
+        if periodic and self._jobs_outstanding > 0:
+            self._push(self.now + self._price_interval, PRICE_UPDATE, (True,))
+
+    def _on_preempt_fire(self, iid: int):
+        inst = self.instances.get(iid)
+        if inst is None or not inst.alive:
+            return  # evacuated and terminated before the deadline
+        self.metrics.preemptions += 1
+        self._kill_instance(inst, self._spot_rng)
 
     # ----------------------------------------------------------------- main
     def run(self) -> Metrics:
@@ -560,6 +677,10 @@ class Simulator:
                 self._on_job_done(*payload)
             elif kind == FAILURE:
                 self._on_failure(*payload)
+            elif kind == PRICE_UPDATE:
+                self._on_price_update(*payload)
+            elif kind == PREEMPT_FIRE:
+                self._on_preempt_fire(*payload)
             elif kind == ROUND:
                 self._run_round()
                 if self._live_task_ids():

@@ -1,7 +1,8 @@
 # The paper's primary contribution: Eva's cost-efficient cloud-based cluster
 # scheduling — reservation-price provisioning (Algorithm 1), TNRP interference
 # awareness, multi-task attribution, and the Full/Partial ensemble criterion.
-from .catalog import AWS_CATALOG, Catalog, InstanceType, aws_catalog, table3_catalog
+from .catalog import (AWS_CATALOG, Catalog, InstanceType, MeanRevertingPriceModel,
+                      PriceModel, TracePriceModel, aws_catalog, table3_catalog)
 from .cluster_types import (Assignment, ClusterConfig, Job, Task, TaskSet,
                             make_job, make_task)
 from .ensemble import EventRateEstimator, choose, mean_time_to_full_reconfig
@@ -15,7 +16,8 @@ from .throughput_table import ThroughputTable
 from .workloads import M_TRUE, NUM_WORKLOADS, WORKLOADS, true_throughput
 
 __all__ = [
-    "AWS_CATALOG", "Catalog", "InstanceType", "aws_catalog", "table3_catalog",
+    "AWS_CATALOG", "Catalog", "InstanceType", "MeanRevertingPriceModel",
+    "PriceModel", "TracePriceModel", "aws_catalog", "table3_catalog",
     "Assignment", "ClusterConfig", "Job", "Task", "TaskSet", "make_job",
     "make_task", "EventRateEstimator", "choose", "mean_time_to_full_reconfig",
     "evaluate_assignments", "full_reconfiguration", "partial_reconfiguration",

@@ -7,11 +7,18 @@ published specs/prices (us-east-1, on-demand, 2024).  Resources are the
 
 ``example_catalog`` reproduces Table 3 of the paper and is used by unit tests
 to check the Algorithm-1 walkthrough verbatim.
+
+Beyond the paper, the catalog supports *time-varying* prices through a
+``PriceModel`` attached to the ``Catalog``: ``catalog.at(time_s)`` returns a
+snapshot view with current costs (and the Algorithm-1 descending-cost order
+recomputed), so reservation prices and packing decisions track spot-market
+drift.  The static model is the identity — ``at`` returns the catalog itself —
+so on-demand behaviour is bit-for-bit unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -75,6 +82,134 @@ def example_catalog() -> tuple:
     )
 
 
+# --------------------------------------------------------------------------
+# price models (spot-market layer)
+# --------------------------------------------------------------------------
+class PriceModel:
+    """Maps (base on-demand costs, time) -> current hourly prices.
+
+    The base class is the *static* on-demand model: prices never move and
+    ``Catalog.at`` short-circuits to the catalog itself, so attaching
+    ``PriceModel.static()`` is exactly equivalent to no model at all.
+
+    Dynamic subclasses return a per-type multiplier vector that is a pure
+    function of time (piecewise-constant on a precomputed grid), so scheduler
+    and simulator always agree on the price at any instant and replays are
+    deterministic regardless of event interleaving.
+    """
+
+    kind = "static"
+    is_static = True
+    mean_multiplier = 1.0
+
+    def multipliers_at(self, n_types: int, time_s: float) -> np.ndarray:
+        return np.ones(n_types)
+
+    def prices_at(self, base_costs: np.ndarray, time_s: float) -> np.ndarray:
+        return base_costs * self.multipliers_at(len(base_costs), time_s)
+
+    def pressure_at(self, n_types: int, time_s: float) -> np.ndarray:
+        """Price pressure: current multiplier relative to the long-run mean.
+        > 1 means the market is tight (preemption hazard rises with it)."""
+        return self.multipliers_at(n_types, time_s) / self.mean_multiplier
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def static() -> "PriceModel":
+        return PriceModel()
+
+    @staticmethod
+    def mean_reverting(discount: float = 0.35, volatility: float = 0.10,
+                       reversion: float = 0.05, step_s: float = 300.0,
+                       horizon_s: float = 14 * 86400.0,
+                       seed: int = 0) -> "MeanRevertingPriceModel":
+        return MeanRevertingPriceModel(discount, volatility, reversion,
+                                       step_s, horizon_s, seed)
+
+    @staticmethod
+    def trace(times_s: Sequence[float],
+              multipliers: Sequence[float]) -> "TracePriceModel":
+        return TracePriceModel(times_s, multipliers)
+
+
+class MeanRevertingPriceModel(PriceModel):
+    """Ornstein-Uhlenbeck log-price series around ``discount`` × on-demand.
+
+    Each instance type gets an independent seeded path sampled once on a
+    fixed ``step_s`` grid; queries step-interpolate (piecewise-constant) and
+    hold the last value beyond ``horizon_s``.  Multipliers are clipped to
+    [discount/10, 1.0] — AWS caps spot at the on-demand price.
+    """
+
+    kind = "mean-reverting"
+    is_static = False
+
+    def __init__(self, discount: float, volatility: float, reversion: float,
+                 step_s: float, horizon_s: float, seed: int):
+        assert 0.0 < discount <= 1.0
+        self.discount = float(discount)
+        self.volatility = float(volatility)
+        self.reversion = float(reversion)
+        self.step_s = float(step_s)
+        self.horizon_s = float(horizon_s)
+        self.seed = int(seed)
+        self.mean_multiplier = float(discount)
+        self._grids: Dict[int, np.ndarray] = {}  # n_types -> (N, K)
+
+    def _grid(self, n_types: int) -> np.ndarray:
+        g = self._grids.get(n_types)
+        if g is None:
+            rng = np.random.default_rng(self.seed)
+            n_steps = int(self.horizon_s / self.step_s) + 1
+            mu = np.log(self.discount)
+            x = np.empty((n_steps, n_types))
+            x[0] = mu
+            eps = rng.standard_normal((n_steps - 1, n_types))
+            for i in range(1, n_steps):
+                x[i] = (x[i - 1] + self.reversion * (mu - x[i - 1])
+                        + self.volatility * eps[i - 1])
+            g = np.clip(np.exp(x), self.discount / 10.0, 1.0)
+            self._grids[n_types] = g
+        return g
+
+    def multipliers_at(self, n_types: int, time_s: float) -> np.ndarray:
+        g = self._grid(n_types)
+        i = min(int(max(time_s, 0.0) / self.step_s), g.shape[0] - 1)
+        return g[i]
+
+
+class TracePriceModel(PriceModel):
+    """Replay a recorded price trace: piecewise-constant multipliers.
+
+    ``multipliers`` is (N,) for a market-wide series or (N, K) per-type.
+    """
+
+    kind = "trace"
+    is_static = False
+
+    def __init__(self, times_s: Sequence[float], multipliers: Sequence[float]):
+        self.times_s = np.asarray(times_s, dtype=np.float64)
+        self.multipliers = np.asarray(multipliers, dtype=np.float64)
+        assert self.times_s.ndim == 1 and len(self.times_s) > 0
+        assert self.multipliers.shape[0] == self.times_s.shape[0]
+        assert np.all(np.diff(self.times_s) >= 0), "trace must be time-sorted"
+        # per-type long-run mean for (N, K) traces so pressure (and hence the
+        # preemption hazard) is unbiased for types whose own mean differs
+        # from the market mean
+        if self.multipliers.ndim == 2:
+            self.mean_multiplier = self.multipliers.mean(axis=0)
+        else:
+            self.mean_multiplier = float(self.multipliers.mean())
+
+    def multipliers_at(self, n_types: int, time_s: float) -> np.ndarray:
+        i = int(np.searchsorted(self.times_s, time_s, side="right")) - 1
+        i = max(i, 0)
+        m = self.multipliers[i]
+        if np.ndim(m) == 0:
+            return np.full(n_types, float(m))
+        return np.asarray(m)
+
+
 @dataclasses.dataclass(frozen=True)
 class Catalog:
     """Vectorized view over a set of instance types.
@@ -82,8 +217,10 @@ class Catalog:
     Attributes
     ----------
     capacities : (K, R) float64
-    costs      : (K,)   float64
+    costs      : (K,)   float64 — current prices (== base for static models)
     order_desc : indices of types sorted by descending cost (Algorithm 1 order)
+    price_model : optional time-varying price source; ``at(time_s)`` snapshots
+    base_costs : on-demand reference prices (None until a snapshot is taken)
     """
 
     types: tuple
@@ -91,15 +228,18 @@ class Catalog:
     costs: np.ndarray
     family_ids: np.ndarray
     order_desc: np.ndarray
+    price_model: Optional[PriceModel] = None
+    base_costs: Optional[np.ndarray] = None
 
     @staticmethod
-    def from_types(types: Sequence[InstanceType]) -> "Catalog":
+    def from_types(types: Sequence[InstanceType],
+                   price_model: Optional[PriceModel] = None) -> "Catalog":
         types = tuple(types)
         caps = np.array([t.capacity for t in types], dtype=np.float64)
         costs = np.array([t.hourly_cost for t in types], dtype=np.float64)
         fam = np.array([t.family_id for t in types], dtype=np.int64)
         order = np.argsort(-costs, kind="stable")
-        return Catalog(types, caps, costs, fam, order)
+        return Catalog(types, caps, costs, fam, order, price_model)
 
     def __len__(self) -> int:
         return len(self.types)
@@ -110,9 +250,28 @@ class Catalog:
                 return i
         raise KeyError(name)
 
+    # -- time-varying prices ------------------------------------------------
+    def with_price_model(self, price_model: Optional[PriceModel]) -> "Catalog":
+        return dataclasses.replace(self, price_model=price_model)
 
-def aws_catalog() -> Catalog:
-    return Catalog.from_types(AWS_CATALOG)
+    def at(self, time_s: float) -> "Catalog":
+        """Snapshot of the catalog priced at ``time_s``.
+
+        Static (or absent) price models return ``self`` unchanged — the
+        identity guarantees on-demand code paths stay bit-for-bit intact.
+        """
+        pm = self.price_model
+        if pm is None or pm.is_static:
+            return self
+        base = self.base_costs if self.base_costs is not None else self.costs
+        costs = pm.prices_at(base, time_s)
+        order = np.argsort(-costs, kind="stable")
+        return dataclasses.replace(self, costs=costs, order_desc=order,
+                                   base_costs=base)
+
+
+def aws_catalog(price_model: Optional[PriceModel] = None) -> Catalog:
+    return Catalog.from_types(AWS_CATALOG, price_model)
 
 
 def table3_catalog() -> Catalog:

@@ -166,13 +166,17 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
                          multi_task_aware: bool = True,
                          engine: str = "numpy",
                          rp: Optional[np.ndarray] = None,
-                         job_rp: Optional[np.ndarray] = None) -> ClusterConfig:
+                         job_rp: Optional[np.ndarray] = None,
+                         time_s: Optional[float] = None) -> ClusterConfig:
     """Run Algorithm 1 over ``tasks`` and return the packed configuration.
 
     ``rp``/``job_rp`` may be precomputed (partial reconfiguration passes the
     system-wide job RP sums so multi-task penalties count non-migrating
-    siblings too).
+    siblings too).  ``time_s`` snapshots a spot catalog at the given instant
+    so packing order and reservation prices follow current prices.
     """
+    if time_s is not None:
+        catalog = catalog.at(time_s)
     if len(tasks) == 0:
         return ClusterConfig([])
     if rp is None:

@@ -27,7 +27,10 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
                             table: Optional[ThroughputTable] = None, *,
                             interference_aware: bool = True,
                             multi_task_aware: bool = True,
-                            engine: str = "numpy") -> ClusterConfig:
+                            engine: str = "numpy",
+                            time_s: Optional[float] = None) -> ClusterConfig:
+    if time_s is not None:
+        catalog = catalog.at(time_s)  # all downstream prices from one instant
     live_task_ids = {t for _, tids in live_assignments for t in tids}
     # Drop completed tasks from live assignments.
     system_ids = set(tasks.ids.tolist())

@@ -7,6 +7,10 @@ for a task of a multi-task job j (§4.4):
     TNRP(τ, T) = RP(τ) − Σ_{τ'∈j} (1 − tput(τ,T)) · RP(τ')
 
 which reduces to tput·RP for single-task jobs.
+
+All price-consuming entry points accept an optional ``time_s``: when given,
+the catalog is snapshotted via ``catalog.at(time_s)`` so reservation prices
+track a spot market's current prices (static catalogs are unaffected).
 """
 from __future__ import annotations
 
@@ -26,9 +30,12 @@ def feasibility_matrix(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
     return np.all(d <= catalog.capacities[None, :, :], axis=-1)
 
 
-def reservation_prices(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
+def reservation_prices(tasks: TaskSet, catalog: Catalog,
+                       time_s: Optional[float] = None) -> np.ndarray:
     """(T,) RP(τ).  Raises if some task fits no instance type (the paper
     removes such jobs from the trace; callers should filter first)."""
+    if time_s is not None:
+        catalog = catalog.at(time_s)
     feas = feasibility_matrix(tasks, catalog)
     costs = np.where(feas, catalog.costs[None, :], np.inf)
     rp = costs.min(axis=1)
@@ -38,8 +45,11 @@ def reservation_prices(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
     return rp
 
 
-def cheapest_type(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
+def cheapest_type(tasks: TaskSet, catalog: Catalog,
+                  time_s: Optional[float] = None) -> np.ndarray:
     """(T,) index of the reservation-price instance type of each task."""
+    if time_s is not None:
+        catalog = catalog.at(time_s)
     feas = feasibility_matrix(tasks, catalog)
     costs = np.where(feas, catalog.costs[None, :], np.inf)
     return costs.argmin(axis=1)

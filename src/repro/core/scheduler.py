@@ -34,6 +34,9 @@ class SchedulerView:
     # runtime estimates (iters remaining / standalone rate), only for
     # schedulers that declare needs_runtime_estimates (Stratus best-case).
     remaining_s: Optional[Dict[int, float]] = None
+    # live instance ids under a spot revocation notice (reclaim imminent);
+    # None outside spot scenarios.
+    revoked: Optional[Set[int]] = None
 
 
 class SchedulerBase:
@@ -46,6 +49,10 @@ class SchedulerBase:
 
     # -- monitor hooks ------------------------------------------------------
     def on_event(self, time_s: float) -> None:  # job arrival/completion
+        pass
+
+    def on_preemption_notice(self, instance_ids: Sequence[int],
+                             time_s: float) -> None:  # spot revocation notice
         pass
 
     def observe_single(self, workload: int, colocated: Sequence[int],
@@ -67,6 +74,13 @@ class EvaScheduler(SchedulerBase):
       * interference_aware=False  -> Eva-RP  (Fig. 4)
       * multi_task_aware=False    -> Eva-Single (Table 6 / Fig. 7)
       * mode="full-only" / "partial-only"  (Fig. 5b / Fig. 6)
+
+    Beyond the paper, ``spot_aware=True`` targets a spot-market catalog
+    (dynamic ``PriceModel``): every round re-evaluates reservation prices
+    against the catalog snapshot at the current time, and a revocation notice
+    forces a partial reconfiguration that evacuates the revoked instances
+    (their tasks re-enter the repack set; the instances are dropped from the
+    live view so nothing new lands on them).
     """
 
     name = "eva"
@@ -74,7 +88,8 @@ class EvaScheduler(SchedulerBase):
     def __init__(self, catalog: Catalog, *, interference_aware: bool = True,
                  multi_task_aware: bool = True, mode: str = "ensemble",
                  default_t: float = 0.95, engine: str = "numpy",
-                 migration_delay_scale: float = 1.0):
+                 migration_delay_scale: float = 1.0,
+                 spot_aware: bool = False):
         super().__init__(catalog)
         assert mode in ("ensemble", "full-only", "partial-only")
         self.interference_aware = interference_aware
@@ -82,6 +97,8 @@ class EvaScheduler(SchedulerBase):
         self.mode = mode
         self.engine = engine
         self.migration_delay_scale = migration_delay_scale
+        self.spot_aware = spot_aware
+        self.forced_partials = 0
         self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
         self.estimator = EventRateEstimator()
         self.decisions: List[EnsembleDecision] = []
@@ -106,30 +123,47 @@ class EvaScheduler(SchedulerBase):
         table = self.table if self.interference_aware else None
         kw = dict(interference_aware=self.interference_aware,
                   multi_task_aware=self.multi_task_aware, engine=self.engine)
-        live_assignments = [(i.type_index, i.task_ids) for i in view.live]
+        # Spot awareness: all prices this round come from the catalog
+        # snapshot at the current time (identity for static catalogs).
+        cat = self.catalog.at(view.time) if self.spot_aware else self.catalog
 
+        if self.spot_aware and view.revoked:
+            # Forced partial reconfiguration: evacuate revoked instances.
+            # Their tasks join the repack set; dropping the instances from
+            # the live view guarantees nothing is kept (or placed) on them.
+            live = [i for i in view.live if i.instance_id not in view.revoked]
+            pending = set(view.pending_ids)
+            for inst in view.live:
+                if inst.instance_id in view.revoked:
+                    pending |= set(inst.task_ids)
+            self.forced_partials += 1
+            return partial_reconfiguration(
+                view.tasks, [(i.type_index, i.task_ids) for i in live],
+                pending, cat, table, **kw)
+
+        live_assignments = [(i.type_index, i.task_ids) for i in view.live]
         if self.mode == "full-only":
-            cfg = full_reconfiguration(view.tasks, self.catalog, table, **kw)
+            cfg = full_reconfiguration(view.tasks, cat, table, **kw)
             self.full_adoptions += 1
             return cfg
         partial = partial_reconfiguration(view.tasks, live_assignments,
-                                          view.pending_ids, self.catalog,
+                                          view.pending_ids, cat,
                                           table, **kw)
         if self.mode == "partial-only":
             return partial
-        full = full_reconfiguration(view.tasks, self.catalog, table, **kw)
+        full = full_reconfiguration(view.tasks, cat, table, **kw)
 
         s_f = instantaneous_saving(*evaluate_assignments(
-            full.assignments, view.tasks, self.catalog, table,
+            full.assignments, view.tasks, cat, table,
             self.multi_task_aware))
         s_p = instantaneous_saving(*evaluate_assignments(
-            partial.assignments, view.tasks, self.catalog, table,
+            partial.assignments, view.tasks, cat, table,
             self.multi_task_aware))
         m_f = migration_cost(diff_configs(view.live, full), view.live,
-                             self.catalog, view.task_workload,
+                             cat, view.task_workload,
                              self.migration_delay_scale)
         m_p = migration_cost(diff_configs(view.live, partial), view.live,
-                             self.catalog, view.task_workload,
+                             cat, view.task_workload,
                              self.migration_delay_scale)
         decision = choose(s_f, m_f, s_p, m_p, self.estimator.d_hat())
         self.decisions.append(decision)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import tpu_compiler_params
+
 
 def _kernel(a_ref, u_ref, h0_ref, o_ref, h_scr, *, block_s: int):
     si = pl.program_id(2)
@@ -56,7 +58,7 @@ def rglru_scan_pallas(a, u, h0, *, block_r: int = 512, block_s: int = 256,
                                lambda b, ri, si: (b, si, ri)),
         out_shape=jax.ShapeDtypeStruct((B, S, R), u.dtype),
         scratch_shapes=[pltpu.VMEM((block_r,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, u, h0)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import tpu_compiler_params
+
 
 def _kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref, y_ref, cin_ref, *,
             chunk: int):
@@ -70,7 +72,7 @@ def ssd_chunk_pallas(x, dt, cum, Bm, Cm, *, chunk: int,
             jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
             jax.ShapeDtypeStruct((BH, nc, P, N), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(x, dt, cum, Bm, Cm)

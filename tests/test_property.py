@@ -1,6 +1,13 @@
-"""Hypothesis property tests on the scheduler's invariants."""
+"""Hypothesis property tests on the scheduler's invariants.
+
+Skips cleanly when hypothesis is not installed (it is a ``test`` extra, not a
+runtime dependency): ``pip install -e .[test]`` pulls it in.
+"""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (TaskSet, ThroughputTable, aws_catalog,
                         evaluate_assignments, full_reconfiguration, make_task,

@@ -1,0 +1,235 @@
+"""Spot-market layer: price models, dynamic catalogs, preemption path.
+
+Two contract tests anchor the design:
+* the static price model is *strictly additive* — scheduler decisions and
+  simulator metrics are bit-for-bit identical to a catalog with no model;
+* a spot revocation never costs a job more than one checkpoint period of
+  progress, no matter which scheduler is driving.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig, Simulator, physical_trace
+from repro.cluster.simulator import PRICE_UPDATE
+from repro.core import (EvaScheduler, NoPackingScheduler, PriceModel, TaskSet,
+                        aws_catalog, full_reconfiguration, make_job, make_task,
+                        reservation_prices)
+
+
+def _metrics(sched_name, price_model, spot_aware=False, **cfg):
+    cat = aws_catalog(price_model=price_model)
+    jobs = physical_trace(n_jobs=12, seed=11, duration_range_h=(0.3, 0.6))
+    if sched_name == "eva":
+        sched = EvaScheduler(cat, spot_aware=spot_aware)
+    else:
+        sched = NoPackingScheduler(cat)
+    m = Simulator(cat, jobs, sched, SimConfig(seed=5, **cfg)).run()
+    return m, jobs
+
+
+# --------------------------------------------------------------- price models
+def test_static_model_is_identity():
+    cat = aws_catalog()
+    assert cat.at(12345.0) is cat
+    cat_s = aws_catalog(price_model=PriceModel.static())
+    assert cat_s.at(12345.0) is cat_s
+    np.testing.assert_array_equal(
+        PriceModel.static().prices_at(cat.costs, 7200.0), cat.costs)
+
+
+def test_mean_reverting_bounds_and_determinism():
+    pm = PriceModel.mean_reverting(discount=0.35, seed=3)
+    base = aws_catalog().costs
+    for t in (0.0, 3600.0, 86400.0, 10 * 86400.0):
+        p1, p2 = pm.prices_at(base, t), pm.prices_at(base, t)
+        np.testing.assert_array_equal(p1, p2)  # pure function of time
+        assert np.all(p1 <= base + 1e-12)      # capped at on-demand
+        assert np.all(p1 >= base * 0.035 - 1e-12)
+    # prices actually move
+    assert not np.array_equal(pm.prices_at(base, 0.0),
+                              pm.prices_at(base, 86400.0))
+    # same seed -> same path; different seed -> different path
+    pm2 = PriceModel.mean_reverting(discount=0.35, seed=3)
+    np.testing.assert_array_equal(pm.prices_at(base, 5e4),
+                                  pm2.prices_at(base, 5e4))
+    pm3 = PriceModel.mean_reverting(discount=0.35, seed=4)
+    assert not np.array_equal(pm.prices_at(base, 5e4),
+                              pm3.prices_at(base, 5e4))
+
+
+def test_trace_model_replay():
+    pm = PriceModel.trace([0.0, 100.0, 200.0], [0.5, 0.25, 1.0])
+    base = np.array([2.0, 4.0])
+    np.testing.assert_allclose(pm.prices_at(base, 0.0), [1.0, 2.0])
+    np.testing.assert_allclose(pm.prices_at(base, 99.9), [1.0, 2.0])
+    np.testing.assert_allclose(pm.prices_at(base, 100.0), [0.5, 1.0])
+    np.testing.assert_allclose(pm.prices_at(base, 999.0), [2.0, 4.0])
+    # pressure is multiplier over the long-run mean
+    np.testing.assert_allclose(
+        pm.pressure_at(2, 100.0), 0.25 / np.mean([0.5, 0.25, 1.0]))
+
+
+def test_per_type_trace_pressure_uses_per_type_mean():
+    """A type sitting at its own long-run mean has pressure 1 even when the
+    market-wide mean differs (unbiased preemption hazard)."""
+    pm = PriceModel.trace([0.0, 100.0],
+                          [[0.2, 0.8], [0.2, 0.8]])  # flat per-type series
+    np.testing.assert_allclose(pm.pressure_at(2, 50.0), [1.0, 1.0])
+    np.testing.assert_allclose(pm.prices_at(np.array([1.0, 1.0]), 50.0),
+                               [0.2, 0.8])
+
+
+def test_snapshot_reorders_packing_order():
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.2, seed=7)
+    cat = aws_catalog(price_model=pm)
+    snap = cat.at(6 * 3600.0)
+    assert snap is not cat
+    np.testing.assert_array_equal(snap.order_desc,
+                                  np.argsort(-snap.costs, kind="stable"))
+    np.testing.assert_array_equal(snap.capacities, cat.capacities)
+    # snapshots re-derive from base prices, not compounding multipliers
+    snap2 = snap.at(6 * 3600.0)
+    np.testing.assert_array_equal(snap2.costs, snap.costs)
+
+
+def test_time_s_param_matches_catalog_snapshot():
+    """The `time_s` view API and an explicit `catalog.at` snapshot must be
+    interchangeable — two spot-pricing mechanisms may never diverge."""
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.2, seed=7)
+    cat = aws_catalog(price_model=pm)
+    t = 9 * 3600.0
+    tasks = TaskSet([make_task(job_id=i, workload=w)
+                     for i, w in enumerate((0, 3, 4, 6, 9))])
+    np.testing.assert_array_equal(reservation_prices(tasks, cat, time_s=t),
+                                  reservation_prices(tasks, cat.at(t)))
+    a = full_reconfiguration(tasks, cat, None, interference_aware=False,
+                             multi_task_aware=False, time_s=t)
+    b = full_reconfiguration(tasks, cat.at(t), None, interference_aware=False,
+                             multi_task_aware=False)
+    assert a.assignments == b.assignments
+
+
+# ------------------------------------------------------- strictly additive
+def test_static_price_model_bit_identical_to_seed():
+    """Acceptance: with PriceModel.static, total_cost / JCT / migrations are
+    *exactly* the seed simulator's for the same seeds."""
+    for name in ("eva", "no-packing"):
+        m_none, _ = _metrics(name, None)
+        m_static, _ = _metrics(name, PriceModel.static())
+        assert m_static.total_cost == m_none.total_cost  # bit-for-bit
+        assert m_static.jct_sum == m_none.jct_sum
+        assert m_static.migrations == m_none.migrations
+        assert m_static.instances_launched == m_none.instances_launched
+        assert m_static.summary() == m_none.summary()
+        assert m_static.preemptions == 0
+
+
+def test_spot_aware_flag_is_noop_on_static_catalog():
+    m_plain, _ = _metrics("eva", None, spot_aware=False)
+    m_aware, _ = _metrics("eva", PriceModel.static(), spot_aware=True)
+    assert m_aware.summary() == m_plain.summary()
+
+
+# ------------------------------------------------------------- preemptions
+def _single_task_jobs(n=10, duration_s=2400.0):
+    # workloads 2..9 are single-task (resnet18 variants are multi-task), so
+    # per-instance progress loss maps 1:1 onto per-job loss
+    return [make_job(job_id=i + 1, workload=2 + (i % 8),
+                     arrival_time=600.0 * (i + 1), duration_s=duration_s,
+                     n_tasks=1) for i in range(n)]
+
+
+def test_revocation_loses_at_most_one_checkpoint_period():
+    """Acceptance: a revocation notice never loses more than
+    checkpoint_period_s of progress (rate <= 1 iter/s)."""
+    ckpt = 300.0
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    cat = aws_catalog(price_model=pm)
+    jobs = _single_task_jobs()
+    # a NON-spot-aware scheduler rides out notices, so reclaims really fire
+    sched = EvaScheduler(cat)
+    sim = Simulator(cat, jobs, sched,
+                    SimConfig(seed=3, preemption_hazard_per_hour=8.0,
+                              checkpoint_period_s=ckpt,
+                              preemption_notice_s=60.0))
+    drops = []
+    orig = sim._on_preempt_fire
+
+    def recording(iid):
+        before = {j: js.iters_done for j, js in sim.jobs.items()}
+        orig(iid)
+        drops.extend(before[j] - js.iters_done for j, js in sim.jobs.items()
+                     if before[j] > js.iters_done)
+
+    sim._on_preempt_fire = recording
+    m = sim.run()
+    assert m.preemptions > 0 and drops, "hazard 8/h must fire at least once"
+    assert max(drops) <= ckpt + 1e-6
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_spot_aware_eva_evacuates_on_notice():
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    cat = aws_catalog(price_model=pm)
+    jobs = _single_task_jobs()
+    sched = EvaScheduler(cat, spot_aware=True)
+    m = Simulator(cat, jobs, sched,
+                  SimConfig(seed=3, preemption_hazard_per_hour=4.0)).run()
+    assert m.preemption_notices > 0
+    assert sched.forced_partials > 0  # notices forced partial reconfigs
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_trace_breakpoints_get_billed_exactly():
+    """Trace-model price changes are billed at their own breakpoints, not
+    lagged to the periodic update grid."""
+    pm = PriceModel.trace([0.0, 450.0, 33333.0], [1.0, 0.2, 0.5])
+    cat = aws_catalog(price_model=pm)
+    sim = Simulator(cat, _single_task_jobs(2), EvaScheduler(cat, spot_aware=True),
+                    SimConfig(seed=1))
+    times = {t for t, kind, _, _ in sim._heap if kind == PRICE_UPDATE}
+    assert 450.0 in times and 33333.0 in times
+
+
+def test_stale_price_events_do_not_inflate_end_time():
+    """One-shot breakpoint events beyond the last job completion are purged,
+    so end_time reflects the workload, not the price trace length."""
+    week = 7 * 86400.0
+    pm = PriceModel.trace(np.arange(0.0, week, 3600.0),
+                          np.full(int(week // 3600), 0.4))
+    cat = aws_catalog(price_model=pm)
+    jobs = _single_task_jobs(3, duration_s=1200.0)
+    m = Simulator(cat, jobs, EvaScheduler(cat, spot_aware=True),
+                  SimConfig(seed=1)).run()
+    assert all(j.completion_time is not None for j in jobs)
+    assert m.end_time < 6 * 3600.0  # jobs end ~1h in; nowhere near the week
+
+
+def test_evacuated_instance_terminates_before_reclaim():
+    """A revoked instance whose tasks were all evacuated is terminated (and
+    stops billing) during the notice window, so it does not count as a
+    preemption; reclaims that actually hit tasks still do."""
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    cat = aws_catalog(price_model=pm)
+    jobs = _single_task_jobs()
+    sched = EvaScheduler(cat, spot_aware=True)
+    sim = Simulator(cat, jobs, sched,
+                    SimConfig(seed=3, preemption_hazard_per_hour=4.0,
+                              preemption_notice_s=240.0))
+    m = sim.run()
+    assert m.preemption_notices > 0
+    # fast-checkpoint single-task workloads + a 4-min notice: at least one
+    # instance must be fully evacuated and released early
+    assert m.preemptions < m.preemption_notices
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_spot_eva_cheaper_than_ondemand_eva():
+    """Acceptance (benchmark invariant): Eva on the spot market beats
+    on-demand-only Eva on total cost for the same trace."""
+    m_spot, jobs_s = _metrics("eva", PriceModel.mean_reverting(seed=7),
+                              spot_aware=True,
+                              preemption_hazard_per_hour=0.3)
+    m_od, jobs_o = _metrics("eva", None)
+    assert all(j.completion_time is not None for j in jobs_s)
+    assert m_spot.total_cost < m_od.total_cost
