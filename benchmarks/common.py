@@ -40,6 +40,8 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
             opts["mode"] = "partial-only"
         if name == "eva-spot":
             opts["spot_aware"] = True
+        if name == "eva-multiregion":
+            opts["multi_region"] = True
         opts.update(kw)
         return EvaScheduler(catalog, **opts)
     raise KeyError(name)
@@ -57,6 +59,8 @@ def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None,
     out["wall_s"] = round(time.time() - t0, 1)
     if hasattr(sched, "full_adoption_rate"):
         out["full_adoption"] = round(sched.full_adoption_rate, 3)
+    if getattr(sched, "multi_region", False):
+        out["arbitrage_moves"] = sched.arbitrage_moves
     return out
 
 

@@ -19,12 +19,13 @@ def main():
     ap.add_argument("--only", default=None,
                     help="run a single bench: micro|endtoend|multitask|"
                          "interference|migration|composition|arrival|"
-                         "roofline|spot")
+                         "roofline|spot|multiregion")
     args = ap.parse_args()
 
     from . import (bench_arrival, bench_composition, bench_endtoend,
                    bench_interference, bench_micro, bench_migration,
-                   bench_multitask, bench_roofline, bench_spot)
+                   bench_multiregion, bench_multitask, bench_roofline,
+                   bench_spot)
     benches = {
         "micro": lambda: bench_micro.run(quick=args.quick),
         "endtoend": lambda: bench_endtoend.run(quick=args.quick,
@@ -36,6 +37,8 @@ def main():
         "arrival": lambda: bench_arrival.run(quick=args.quick),
         "roofline": lambda: bench_roofline.run(quick=args.quick),
         "spot": lambda: bench_spot.run(quick=args.quick, full=args.full),
+        "multiregion": lambda: bench_multiregion.run(quick=args.quick,
+                                                     full=args.full),
     }
     todo = [args.only] if args.only else list(benches)
     t0 = time.time()

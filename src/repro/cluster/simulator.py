@@ -1,9 +1,11 @@
 """High-fidelity event-driven simulator of a cloud-based cluster (paper §5).
 
-The scheduler under test operates exactly as in a real deployment: it sees
-only task demands, live placements and observed throughputs (through the
-ThroughputMonitor hooks) and returns abstract cluster configurations.  The
-simulated cloud models:
+Public API: ``Simulator(catalog, jobs, scheduler, SimConfig).run() ->
+Metrics``.  The scheduler under test operates exactly as in a real
+deployment: it sees only task demands, live placements and observed
+throughputs (through the ThroughputMonitor hooks) and returns abstract
+cluster configurations (docs/ARCHITECTURE.md walks through the full
+scheduling-round data flow).  The simulated cloud models:
 
 * instance acquisition + setup delays (Table 1; acquisition ~ 6+Exp(13) s
   clipped to [6, 83] (mean ≈ 19 s), setup ~ U[140, 251] s),
@@ -19,11 +21,21 @@ simulated cloud models:
   A revocation arrives as a 2-minute notice (``preemption_notice_s``) visible
   to the scheduler via ``SchedulerView.revoked`` before the instance is
   reclaimed; whatever is still on the instance at reclaim time loses at most
-  one checkpoint period of progress (same machinery as failures).
+  one checkpoint period of progress (same machinery as failures),
+* an optional multi-region market (``core.catalog.multi_region_catalog``):
+  billing is region-scoped (``Metrics.cost_by_region``), preemption hazards
+  are region-correlated (every type shares its region's price pressure ×
+  ``Region.hazard_scale``), a cross-region migration pays the checkpoint
+  transfer time on top of the Table-7 checkpoint delay plus an egress fee
+  billed exactly once per move (restoring a checkpoint stranded in another
+  region after a reclaim/failure pays the same charge), and per-region
+  ``max_instances`` capacity is enforced by denying launches into full
+  regions (the tasks stay put / pending and are repacked next round).
 
-The spot layer is strictly additive: with a static (or absent) price model no
-extra events are scheduled and no extra RNG draws occur, so on-demand runs
-are bit-for-bit identical to the seed simulator.
+The spot and multi-region layers are strictly additive: with a static (or
+absent) price model and a single-region catalog no extra events are
+scheduled and no extra RNG draws occur, so on-demand runs are bit-for-bit
+identical to the seed simulator.
 
 Progress accounting is lazy: every state change accrues Δt into cost /
 allocation / idle-time integrals and re-projects job-completion events
@@ -43,7 +55,7 @@ from ..core.catalog import Catalog, FAMILIES
 from ..core.cluster_types import ClusterConfig, Job, TaskSet
 from ..core.plan import LiveInstance, diff_configs
 from ..core.scheduler import SchedulerBase, SchedulerView
-from ..core.workloads import M_TRUE, WORKLOADS
+from ..core.workloads import M_TRUE, WORKLOADS, checkpoint_size_gb
 
 # task states
 PENDING, WAITING, CKPT, LAUNCH, RUNNING = range(5)
@@ -77,6 +89,11 @@ class _TaskState:
     epoch: int = 0  # bumps invalidate in-flight ckpt/launch events
     migrations: int = 0
     placed_once: bool = False
+    # multi-region: region where the durable checkpoint lives (for pricing a
+    # cross-region restore after a reclaim/failure), and any pending restore
+    # transfer time to add to the next launch
+    ckpt_region: Optional[int] = None
+    restore_transfer_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -131,6 +148,11 @@ class Metrics:
     preemption_notices: int = 0
     preemptions: int = 0
     end_time: float = 0.0
+    # multi-region accounting (populated only for multi-region catalogs)
+    egress_cost: float = 0.0
+    cross_region_migrations: int = 0
+    capacity_denied: int = 0
+    cost_by_region: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def avg_jct_hours(self) -> float:
@@ -170,6 +192,12 @@ class Metrics:
              "preemptions": self.preemptions}
         d.update({f"alloc_{k}": round(v, 4)
                   for k, v in self.resource_allocation().items()})
+        if self.cost_by_region:  # multi-region runs only
+            d["egress_cost"] = round(self.egress_cost, 2)
+            d["cross_region_migrations"] = self.cross_region_migrations
+            d["capacity_denied"] = self.capacity_denied
+            d.update({f"cost_{name}": round(v, 2)
+                      for name, v in sorted(self.cost_by_region.items())})
         return d
 
 
@@ -209,6 +237,15 @@ class Simulator:
         pm = catalog.price_model
         self._spot = pm is not None and not pm.is_static
         self._jobs_outstanding = len(jobs)
+        # Multi-region: region-scoped billing, cross-region migration costs,
+        # per-region capacity.  All gated on catalog.regions so single-region
+        # runs take none of these paths.
+        self._regions = catalog.regions
+        if self._regions is not None:
+            self._region_ids = catalog.region_ids
+            self._region_name_of_type = [self._regions[r].name
+                                         for r in self._region_ids.tolist()]
+            self.metrics.cost_by_region = {r.name: 0.0 for r in self._regions}
         if self._spot:
             self._spot_rng = np.random.default_rng(self.cfg.seed + 0x5B07)
             self._cur_costs = pm.prices_at(catalog.costs, 0.0)
@@ -259,7 +296,11 @@ class Simulator:
             m.cap_integral += self.catalog.capacities[inst.type_index] * dt
             m.alloc_integral += self._alloc_of(inst) * dt
             if self._spot:  # integrate the piecewise-constant spot price
-                m.total_cost += dt / 3600.0 * self._cur_costs[inst.type_index]
+                amt = dt / 3600.0 * self._cur_costs[inst.type_index]
+                m.total_cost += amt
+                if self._regions is not None:
+                    m.cost_by_region[
+                        self._region_name_of_type[inst.type_index]] += amt
         for js in self.jobs.values():
             if not js.arrived or js.done_t is not None:
                 continue
@@ -323,6 +364,26 @@ class Simulator:
             self._touch_job(j)
 
     # -------------------------------------------------------------- executor
+    def _region_has_capacity(self, k: int) -> bool:
+        """May a fresh instance of type k launch, or is its region at its
+        ``max_instances`` cap?  Counts every alive instance (incl. draining:
+        they still bill and occupy regional quota)."""
+        if self._regions is None:
+            return True
+        r = int(self._region_ids[k])
+        cap = self._regions[r].max_instances
+        if cap is None:
+            return True
+        n = sum(1 for i in self.instances.values()
+                if i.alive and int(self._region_ids[i.type_index]) == r)
+        return n < cap
+
+    def _launch_or_deny(self, k: int) -> Optional[_Instance]:
+        if self._region_has_capacity(k):
+            return self._new_instance(k)
+        self.metrics.capacity_denied += 1
+        return None  # slot unfilled: its tasks stay put / pending
+
     def _new_instance(self, k: int) -> _Instance:
         iid = next(self._iid)
         acq = float(np.clip(6.0 + self.rng.exponential(13.0), 6.0, 83.0))
@@ -341,8 +402,12 @@ class Simulator:
             return
         inst.terminated_t = self.now
         if not self._spot:  # spot billing is integrated in _accrue instead
-            self.metrics.total_cost += ((self.now - inst.request_t) / 3600.0
-                                        * self.catalog.costs[inst.type_index])
+            amt = ((self.now - inst.request_t) / 3600.0
+                   * self.catalog.costs[inst.type_index])
+            self.metrics.total_cost += amt
+            if self._regions is not None:
+                self.metrics.cost_by_region[
+                    self._region_name_of_type[inst.type_index]] += amt
 
     def _maybe_finish_drain(self, inst: _Instance):
         if inst.draining and inst.alive and not inst.residents and not inst.assigned:
@@ -358,10 +423,28 @@ class Simulator:
         if inst.ready:
             ts.state = LAUNCH
             w = WORKLOADS[ts.workload]
-            delay = w.launch_delay_s * self.cfg.migration_delay_scale
+            delay = (w.launch_delay_s * self.cfg.migration_delay_scale
+                     + ts.restore_transfer_s)
+            ts.restore_transfer_s = 0.0
             self._push(self.now + delay, LAUNCH_DONE, (tid, ts.epoch))
         else:
             ts.state = WAITING
+
+    def _cross_region_charge(self, workload: int, r_s: int, r_d: int) -> float:
+        """Extra checkpoint-transfer delay for moving a checkpoint from
+        region ``r_s`` to ``r_d`` (live migration *or* a restore after a
+        reclaim); also bills the egress fee — exactly once per move, to the
+        source region.  Returns 0 for intra-region moves."""
+        if r_s == r_d:
+            return 0.0
+        gb = checkpoint_size_gb(workload)
+        fee = self.catalog.transfer.egress_usd(r_s, r_d, gb)
+        self.metrics.total_cost += fee
+        self.metrics.egress_cost += fee
+        self.metrics.cost_by_region[self._regions[r_s].name] += fee
+        self.metrics.cross_region_migrations += 1
+        return (self.catalog.transfer.transfer_time_s(r_s, r_d, gb)
+                * self.cfg.migration_delay_scale)
 
     def _make_pending(self, tid: int):
         ts = self.tasks[tid]
@@ -369,6 +452,7 @@ class Simulator:
         ts.src = None
         ts.dst = None
         ts.epoch += 1
+        ts.restore_transfer_s = 0.0  # ckpt_region keeps the durable copy
 
     def _execute_config(self, config: ClusterConfig):
         live = self._live_instances()
@@ -381,23 +465,25 @@ class Simulator:
         # its current tasks (a non-spot-aware scheduler rides out the
         # notice); a zero-overlap match would land brand-new tasks on a
         # doomed instance, so it launches fresh instead.
-        slot_inst: Dict[int, _Instance] = {}
+        slot_inst: Dict[int, Optional[_Instance]] = {}
         for slot, (k, tids, matched) in enumerate(plan.slots):
             if matched is not None:
                 minst = self.instances[matched]
                 if (self._spot and minst.preempt_deadline is not None
                         and not (set(tids) & minst.assigned)):
-                    slot_inst[slot] = self._new_instance(k)
+                    slot_inst[slot] = self._launch_or_deny(k)
                 else:
                     slot_inst[slot] = minst
             else:
-                slot_inst[slot] = self._new_instance(k)
+                slot_inst[slot] = self._launch_or_deny(k)
 
         # Migrations.  Tasks mid-flight (WAITING/CKPT/LAUNCH) are pinned: the
         # executor defers moving them until they are RUNNING again.
         for mig in plan.migrations:
             ts = self.tasks[mig.task_id]
             dst = slot_inst[mig.dst_slot]
+            if dst is None:
+                continue  # launch denied (region at capacity): task stays put
             if ts.state in (WAITING, CKPT, LAUNCH):
                 continue  # pinned
             if ts.dst == dst.iid:
@@ -412,6 +498,12 @@ class Simulator:
                 dst.assigned.add(mig.task_id)
                 w = WORKLOADS[ts.workload]
                 delay = w.checkpoint_delay_s * self.cfg.migration_delay_scale
+                if self._regions is not None:
+                    r_d = int(self._region_ids[dst.type_index])
+                    delay += self._cross_region_charge(
+                        ts.workload, int(self._region_ids[src.type_index]),
+                        r_d)
+                    ts.ckpt_region = r_d  # checkpoint lands at the destination
                 self._push(self.now + delay, CKPT_DONE, (mig.task_id, ts.epoch))
                 ts.migrations += 1
                 self.metrics.migrations += 1
@@ -424,6 +516,14 @@ class Simulator:
                     ts.migrations += 1
                     self.metrics.migrations += 1
                 ts.placed_once = True
+                # restoring a checkpoint stranded in another region (e.g.
+                # after a reclaim) pays the same transfer + egress as a live
+                # cross-region migration
+                if self._regions is not None and ts.ckpt_region is not None:
+                    r_d = int(self._region_ids[dst.type_index])
+                    ts.restore_transfer_s = self._cross_region_charge(
+                        ts.workload, ts.ckpt_region, r_d)
+                    ts.ckpt_region = r_d
                 self._start_launch(mig.task_id)
 
         # Terminations: instances not matched by any slot.
@@ -497,10 +597,15 @@ class Simulator:
                 remaining[t] = max(js.job.total_iters - js.iters_done, 0.0)
         revoked = {i.iid for i in self._live_instances()
                    if i.preempt_deadline is not None}
+        ckpt_region = None
+        if self._regions is not None:
+            ckpt_region = {t: self.tasks[t].ckpt_region for t in tids
+                           if self.tasks[t].ckpt_region is not None}
         view = SchedulerView(
             time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
             task_workload={t: self.tasks[t].workload for t in tids},
-            remaining_s=remaining or None, revoked=revoked or None)
+            remaining_s=remaining or None, revoked=revoked or None,
+            task_ckpt_region=ckpt_region or None)
         config = self.scheduler.schedule(view)
         self._execute_config(config)
 
@@ -549,6 +654,8 @@ class Simulator:
         inst = self.instances[ts.dst]
         ts.state = RUNNING
         ts.src = inst.iid
+        if self._regions is not None:  # checkpoints now written here
+            ts.ckpt_region = int(self._region_ids[inst.type_index])
         inst.residents.add(tid)
         self._touch_instance_jobs(inst.iid)
 

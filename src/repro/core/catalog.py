@@ -1,19 +1,35 @@
-"""Instance-type catalog.
+"""Instance-type catalog: static specs, spot-price dynamics, and regions.
 
 The paper evaluates 21 AWS EC2 instance types from 3 families (P3 GPU
 instances, C7i compute-optimized, R7i memory-optimized).  We encode the real
 published specs/prices (us-east-1, on-demand, 2024).  Resources are the
-3-vector (GPU, CPU, RAM-GB) used throughout the paper.
+3-vector (GPU, CPU, RAM-GB) used throughout the paper.  ``example_catalog``
+reproduces Table 3 of the paper and is used by unit tests to check the
+Algorithm-1 walkthrough verbatim.
 
-``example_catalog`` reproduces Table 3 of the paper and is used by unit tests
-to check the Algorithm-1 walkthrough verbatim.
+Public API (see docs/ARCHITECTURE.md for how it plugs into scheduling):
 
-Beyond the paper, the catalog supports *time-varying* prices through a
-``PriceModel`` attached to the ``Catalog``: ``catalog.at(time_s)`` returns a
-snapshot view with current costs (and the Algorithm-1 descending-cost order
-recomputed), so reservation prices and packing decisions track spot-market
-drift.  The static model is the identity — ``at`` returns the catalog itself —
-so on-demand behaviour is bit-for-bit unchanged.
+* ``InstanceType`` / ``Catalog`` / ``aws_catalog()`` / ``table3_catalog()`` —
+  the vectorized (capacities, costs, descending-cost order) view every
+  pricing and packing routine consumes.
+* ``PriceModel`` (``static`` / ``mean_reverting`` / ``trace``) — maps (base
+  on-demand costs, time) → current hourly prices; ``catalog.at(time_s)``
+  returns a snapshot with current costs and the Algorithm-1 order recomputed.
+  The static model is the identity — ``at`` returns the catalog itself — so
+  on-demand behaviour is bit-for-bit unchanged.
+* ``Region`` / ``TransferMatrix`` / ``multi_region_catalog()`` — the
+  multi-region layer: each region carries its own price model, base-price
+  scale, preemption-hazard scale and optional instance-count capacity, and
+  the catalog is expanded to region-qualified types (``region-0/p3.2xlarge``)
+  whose prices move with *their region's* market.  ``catalog.at(time_s)``
+  then returns region-qualified snapshots, and the cross-region
+  ``TransferMatrix`` (egress $/GB + inter-region bandwidth) prices the
+  checkpoint-transfer penalty a cross-region migration pays.
+  ``dispersed_demo_regions()`` builds the bundled 3-region staggered
+  cheap-window market used by benchmarks and tests.
+
+Single-region catalogs carry ``regions=None`` and take none of the
+multi-region code paths: their behaviour is bit-for-bit the PR-1 catalog.
 """
 from __future__ import annotations
 
@@ -210,6 +226,121 @@ class TracePriceModel(PriceModel):
         return np.asarray(m)
 
 
+# --------------------------------------------------------------------------
+# regions (multi-region spot-arbitrage layer)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One cloud region (an independent spot market).
+
+    price_model   : region-local price dynamics (None/static = on-demand)
+    cost_scale    : multiplier on the base on-demand prices (static regional
+                    price dispersion, e.g. us-west is 8 % dearer)
+    hazard_scale  : multiplier on the preemption hazard of every instance in
+                    the region — hazards are *region-correlated*: all types
+                    in the region share the regional market's price pressure
+                    scaled by this factor
+    max_instances : per-region capacity (simultaneously alive instances);
+                    None = unlimited.  The simulator denies launches beyond
+                    it and the multi-region scheduler packs around full
+                    regions.
+    """
+
+    name: str
+    price_model: Optional[PriceModel] = None
+    cost_scale: float = 1.0
+    hazard_scale: float = 1.0
+    max_instances: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferMatrix:
+    """Cross-region data-movement cost model.
+
+    egress_usd_per_gb : (R, R) — $/GB billed to the *source* region when a
+                        checkpoint leaves it (diagonal is 0)
+    bandwidth_gbps    : (R, R) — inter-region throughput in Gbit/s, used to
+                        turn checkpoint size into transfer *time* (diagonal
+                        is ignored: intra-region moves pay no transfer)
+    """
+
+    egress_usd_per_gb: np.ndarray
+    bandwidth_gbps: np.ndarray
+
+    @staticmethod
+    def uniform(n_regions: int, egress_usd_per_gb: float = 0.02,
+                bandwidth_gbps: float = 5.0) -> "TransferMatrix":
+        """AWS-like defaults: $0.02/GB inter-region egress, ~5 Gbit/s per
+        checkpoint stream."""
+        e = np.full((n_regions, n_regions), float(egress_usd_per_gb))
+        b = np.full((n_regions, n_regions), float(bandwidth_gbps))
+        np.fill_diagonal(e, 0.0)
+        return TransferMatrix(e, b)
+
+    def transfer_time_s(self, src: int, dst: int, size_gb: float) -> float:
+        if src == dst:
+            return 0.0
+        return float(size_gb) * 8.0 / float(self.bandwidth_gbps[src, dst])
+
+    def egress_usd(self, src: int, dst: int, size_gb: float) -> float:
+        if src == dst:
+            return 0.0
+        return float(size_gb) * float(self.egress_usd_per_gb[src, dst])
+
+
+class RegionPriceModel(PriceModel):
+    """Composite price model for a region-expanded catalog.
+
+    The expanded catalog lays types out as R consecutive blocks of
+    ``n_base`` types; each block's multipliers come from that region's own
+    model.  Preemption pressure is additionally scaled per region
+    (``Region.hazard_scale``), which is what makes hazards
+    region-correlated: every type in a region shares the regional market's
+    pressure.
+    """
+
+    kind = "multi-region"
+
+    def __init__(self, models: Sequence[PriceModel],
+                 hazard_scales: Sequence[float], n_base: int):
+        self.models = tuple(m if m is not None else PriceModel.static()
+                            for m in models)
+        self.hazard_scales = tuple(float(h) for h in hazard_scales)
+        self.n_base = int(n_base)
+        self.is_static = all(m.is_static for m in self.models)
+        means = []
+        for m in self.models:
+            mm = np.asarray(m.mean_multiplier, dtype=np.float64)
+            means.append(np.full(self.n_base, float(mm)) if mm.ndim == 0
+                         else np.broadcast_to(mm, (self.n_base,)))
+        self.mean_multiplier = np.concatenate(means)
+        # the simulator samples prices no coarser than the finest sub-grid
+        steps = [m.step_s for m in self.models if hasattr(m, "step_s")]
+        if steps:
+            self.step_s = min(steps)
+        # trace sub-models are billed exactly at their own breakpoints
+        times = sorted({float(t) for m in self.models
+                        for t in np.asarray(getattr(m, "times_s", ()),
+                                            dtype=np.float64).tolist()})
+        if times:
+            self.times_s = np.asarray(times, dtype=np.float64)
+
+    def _check(self, n_types: int) -> None:
+        assert n_types == self.n_base * len(self.models), \
+            f"expected {self.n_base}x{len(self.models)} types, got {n_types}"
+
+    def multipliers_at(self, n_types: int, time_s: float) -> np.ndarray:
+        self._check(n_types)
+        return np.concatenate([m.multipliers_at(self.n_base, time_s)
+                               for m in self.models])
+
+    def pressure_at(self, n_types: int, time_s: float) -> np.ndarray:
+        self._check(n_types)
+        return np.concatenate([m.pressure_at(self.n_base, time_s) * h
+                               for m, h in zip(self.models,
+                                               self.hazard_scales)])
+
+
 @dataclasses.dataclass(frozen=True)
 class Catalog:
     """Vectorized view over a set of instance types.
@@ -221,6 +352,11 @@ class Catalog:
     order_desc : indices of types sorted by descending cost (Algorithm 1 order)
     price_model : optional time-varying price source; ``at(time_s)`` snapshots
     base_costs : on-demand reference prices (None until a snapshot is taken)
+    regions    : multi-region catalogs only — tuple of ``Region``
+    region_ids : (K,) int64 — region index of each type (None = single-region)
+    base_index : (K,) int64 — index of each type in the un-expanded base
+                 catalog (same base_index across regions = same hardware)
+    transfer   : cross-region ``TransferMatrix`` (multi-region only)
     """
 
     types: tuple
@@ -230,6 +366,10 @@ class Catalog:
     order_desc: np.ndarray
     price_model: Optional[PriceModel] = None
     base_costs: Optional[np.ndarray] = None
+    regions: Optional[tuple] = None
+    region_ids: Optional[np.ndarray] = None
+    base_index: Optional[np.ndarray] = None
+    transfer: Optional[TransferMatrix] = None
 
     @staticmethod
     def from_types(types: Sequence[InstanceType],
@@ -249,6 +389,39 @@ class Catalog:
             if t.name == name:
                 return i
         raise KeyError(name)
+
+    # -- regions -------------------------------------------------------------
+    @property
+    def is_multi_region(self) -> bool:
+        return self.regions is not None
+
+    def region_of(self, k: int) -> int:
+        return int(self.region_ids[k])
+
+    def region_index(self, name: str) -> int:
+        for i, r in enumerate(self.regions):
+            if r.name == name:
+                return i
+        raise KeyError(name)
+
+    def region_type_mask(self, region: int) -> np.ndarray:
+        """(K,) bool: which types live in ``region`` (index)."""
+        return self.region_ids == int(region)
+
+    def cheapest_copy(self, k: int,
+                      type_mask: Optional[np.ndarray] = None) -> int:
+        """Index of the cheapest same-hardware copy of type ``k`` across
+        regions (``k`` itself on single-region catalogs or when every copy
+        is masked out).  First-lowest-index tie-break."""
+        if self.base_index is None:
+            return int(k)
+        cand = self.base_index == self.base_index[k]
+        if type_mask is not None:
+            cand = cand & np.asarray(type_mask)
+        ks = np.nonzero(cand)[0]
+        if ks.size == 0:
+            return int(k)
+        return int(ks[np.argmin(self.costs[ks])])
 
     # -- time-varying prices ------------------------------------------------
     def with_price_model(self, price_model: Optional[PriceModel]) -> "Catalog":
@@ -276,3 +449,64 @@ def aws_catalog(price_model: Optional[PriceModel] = None) -> Catalog:
 
 def table3_catalog() -> Catalog:
     return Catalog.from_types(example_catalog())
+
+
+# --------------------------------------------------------------------------
+# multi-region construction
+# --------------------------------------------------------------------------
+def multi_region_catalog(regions: Sequence[Region],
+                         base_types: Sequence[InstanceType] = AWS_CATALOG,
+                         transfer: Optional[TransferMatrix] = None) -> Catalog:
+    """Expand ``base_types`` across ``regions`` into a region-qualified catalog.
+
+    Types are laid out as R consecutive blocks of the base catalog; names are
+    qualified (``us-east/p3.2xlarge``), base prices are scaled by each
+    region's ``cost_scale`` and move with its ``price_model`` (the composite
+    ``RegionPriceModel`` keeps every region's market independent).  The
+    default ``transfer`` is ``TransferMatrix.uniform(R)``.
+    """
+    regions = tuple(regions)
+    base = tuple(base_types)
+    assert regions, "need at least one region"
+    types = []
+    rids, bidx = [], []
+    for r_i, region in enumerate(regions):
+        for b_i, t in enumerate(base):
+            types.append(InstanceType(f"{region.name}/{t.name}", t.family,
+                                      t.capacity,
+                                      t.hourly_cost * region.cost_scale))
+            rids.append(r_i)
+            bidx.append(b_i)
+    pm: Optional[PriceModel] = None
+    if any(r.price_model is not None for r in regions):
+        pm = RegionPriceModel([r.price_model for r in regions],
+                              [r.hazard_scale for r in regions], len(base))
+    cat = Catalog.from_types(types, pm)
+    if transfer is None:
+        transfer = TransferMatrix.uniform(len(regions))
+    return dataclasses.replace(
+        cat, regions=regions,
+        region_ids=np.asarray(rids, dtype=np.int64),
+        base_index=np.asarray(bidx, dtype=np.int64), transfer=transfer)
+
+
+def dispersed_demo_regions(n_regions: int = 3, low: float = 0.25,
+                           high: float = 0.85, period_s: float = 3 * 3600.0,
+                           horizon_s: float = 14 * 86400.0) -> tuple:
+    """The bundled dispersed-price multi-region market (benchmarks + tests).
+
+    Each region replays a staggered square-wave price trace: exactly one
+    region is in its cheap window (``low`` × on-demand) at any instant while
+    the others sit at ``high`` × on-demand, rotating every
+    ``period_s / n_regions``.  A single-region scheduler therefore pays
+    ``low`` only 1/R of the time; a multi-region one can chase the cheap
+    window continuously — the price dispersion spot-arbitrage exploits.
+    """
+    step = period_s / n_regions
+    times = np.arange(0.0, horizon_s, step)
+    regions = []
+    for r in range(n_regions):
+        mult = np.where(np.arange(len(times)) % n_regions == r, low, high)
+        regions.append(Region(f"region-{r}",
+                              price_model=PriceModel.trace(times, mult)))
+    return tuple(regions)

@@ -58,15 +58,23 @@ def predicted_set_tnrp(rows: Sequence[int], workloads: np.ndarray,
 # --------------------------------------------------------------------------
 def _pack_python(demand: np.ndarray, workloads: np.ndarray, rp: np.ndarray,
                  job_rp: Optional[np.ndarray], catalog: Catalog,
-                 pairwise: np.ndarray) -> List[Tuple[int, List[int]]]:
+                 pairwise: np.ndarray,
+                 type_mask: Optional[np.ndarray] = None,
+                 region_budget: Optional[np.ndarray] = None
+                 ) -> List[Tuple[int, List[int]]]:
     T = demand.shape[0]
     unassigned = set(range(T))
     out: List[Tuple[int, List[int]]] = []
     for k in catalog.order_desc.tolist():  # descending cost (Line 2)
+        if type_mask is not None and not type_mask[k]:
+            continue  # type unavailable (region restriction)
+        rid = catalog.region_of(k) if region_budget is not None else None
         fam = catalog.family_ids[k]
         d = demand[:, fam, :]
         cost = catalog.costs[k]
         while True:  # Line 4: keep provisioning this type
+            if rid is not None and region_budget[rid] <= 0:
+                break  # region at its instance-count cap
             cap = catalog.capacities[k].copy()
             members: List[int] = []
             cur = 0.0
@@ -89,6 +97,8 @@ def _pack_python(demand: np.ndarray, workloads: np.ndarray, rp: np.ndarray,
             if members and cur >= cost - EPS:  # Line 14: cost-efficient
                 out.append((k, members))
                 unassigned -= set(members)
+                if rid is not None:
+                    region_budget[rid] -= 1
             else:
                 break  # Line 17: move to a cheaper type
     return out
@@ -99,17 +109,25 @@ def _pack_python(demand: np.ndarray, workloads: np.ndarray, rp: np.ndarray,
 # --------------------------------------------------------------------------
 def _pack_numpy(demand: np.ndarray, workloads: np.ndarray, rp: np.ndarray,
                 job_rp: Optional[np.ndarray], catalog: Catalog,
-                pairwise: np.ndarray) -> List[Tuple[int, List[int]]]:
+                pairwise: np.ndarray,
+                type_mask: Optional[np.ndarray] = None,
+                region_budget: Optional[np.ndarray] = None
+                ) -> List[Tuple[int, List[int]]]:
     T = demand.shape[0]
     unassigned = np.ones(T, dtype=bool)
     out: List[Tuple[int, List[int]]] = []
     has_jr = job_rp is not None
     for k in catalog.order_desc.tolist():
+        if type_mask is not None and not type_mask[k]:
+            continue  # type unavailable (region restriction)
+        rid = catalog.region_of(k) if region_budget is not None else None
         fam = catalog.family_ids[k]
         d = demand[:, fam, :]  # (T, R)
         cost = catalog.costs[k]
         cap_full = catalog.capacities[k]
         while unassigned.any():
+            if rid is not None and region_budget[rid] <= 0:
+                break  # region at its instance-count cap
             cap = cap_full.copy()
             members: List[int] = []
             m_w = np.zeros(0, dtype=np.int64)  # member workloads
@@ -152,6 +170,8 @@ def _pack_numpy(demand: np.ndarray, workloads: np.ndarray, rp: np.ndarray,
             if members and cur >= cost - EPS:
                 out.append((k, members))
                 unassigned[members] = False
+                if rid is not None:
+                    region_budget[rid] -= 1
             else:
                 break
     return out
@@ -167,20 +187,38 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
                          engine: str = "numpy",
                          rp: Optional[np.ndarray] = None,
                          job_rp: Optional[np.ndarray] = None,
-                         time_s: Optional[float] = None) -> ClusterConfig:
+                         time_s: Optional[float] = None,
+                         type_mask: Optional[np.ndarray] = None,
+                         region_caps: Optional[Sequence[Optional[int]]] = None
+                         ) -> ClusterConfig:
     """Run Algorithm 1 over ``tasks`` and return the packed configuration.
 
     ``rp``/``job_rp`` may be precomputed (partial reconfiguration passes the
     system-wide job RP sums so multi-task penalties count non-migrating
     siblings too).  ``time_s`` snapshots a spot catalog at the given instant
     so packing order and reservation prices follow current prices.
+    ``type_mask`` ((K,) bool) excludes types from both reservation prices and
+    provisioning — used to restrict packing to one region of a multi-region
+    catalog.  ``region_caps`` (one optional int per region) bounds how many
+    instances the pack may emit per region: once a region's budget is spent,
+    provisioning overflows to the next type in descending-cost order, so
+    capped-but-cheap regions fill to their cap instead of starving the
+    overflow.  On a region-expanded catalog without mask or caps, Algorithm 1
+    prices candidate instances across every region (region-qualified types
+    are ordinary types to it).
     """
     if time_s is not None:
         catalog = catalog.at(time_s)
     if len(tasks) == 0:
         return ClusterConfig([])
+    region_budget = None
+    if region_caps is not None and catalog.region_ids is not None \
+            and any(c is not None for c in region_caps):
+        big = np.iinfo(np.int64).max
+        region_budget = np.array([big if c is None else int(c)
+                                  for c in region_caps], dtype=np.int64)
     if rp is None:
-        rp = reservation_prices(tasks, catalog)
+        rp = reservation_prices(tasks, catalog, type_mask=type_mask)
     if multi_task_aware and job_rp is None:
         job_rp = job_rp_sums(tasks, rp)
     if not multi_task_aware:
@@ -191,25 +229,65 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
         n = int(tasks.workloads.max()) + 1 if len(tasks) else 1
         pairwise = np.ones((max(n, 1), max(n, 1)))
     packers = {"python": _pack_python, "numpy": _pack_numpy}
-    if engine == "jax":
+    if engine == "jax" and type_mask is None and region_budget is None:
         from . import engine_jax
         packed = engine_jax.pack_jax(tasks.demand_by_family, tasks.workloads,
                                      rp, job_rp, catalog, pairwise)
     else:
-        packed = packers[engine](tasks.demand_by_family, tasks.workloads, rp,
-                                 job_rp, catalog, pairwise)
+        # the jax engine has no masking/budget support; such packs take the
+        # equivalent numpy path
+        packer = _pack_numpy if engine == "jax" else packers[engine]
+        packed = packer(tasks.demand_by_family, tasks.workloads, rp,
+                        job_rp, catalog, pairwise, type_mask, region_budget)
     assignments: List[Assignment] = [
         (k, tuple(int(tasks.ids[r]) for r in rows)) for k, rows in packed
     ]
+    if region_budget is not None:
+        # Overflow re-pack: RP is the *global* cheapest price, so once a
+        # cheap region's budget is spent, dearer regions' types can never
+        # look cost-efficient against it and the overflow would starve.
+        # Re-anchor reservation prices to the still-available types and pack
+        # the remainder (repeat until everyone is placed or nothing is
+        # available — truly full markets leave tasks pending for the
+        # simulator/next round to retry).
+        sub_packer = _pack_numpy if engine == "jax" else packers[engine]
+        placed = {t for _, ts in assignments for t in ts}
+        left = [int(t) for t in tasks.ids.tolist() if t not in placed]
+        while left:
+            avail = region_budget[catalog.region_ids] > 0
+            if type_mask is not None:
+                avail = avail & np.asarray(type_mask)
+            if not avail.any():
+                break
+            sub = tasks.subset(left)
+            try:
+                rp_sub = reservation_prices(sub, catalog, type_mask=avail)
+            except ValueError:
+                break  # remainder fits no available type
+            # multi-task penalties keep the *system-wide* job RP sums (already
+            # placed siblings still count), same as partial_reconfiguration
+            jr_sub = None
+            if job_rp is not None:
+                jr_sub = job_rp[np.array([tasks.row(t) for t in left])]
+            sub_packed = sub_packer(sub.demand_by_family, sub.workloads,
+                                    rp_sub, jr_sub, catalog, pairwise,
+                                    avail, region_budget)
+            if not sub_packed:
+                break
+            assignments += [(k, tuple(int(sub.ids[r]) for r in rows))
+                            for k, rows in sub_packed]
+            placed = {t for _, ts in assignments for t in ts}
+            left = [t for t in left if t not in placed]
     return ClusterConfig(assignments)
 
 
 def evaluate_assignments(assignments: Sequence[Assignment], tasks: TaskSet,
                          catalog: Catalog, table: Optional[ThroughputTable],
-                         multi_task_aware: bool = True):
+                         multi_task_aware: bool = True,
+                         type_mask: Optional[np.ndarray] = None):
     """Per-instance (TNRP(T_i), C_i) for *live* placements, using
     exact-or-pairwise table lookups of the actual co-location sets."""
-    rp = reservation_prices(tasks, catalog)
+    rp = reservation_prices(tasks, catalog, type_mask=type_mask)
     job_rp = job_rp_sums(tasks, rp) if multi_task_aware else None
     tnrps, costs = [], []
     for k, tids in assignments:

@@ -8,10 +8,24 @@ Keeps every live instance whose task set is still cost-efficient
 
 via Algorithm 1.  Multi-task RP penalties are computed over the *system-wide*
 job membership (non-migrating siblings still count).
+
+``type_mask`` restricts which instance types may be used (region pinning);
+it applies to reservation prices, the keep/evict cost-efficiency test,
+spare-capacity best-fit, and the Algorithm-1 repack.  ``region_caps``
+bounds per-region instance counts: kept instances consume their region's
+budget and the repack only provisions into the remaining headroom (overflow
+goes to the next-cheapest region).  On a multi-region catalog without mask
+or caps, repacked tasks are priced across every region's current prices.
+
+``keep_bonus(k, tids) -> $/h`` relaxes the keep test by the amortized cost
+of actually moving the set elsewhere — the multi-region scheduler uses it to
+charge cross-region checkpoint transfer + egress against the price gap, so
+instances are only evicted toward a cheaper market when the move pays for
+itself within the D-hat horizon.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Set
+from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -28,7 +42,13 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
                             interference_aware: bool = True,
                             multi_task_aware: bool = True,
                             engine: str = "numpy",
-                            time_s: Optional[float] = None) -> ClusterConfig:
+                            time_s: Optional[float] = None,
+                            type_mask: Optional[np.ndarray] = None,
+                            region_caps: Optional[
+                                Sequence[Optional[int]]] = None,
+                            keep_bonus: Optional[
+                                Callable[[int, Tuple[int, ...]], float]
+                            ] = None) -> ClusterConfig:
     if time_s is not None:
         catalog = catalog.at(time_s)  # all downstream prices from one instant
     live_task_ids = {t for _, tids in live_assignments for t in tids}
@@ -44,9 +64,15 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
     keep: List[Assignment] = []
     if trimmed:
         tnrps, costs = evaluate_assignments(trimmed, tasks, catalog, table,
-                                            multi_task_aware)
+                                            multi_task_aware,
+                                            type_mask=type_mask)
         for (k, tids), s, c in zip(trimmed, tnrps, costs):
-            if s >= c - EPS:
+            # keep_bonus amortizes the cost of *moving* this set (multi-region:
+            # checkpoint transfer + egress + relaunch over the D-hat horizon)
+            # into the keep test: evicting for a cheaper market only pays off
+            # if the price gap beats the migration penalty.
+            slack = keep_bonus(k, tids) if keep_bonus is not None else 0.0
+            if s >= c - slack - EPS:
                 keep.append((k, tids))
             else:  # no longer cost-efficient -> evict for re-packing
                 repack |= set(tids)
@@ -54,7 +80,7 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
     if not repack:
         return ClusterConfig(keep)
 
-    rp_all = reservation_prices(tasks, catalog)
+    rp_all = reservation_prices(tasks, catalog, type_mask=type_mask)
     job_rp_all = job_rp_sums(tasks, rp_all) if multi_task_aware else None
 
     # First, best-fit repack tasks into spare capacity on KEPT instances
@@ -73,7 +99,8 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
                 continue
             grown = (k, tuple(tids) + (tid,))
             s, c = evaluate_assignments([grown], tasks, catalog, table,
-                                        multi_task_aware)
+                                        multi_task_aware,
+                                        type_mask=type_mask)
             if s[0] < c[0] - EPS:
                 continue
             left = float(((catalog.capacities[k] - used - d)
@@ -87,11 +114,21 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
 
     if not repack:
         return ClusterConfig(keep)
+    # Kept instances consume their region's instance-count budget; the
+    # Algorithm-1 repack only gets the remaining headroom.
+    sub_caps = region_caps
+    if region_caps is not None and catalog.region_ids is not None:
+        kept_per_region = [0] * len(region_caps)
+        for k, _ in keep:
+            kept_per_region[catalog.region_of(k)] += 1
+        sub_caps = [None if c is None else max(int(c) - kept_per_region[r], 0)
+                    for r, c in enumerate(region_caps)]
     sub = tasks.subset(sorted(repack))
     rows = np.array([tasks.row(t) for t in sub.ids.tolist()])
     packed = full_reconfiguration(
         sub, catalog, table, interference_aware=interference_aware,
         multi_task_aware=multi_task_aware, engine=engine,
         rp=rp_all[rows],
-        job_rp=job_rp_all[rows] if job_rp_all is not None else None)
+        job_rp=job_rp_all[rows] if job_rp_all is not None else None,
+        type_mask=type_mask, region_caps=sub_caps)
     return ClusterConfig(keep + packed.assignments)

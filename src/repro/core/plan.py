@@ -14,7 +14,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from .catalog import Catalog
 from .cluster_types import ClusterConfig
-from .workloads import (INSTANCE_ACQUISITION_S, INSTANCE_SETUP_S, WORKLOADS)
+from .workloads import (INSTANCE_ACQUISITION_S, INSTANCE_SETUP_S, WORKLOADS,
+                        checkpoint_size_gb)
 
 
 @dataclasses.dataclass
@@ -84,26 +85,72 @@ def diff_configs(live: Sequence[LiveInstance], new: ClusterConfig) -> Plan:
     return Plan(slots, migrations, terminations, launches)
 
 
+def task_move_cost(catalog: Catalog, workload: int, src_k: int, dst_k: int,
+                   delay_scale: float = 1.0) -> float:
+    """$ cost of moving one resident task from an instance of type ``src_k``
+    to one of type ``dst_k``: checkpoint + launch delay billed idle on both
+    ends, plus — when the types live in different regions of a multi-region
+    catalog — the checkpoint transfer time (also billed on both ends) and
+    the egress fee.  Single source of truth for the per-task move price the
+    keep test, the arbitrage pass, and the plan M terms all consume."""
+    w = WORKLOADS[workload]
+    delay = (w.checkpoint_delay_s + w.launch_delay_s) * delay_scale
+    cost = 0.0
+    if catalog.transfer is not None and catalog.region_ids is not None:
+        r_s, r_d = catalog.region_of(src_k), catalog.region_of(dst_k)
+        if r_s != r_d:
+            gb = checkpoint_size_gb(workload)
+            delay += catalog.transfer.transfer_time_s(r_s, r_d, gb) * delay_scale
+            cost += catalog.transfer.egress_usd(r_s, r_d, gb)
+    return cost + delay / 3600.0 * float(catalog.costs[src_k]
+                                         + catalog.costs[dst_k])
+
+
 def migration_cost(plan: Plan, live: Sequence[LiveInstance], catalog: Catalog,
                    task_workload: Dict[int, int],
-                   delay_scale: float = 1.0) -> float:
+                   delay_scale: float = 1.0,
+                   task_ckpt_region: Optional[Dict[int, int]] = None) -> float:
     """Dollar estimate of a plan's migration overhead (§4.5 M term).
 
     Per migrated task: (checkpoint + launch delay) during which both the
     source and destination instances are provisioned but the task is idle.
     Per fresh launch: acquisition + setup time billed idle.
+
+    On a multi-region catalog, a migration whose source and destination
+    types live in different regions additionally pays the checkpoint
+    transfer: the transfer *time* (snapshot GB over the inter-region
+    bandwidth) billed idle on both ends, plus the egress fee in dollars —
+    the explicit penalty the cross-region reconfiguration trade-off weighs
+    against price dispersion.  ``task_ckpt_region`` (task id → region of its
+    durable checkpoint, from ``SchedulerView``) prices the same transfer for
+    *pending* tasks whose checkpoint was stranded by a reclaim, so restores
+    are charged in the model exactly as the simulator bills them.
     """
     by_id = {i.instance_id: i for i in live}
+    cross = catalog.transfer is not None and catalog.region_ids is not None
     cost = 0.0
     for slot in plan.launches:
         k = plan.slots[slot][0]
         cost += (INSTANCE_ACQUISITION_S + INSTANCE_SETUP_S) / 3600.0 * catalog.costs[k]
     for m in plan.migrations:
-        w = WORKLOADS[task_workload[m.task_id]]
-        delay = (w.checkpoint_delay_s + w.launch_delay_s) * delay_scale
+        wl = task_workload[m.task_id]
         dst_k = plan.slots[m.dst_slot][0]
-        involved = catalog.costs[dst_k]
         if m.src_instance is not None:
-            involved += catalog.costs[by_id[m.src_instance].type_index]
-        cost += delay / 3600.0 * involved
+            cost += task_move_cost(catalog, wl,
+                                   by_id[m.src_instance].type_index, dst_k,
+                                   delay_scale)
+            continue
+        # pending task: launch delay billed on the destination only, plus a
+        # cross-region restore of any stranded checkpoint
+        w = WORKLOADS[wl]
+        delay = (w.checkpoint_delay_s + w.launch_delay_s) * delay_scale
+        if cross and task_ckpt_region is not None:
+            r_s = task_ckpt_region.get(m.task_id)
+            r_d = catalog.region_of(dst_k)
+            if r_s is not None and r_s != r_d:
+                gb = checkpoint_size_gb(wl)
+                delay += (catalog.transfer.transfer_time_s(r_s, r_d, gb)
+                          * delay_scale)
+                cost += catalog.transfer.egress_usd(r_s, r_d, gb)
+        cost += delay / 3600.0 * float(catalog.costs[dst_k])
     return float(cost)

@@ -11,6 +11,15 @@ which reduces to tput·RP for single-task jobs.
 All price-consuming entry points accept an optional ``time_s``: when given,
 the catalog is snapshotted via ``catalog.at(time_s)`` so reservation prices
 track a spot market's current prices (static catalogs are unaffected).
+
+They also accept an optional ``type_mask`` ((K,) bool): masked-out types are
+treated as unavailable (priced at +inf).  Schedulers use it to restrict
+packing to one region or to route around regions at capacity.  On a
+region-expanded catalog (``core.catalog.multi_region_catalog``) plain
+``reservation_prices`` already prices candidates across *all* regions — the
+cheapest feasible region-qualified type wins; ``regional_reservation_prices``
+exposes the per-region breakdown for region-level analyses (examples, tests,
+price-dispersion diagnostics).
 """
 from __future__ import annotations
 
@@ -30,15 +39,24 @@ def feasibility_matrix(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
     return np.all(d <= catalog.capacities[None, :, :], axis=-1)
 
 
+def _masked_costs(tasks: TaskSet, catalog: Catalog,
+                  type_mask: Optional[np.ndarray]) -> np.ndarray:
+    """(T, K) per-type cost with infeasible / masked-out types at +inf."""
+    feas = feasibility_matrix(tasks, catalog)
+    costs = np.where(feas, catalog.costs[None, :], np.inf)
+    if type_mask is not None:
+        costs = np.where(np.asarray(type_mask)[None, :], costs, np.inf)
+    return costs
+
+
 def reservation_prices(tasks: TaskSet, catalog: Catalog,
-                       time_s: Optional[float] = None) -> np.ndarray:
+                       time_s: Optional[float] = None,
+                       type_mask: Optional[np.ndarray] = None) -> np.ndarray:
     """(T,) RP(τ).  Raises if some task fits no instance type (the paper
     removes such jobs from the trace; callers should filter first)."""
     if time_s is not None:
         catalog = catalog.at(time_s)
-    feas = feasibility_matrix(tasks, catalog)
-    costs = np.where(feas, catalog.costs[None, :], np.inf)
-    rp = costs.min(axis=1)
+    rp = _masked_costs(tasks, catalog, type_mask).min(axis=1)
     if np.any(~np.isfinite(rp)):
         bad = tasks.ids[~np.isfinite(rp)]
         raise ValueError(f"tasks {bad.tolist()} fit no instance type")
@@ -46,13 +64,29 @@ def reservation_prices(tasks: TaskSet, catalog: Catalog,
 
 
 def cheapest_type(tasks: TaskSet, catalog: Catalog,
-                  time_s: Optional[float] = None) -> np.ndarray:
+                  time_s: Optional[float] = None,
+                  type_mask: Optional[np.ndarray] = None) -> np.ndarray:
     """(T,) index of the reservation-price instance type of each task."""
     if time_s is not None:
         catalog = catalog.at(time_s)
-    feas = feasibility_matrix(tasks, catalog)
-    costs = np.where(feas, catalog.costs[None, :], np.inf)
-    return costs.argmin(axis=1)
+    return _masked_costs(tasks, catalog, type_mask).argmin(axis=1)
+
+
+def regional_reservation_prices(tasks: TaskSet, catalog: Catalog,
+                                time_s: Optional[float] = None) -> np.ndarray:
+    """(T, R) cheapest feasible price of each task *within each region* of a
+    multi-region catalog (+inf where a region has no feasible type).  The
+    row-wise minimum equals the global ``reservation_prices``; the spread
+    across columns is the per-task price dispersion arbitrage can capture."""
+    if time_s is not None:
+        catalog = catalog.at(time_s)
+    assert catalog.is_multi_region, "needs a multi_region_catalog"
+    costs = _masked_costs(tasks, catalog, None)
+    n_regions = len(catalog.regions)
+    out = np.full((len(tasks), n_regions), np.inf)
+    for r in range(n_regions):
+        out[:, r] = costs[:, catalog.region_type_mask(r)].min(axis=1)
+    return out
 
 
 def job_rp_sums(tasks: TaskSet, rp: np.ndarray) -> np.ndarray:

@@ -1,5 +1,23 @@
 """Scheduler interface + the Eva scheduler (ensemble of Full/Partial, §4.5).
 
+Public API (docs/ARCHITECTURE.md diagrams the round-by-round data flow):
+
+* ``SchedulerView`` — the per-round snapshot a scheduler sees: live tasks,
+  pending ids, live placements, and (spot scenarios) revocation notices.
+* ``SchedulerBase`` — ``schedule(view) -> ClusterConfig`` plus the monitor
+  hooks (``on_event``, ``on_preemption_notice``, ``observe_single/job``).
+* ``EvaScheduler`` — the paper's ensemble of Full and Partial
+  Reconfiguration over TNRP, with the ablation knobs
+  (``interference_aware``, ``multi_task_aware``, ``mode``) and the
+  beyond-paper scenario flags: ``spot_aware`` (re-price each round against
+  the spot snapshot, evacuate revoked instances) and ``multi_region``
+  (spot behaviour + per-region-pair arbitrage on a
+  ``core.catalog.multi_region_catalog``: re-home instances to the cheapest
+  region copy whenever the amortized price saving beats the cross-region
+  migration penalty).  ``region="name"`` pins a scheduler to a single
+  region of a multi-region catalog (the single-market baseline).
+* ``NoPackingScheduler`` — one task per reservation-price instance (§6.1).
+
 The simulator (and the local-cloud physical harness) call ``schedule(view)``
 each scheduling round and execute the returned abstract configuration via
 ``core.plan.diff_configs``.  Throughput observations flow back through
@@ -17,10 +35,11 @@ from .cluster_types import ClusterConfig, TaskSet
 from .ensemble import EnsembleDecision, EventRateEstimator, choose, instantaneous_saving
 from .full_reconfig import evaluate_assignments, full_reconfiguration
 from .partial_reconfig import partial_reconfiguration
-from .plan import LiveInstance, diff_configs, migration_cost
+from .plan import LiveInstance, diff_configs, migration_cost, task_move_cost
 from .reservation_price import cheapest_type
 from .throughput_table import ThroughputTable
-from .workloads import NUM_WORKLOADS
+from .workloads import (INSTANCE_ACQUISITION_S, INSTANCE_SETUP_S,
+                        NUM_WORKLOADS)
 
 
 @dataclasses.dataclass
@@ -37,6 +56,9 @@ class SchedulerView:
     # live instance ids under a spot revocation notice (reclaim imminent);
     # None outside spot scenarios.
     revoked: Optional[Set[int]] = None
+    # task id -> region index of its durable checkpoint (multi-region only;
+    # lets migration_cost price a cross-region restore of a reclaimed task)
+    task_ckpt_region: Optional[Dict[int, int]] = None
 
 
 class SchedulerBase:
@@ -81,6 +103,19 @@ class EvaScheduler(SchedulerBase):
     forces a partial reconfiguration that evacuates the revoked instances
     (their tasks re-enter the repack set; the instances are dropped from the
     live view so nothing new lands on them).
+
+    ``multi_region=True`` targets a region-expanded catalog
+    (``core.catalog.multi_region_catalog``): it implies the spot behaviour
+    and adds (a) capacity awareness — Algorithm-1 packs carry per-region
+    instance-count budgets (``region_caps``), so a capped-but-cheap region
+    fills to its cap and the overflow lands in the next-cheapest region
+    instead of starving — and (b) a per-region-pair *arbitrage refinement*:
+    each slot of the chosen configuration is re-homed to the cheapest
+    same-hardware region copy whenever the hourly saving, amortized over the
+    estimated time to the next Full Reconfiguration (D̂, §4.5), exceeds the
+    migration-cost delta of the move (checkpoint transfer time + egress fee,
+    priced by ``core.plan.migration_cost``).  ``region="name"`` instead pins
+    all packing to one region of the catalog (single-market baseline).
     """
 
     name = "eva"
@@ -89,7 +124,8 @@ class EvaScheduler(SchedulerBase):
                  multi_task_aware: bool = True, mode: str = "ensemble",
                  default_t: float = 0.95, engine: str = "numpy",
                  migration_delay_scale: float = 1.0,
-                 spot_aware: bool = False):
+                 spot_aware: bool = False, multi_region: bool = False,
+                 region: Optional[str] = None):
         super().__init__(catalog)
         assert mode in ("ensemble", "full-only", "partial-only")
         self.interference_aware = interference_aware
@@ -98,7 +134,23 @@ class EvaScheduler(SchedulerBase):
         self.engine = engine
         self.migration_delay_scale = migration_delay_scale
         self.spot_aware = spot_aware
+        self.multi_region = multi_region
+        if multi_region:
+            assert catalog.is_multi_region, \
+                "multi_region=True needs a multi_region_catalog"
+        self._region_mask: Optional[np.ndarray] = None
+        if region is not None:
+            assert catalog.is_multi_region, "region= needs a multi_region_catalog"
+            self._region_mask = catalog.region_type_mask(
+                catalog.region_index(region))
+        # per-region instance-count budgets for the Algorithm-1 packs
+        self._region_caps = None
+        if multi_region and any(r.max_instances is not None
+                                for r in catalog.regions):
+            self._region_caps = tuple(r.max_instances
+                                      for r in catalog.regions)
         self.forced_partials = 0
+        self.arbitrage_moves = 0
         self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
         self.estimator = EventRateEstimator()
         self.decisions: List[EnsembleDecision] = []
@@ -123,11 +175,13 @@ class EvaScheduler(SchedulerBase):
         table = self.table if self.interference_aware else None
         kw = dict(interference_aware=self.interference_aware,
                   multi_task_aware=self.multi_task_aware, engine=self.engine)
+        track = self.spot_aware or self.multi_region
         # Spot awareness: all prices this round come from the catalog
         # snapshot at the current time (identity for static catalogs).
-        cat = self.catalog.at(view.time) if self.spot_aware else self.catalog
+        cat = self.catalog.at(view.time) if track else self.catalog
+        keep_bonus = self._keep_bonus_fn(cat, view.task_workload)
 
-        if self.spot_aware and view.revoked:
+        if track and view.revoked:
             # Forced partial reconfiguration: evacuate revoked instances.
             # Their tasks join the repack set; dropping the instances from
             # the live view guarantees nothing is kept (or placed) on them.
@@ -137,41 +191,155 @@ class EvaScheduler(SchedulerBase):
                 if inst.instance_id in view.revoked:
                     pending |= set(inst.task_ids)
             self.forced_partials += 1
-            return partial_reconfiguration(
+            cfg = partial_reconfiguration(
                 view.tasks, [(i.type_index, i.task_ids) for i in live],
-                pending, cat, table, **kw)
+                pending, cat, table, type_mask=self._region_mask,
+                region_caps=self._region_caps, keep_bonus=keep_bonus, **kw)
+            return self._finish(cfg, view, cat)
 
         live_assignments = [(i.type_index, i.task_ids) for i in view.live]
         if self.mode == "full-only":
-            cfg = full_reconfiguration(view.tasks, cat, table, **kw)
+            cfg = full_reconfiguration(view.tasks, cat, table,
+                                       type_mask=self._region_mask,
+                                       region_caps=self._region_caps, **kw)
             self.full_adoptions += 1
-            return cfg
+            return self._finish(cfg, view, cat)
         partial = partial_reconfiguration(view.tasks, live_assignments,
                                           view.pending_ids, cat,
-                                          table, **kw)
+                                          table, type_mask=self._region_mask,
+                                          region_caps=self._region_caps,
+                                          keep_bonus=keep_bonus, **kw)
         if self.mode == "partial-only":
-            return partial
-        full = full_reconfiguration(view.tasks, cat, table, **kw)
+            return self._finish(partial, view, cat)
+        full = full_reconfiguration(view.tasks, cat, table,
+                                    type_mask=self._region_mask,
+                                    region_caps=self._region_caps, **kw)
 
         s_f = instantaneous_saving(*evaluate_assignments(
             full.assignments, view.tasks, cat, table,
-            self.multi_task_aware))
+            self.multi_task_aware, type_mask=self._region_mask))
         s_p = instantaneous_saving(*evaluate_assignments(
             partial.assignments, view.tasks, cat, table,
-            self.multi_task_aware))
+            self.multi_task_aware, type_mask=self._region_mask))
         m_f = migration_cost(diff_configs(view.live, full), view.live,
                              cat, view.task_workload,
-                             self.migration_delay_scale)
+                             self.migration_delay_scale,
+                             task_ckpt_region=view.task_ckpt_region)
         m_p = migration_cost(diff_configs(view.live, partial), view.live,
                              cat, view.task_workload,
-                             self.migration_delay_scale)
+                             self.migration_delay_scale,
+                             task_ckpt_region=view.task_ckpt_region)
         decision = choose(s_f, m_f, s_p, m_p, self.estimator.d_hat())
         self.decisions.append(decision)
         if decision.adopt_full:
             self.full_adoptions += 1
             self.estimator.on_full_reconfig()
-            return full
-        return partial
+            return self._finish(full, view, cat)
+        return self._finish(partial, view, cat)
+
+    # -- multi-region helpers ------------------------------------------------
+    def _keep_bonus_fn(self, cat: Catalog, task_workload: Dict[int, int]):
+        """Multi-region keep-test slack: the amortized ($/h over D̂) cost of
+        re-homing an instance's task set to the cheapest same-hardware region
+        copy — relaunch idle time, per-task checkpoint+launch delay,
+        checkpoint transfer time, and the egress fee.  Zero when the
+        instance already sits in the cheapest region, so intra-region
+        evictions are untouched.
+
+        Known trade-off: the slack assumes an eviction from a dear region
+        re-homes cross-region (true when the price gap is what made the set
+        inefficient, since RP anchors to the cheapest region).  An instance
+        that turned inefficient for other reasons (e.g. a completed sibling
+        shrank the set) gets the same slack and may be held up to one D̂
+        window before intra-region consolidation — bounded by the slack
+        being the one-off move cost spread over D̂."""
+        if not self.multi_region:
+            return None
+        d_hr = max(self.estimator.d_hat() / 3600.0, 1e-9)
+
+        def bonus(k: int, tids) -> float:
+            k2 = cat.cheapest_copy(k, self._region_mask)
+            if cat.region_of(k2) == cat.region_of(k):
+                return 0.0
+            pen = ((INSTANCE_ACQUISITION_S + INSTANCE_SETUP_S) / 3600.0
+                   * cat.costs[k2])
+            for t in tids:
+                pen += task_move_cost(cat, task_workload[t], k, k2,
+                                      self.migration_delay_scale)
+            return pen / d_hr
+
+        return bonus
+
+    def _finish(self, config: ClusterConfig, view: SchedulerView,
+                cat: Catalog) -> ClusterConfig:
+        if self.multi_region:
+            config = self._region_arbitrage(config, view, cat)
+        return config
+
+    def _region_arbitrage(self, config: ClusterConfig, view: SchedulerView,
+                          cat: Catalog) -> ClusterConfig:
+        """Per-region-pair reconfiguration trade-off (the paper's S·D̂ > M
+        criterion applied to region moves): re-home each slot to the cheapest
+        same-hardware copy in another region iff the hourly price saving,
+        amortized over D̂ (the estimated time to the next Full
+        Reconfiguration), exceeds the migration-cost *delta* of the rewrite —
+        which prices the checkpoint transfer, egress fee, and fresh-instance
+        launch via ``migration_cost`` on the diffed plans.  Each adopted
+        rewrite re-diffs the whole plan (exact, O(slots·live) per candidate
+        — slot-local deltas would miss greedy-matching interactions between
+        same-type slots); rounds here are tens of slots, so this is cheap.
+
+        Capacity headroom is tracked against the *configuration being
+        refined* (slots per region, updated as rewrites are adopted), since
+        the config is what the executor will instantiate; the simulator's
+        per-region denial remains the hard backstop."""
+        if len(cat.regions) < 2:
+            return config
+        assignments = list(config.assignments)
+        d_hr = self.estimator.d_hat() / 3600.0
+        caps = [r.max_instances for r in cat.regions]
+        counts = np.zeros(len(cat.regions), dtype=np.int64)
+        for k, _ in assignments:
+            counts[cat.region_of(k)] += 1
+        cur_m: Optional[float] = None
+        changed = False
+        for slot, (k, tids) in enumerate(assignments):
+            base = int(cat.base_index[k])
+            cand = cat.base_index == base
+            if self._region_mask is not None:  # honour a region pin
+                cand = cand & self._region_mask
+            # cheapest same-hardware region copy with capacity headroom
+            best_k = int(k)
+            for k2 in np.nonzero(cand)[0].tolist():
+                r2 = cat.region_of(k2)
+                if (r2 != cat.region_of(k) and caps[r2] is not None
+                        and counts[r2] >= caps[r2]):
+                    continue
+                if cat.costs[k2] < cat.costs[best_k] - 1e-12:
+                    best_k = int(k2)
+            if best_k == k:
+                continue
+            if cur_m is None:
+                cur_m = migration_cost(
+                    diff_configs(view.live, ClusterConfig(assignments)),
+                    view.live, cat, view.task_workload,
+                    self.migration_delay_scale,
+                    task_ckpt_region=view.task_ckpt_region)
+            trial = list(assignments)
+            trial[slot] = (best_k, tids)
+            trial_m = migration_cost(
+                diff_configs(view.live, ClusterConfig(trial)), view.live,
+                cat, view.task_workload, self.migration_delay_scale,
+                task_ckpt_region=view.task_ckpt_region)
+            saving = float(cat.costs[k] - cat.costs[best_k]) * d_hr
+            if saving > trial_m - cur_m:
+                assignments = trial
+                cur_m = trial_m
+                counts[cat.region_of(best_k)] += 1
+                counts[cat.region_of(k)] -= 1  # slot vacated its old region
+                self.arbitrage_moves += 1
+                changed = True
+        return ClusterConfig(assignments) if changed else config
 
     @property
     def full_adoption_rate(self) -> float:

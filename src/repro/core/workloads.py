@@ -64,6 +64,17 @@ WORKLOAD_INDEX = {w.name: i for i, w in enumerate(WORKLOADS)}
 INSTANCE_ACQUISITION_S = 19.0
 INSTANCE_SETUP_S = 190.0
 
+# Checkpoint snapshot sizes, used to price cross-region migrations (transfer
+# time + egress).  Table 7 reports checkpoint *delays*; at a ~1 GB/s local
+# checkpoint write bandwidth those delays double as snapshot sizes in GB
+# (resnet18 ≈ 2 GB ... gpt2 ≈ 30 GB), which is the scale real checkpoints
+# for these models have.
+CKPT_LOCAL_WRITE_GB_PER_S = 1.0
+
+
+def checkpoint_size_gb(workload: int) -> float:
+    return WORKLOADS[workload].checkpoint_delay_s * CKPT_LOCAL_WRITE_GB_PER_S
+
 
 def _build_interference_matrix() -> np.ndarray:
     """Ground-truth pairwise normalized throughput, modeled on Figure 1.

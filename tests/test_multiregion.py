@@ -1,0 +1,449 @@
+"""Multi-region layer: region-qualified catalogs, cross-region migration
+costs, region-scoped simulation, and the multi-region Eva scheduler.
+
+Contract tests anchoring the design:
+* a single-region multi-region catalog is *bit-identical* to the plain
+  spot catalog of PR 1 (scheduler decisions and simulator metrics);
+* the cross-region migration penalty (egress fee) is charged exactly once
+  per cross-region move, never for intra-region moves;
+* eva-multiregion is cheaper than single-region eva-spot on the bundled
+  dispersed-price 3-region market (the benchmark/CI invariant).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig, Simulator, physical_trace
+from repro.core import (ClusterConfig, EvaScheduler, LiveInstance, PriceModel,
+                        Region, SchedulerBase, TaskSet, TransferMatrix,
+                        aws_catalog, checkpoint_size_gb, diff_configs,
+                        dispersed_demo_regions, full_reconfiguration,
+                        make_job, migration_cost, multi_region_catalog,
+                        regional_reservation_prices, reservation_prices)
+
+N_BASE = len(aws_catalog())
+
+
+# ----------------------------------------------------------------- catalog
+def test_region_expansion_layout():
+    regs = dispersed_demo_regions(3)
+    cat = multi_region_catalog(regs)
+    assert len(cat) == 3 * N_BASE
+    assert cat.is_multi_region
+    assert cat.types[0].name == "region-0/p3.2xlarge"
+    assert cat.types[N_BASE].name == "region-1/p3.2xlarge"
+    np.testing.assert_array_equal(cat.region_ids,
+                                  np.repeat(np.arange(3), N_BASE))
+    np.testing.assert_array_equal(cat.base_index, np.tile(np.arange(N_BASE), 3))
+    # capacities replicate the base catalog; base costs too (cost_scale=1)
+    base = aws_catalog()
+    for r in range(3):
+        blk = slice(r * N_BASE, (r + 1) * N_BASE)
+        np.testing.assert_array_equal(cat.capacities[blk], base.capacities)
+        np.testing.assert_array_equal(cat.costs[blk], base.costs)
+
+
+def test_snapshot_prices_each_region_with_its_own_model():
+    regs = dispersed_demo_regions(3, low=0.25, high=0.85, period_s=3 * 3600.0)
+    cat = multi_region_catalog(regs)
+    base = aws_catalog().costs
+    for t, cheap in ((0.0, 0), (3600.0, 1), (7200.0, 2)):
+        snap = cat.at(t)
+        for r in range(3):
+            blk = slice(r * N_BASE, (r + 1) * N_BASE)
+            mult = 0.25 if r == cheap else 0.85
+            np.testing.assert_allclose(snap.costs[blk], base * mult)
+
+
+def test_cost_scale_gives_static_dispersion():
+    regs = (Region("cheap", cost_scale=0.5), Region("dear", cost_scale=1.0))
+    cat = multi_region_catalog(regs)
+    assert cat.price_model is None  # static: no models anywhere
+    assert cat.at(999.0) is cat  # identity snapshot, PR-1 contract
+    np.testing.assert_allclose(cat.costs[:N_BASE] * 2.0, cat.costs[N_BASE:])
+
+
+def test_regional_rp_min_equals_global_rp():
+    regs = dispersed_demo_regions(3)
+    cat = multi_region_catalog(regs)
+    tasks = TaskSet([j.tasks[0] for j in physical_trace(n_jobs=8, seed=3)])
+    for t in (0.0, 3600.0, 7200.0):
+        rr = regional_reservation_prices(tasks, cat, time_s=t)
+        assert rr.shape == (len(tasks), 3)
+        np.testing.assert_allclose(rr.min(axis=1),
+                                   reservation_prices(tasks, cat, time_s=t))
+
+
+def test_type_mask_restricts_packing_to_region():
+    regs = dispersed_demo_regions(3)
+    cat = multi_region_catalog(regs).at(3600.0)  # region-1 cheap
+    tasks = TaskSet([j.tasks[0] for j in physical_trace(n_jobs=6, seed=3)])
+    for r in range(3):
+        cfg = full_reconfiguration(tasks, cat, None,
+                                   type_mask=cat.region_type_mask(r))
+        assert cfg.num_tasks() == len(tasks)
+        assert all(cat.region_of(k) == r for k, _ in cfg.assignments)
+
+
+def test_region_caps_overflow_to_next_region():
+    """Algorithm 1 with per-region instance budgets fills a capped cheap
+    region to its cap and overflows into the dearer one instead of
+    over-provisioning (or starving) the cheap region."""
+    regs = (Region("cheap", cost_scale=0.5), Region("dear", cost_scale=1.0))
+    cat = multi_region_catalog(regs)
+    jobs = [make_job(job_id=i + 1, workload=4, arrival_time=0.0,
+                     duration_s=1000.0, n_tasks=1) for i in range(4)]  # gpt2
+    tasks = TaskSet([j.tasks[0] for j in jobs])
+    unbounded = full_reconfiguration(tasks, cat, None)
+    assert all(cat.region_of(k) == 0 for k, _ in unbounded.assignments)
+    capped = full_reconfiguration(tasks, cat, None, region_caps=(1, None))
+    assert capped.num_tasks() == len(tasks)  # nobody starves
+    by_region = [sum(1 for k, _ in capped.assignments
+                     if cat.region_of(k) == r) for r in range(2)]
+    assert by_region[0] == 1  # cheap region filled exactly to its cap
+    assert by_region[1] >= 1  # overflow provisioned in the dear region
+
+
+# ------------------------------------------------------- migration costing
+def _two_region_cat(egress=0.1, bw=8.0):
+    regs = (Region("a"), Region("b"))
+    return multi_region_catalog(
+        regs, transfer=TransferMatrix.uniform(2, egress_usd_per_gb=egress,
+                                              bandwidth_gbps=bw))
+
+
+def test_migration_cost_charges_cross_region_penalty():
+    cat = _two_region_cat()
+    base = aws_catalog()
+    k_a = cat.index_of("a/p3.2xlarge")
+    k_b = cat.index_of("b/p3.2xlarge")
+    job = make_job(job_id=1, workload=3, arrival_time=0.0, duration_s=1000.0,
+                   n_tasks=1)  # cyclegan: 7 GB checkpoint
+    tid = job.tasks[0].task_id
+    live = [LiveInstance(0, k_a, (tid,))]
+    wl = {tid: 3}
+    intra = migration_cost(diff_configs(live, ClusterConfig([(k_a, (tid,))])),
+                           live, cat, wl)
+    assert intra == 0.0  # stays put
+    m_b = migration_cost(diff_configs(live, ClusterConfig([(k_b, (tid,))])),
+                         live, cat, wl)
+    # single-region move of the same shape (same base type, same price)
+    plain_live = [LiveInstance(0, base.index_of("p3.2xlarge"), (tid,))]
+    k2 = base.index_of("p3.8xlarge")
+    m_plain = migration_cost(
+        diff_configs(plain_live, ClusterConfig([(k2, (tid,))])),
+        plain_live, base, wl)
+    gb = checkpoint_size_gb(3)
+    # cross-region adds exactly: egress fee + transfer time billed on both ends
+    expected_extra = (gb * 0.1
+                      + cat.transfer.transfer_time_s(0, 1, gb) / 3600.0
+                      * (cat.costs[k_a] + cat.costs[k_b]))
+    same_type_move = migration_cost(
+        diff_configs(plain_live,
+                     ClusterConfig([(base.index_of("p3.2xlarge"), (tid,))])),
+        plain_live, base, wl)
+    assert same_type_move == 0.0
+    # compare against an identical-priced intra-catalog move: rebuild it as
+    # a->a' is impossible (same type matches), so derive the no-penalty cost
+    # from the plain catalog with dst == src type via the b-copy at equal price
+    m_b_no_transfer = migration_cost(
+        diff_configs(live, ClusterConfig([(k_b, (tid,))])), live,
+        multi_region_catalog((Region("a"), Region("b")),
+                             transfer=TransferMatrix.uniform(
+                                 2, egress_usd_per_gb=0.0,
+                                 bandwidth_gbps=1e12)),
+        wl)
+    assert m_b == pytest.approx(m_b_no_transfer + expected_extra)
+    assert m_plain < m_b  # cross-region dearer than an in-region upgrade
+
+
+class _Scripted(SchedulerBase):
+    """Replays a fixed list of configurations, one per round."""
+
+    name = "scripted"
+
+    def __init__(self, catalog, script):
+        super().__init__(catalog)
+        self.script = list(script)
+        self.round = 0
+
+    def schedule(self, view):
+        cfg = self.script[min(self.round, len(self.script) - 1)]
+        self.round += 1
+        return cfg
+
+
+def test_egress_charged_exactly_once_per_cross_region_move():
+    cat = _two_region_cat(egress=0.1, bw=8.0)
+    k_a = cat.index_of("a/p3.2xlarge")
+    k_b = cat.index_of("b/p3.2xlarge")
+    job = make_job(job_id=1, workload=3, arrival_time=0.0, duration_s=4000.0,
+                   n_tasks=1)  # cyclegan: 7 GB checkpoint, fast ckpt/launch
+    tid = job.tasks[0].task_id
+    cfg_a = ClusterConfig([(k_a, (tid,))])
+    cfg_b = ClusterConfig([(k_b, (tid,))])
+    # rounds: place in a, hold, move to b, hold, move back to a, stay
+    sched = _Scripted(cat, [cfg_a, cfg_a, cfg_b, cfg_b, cfg_a, cfg_a])
+    sim = Simulator(cat, [job], sched, SimConfig(seed=1))
+    m = sim.run()
+    gb = checkpoint_size_gb(3)
+    assert m.cross_region_migrations == 2  # a->b and b->a, nothing else
+    assert m.egress_cost == pytest.approx(2 * gb * 0.1)
+    assert m.total_cost > m.egress_cost  # instance time billed on top
+    assert job.completion_time is not None
+    # region-scoped billing: both regions saw spend, egress billed to source
+    assert m.cost_by_region["a"] > 0 and m.cost_by_region["b"] > 0
+    assert sum(m.cost_by_region.values()) == pytest.approx(m.total_cost)
+
+
+def test_intra_region_moves_pay_no_egress():
+    cat = _two_region_cat()
+    k_a1 = cat.index_of("a/p3.2xlarge")
+    k_a2 = cat.index_of("a/p3.8xlarge")
+    job = make_job(job_id=1, workload=3, arrival_time=0.0, duration_s=4000.0,
+                   n_tasks=1)
+    tid = job.tasks[0].task_id
+    sched = _Scripted(cat, [ClusterConfig([(k_a1, (tid,))]),
+                            ClusterConfig([(k_a1, (tid,))]),
+                            ClusterConfig([(k_a2, (tid,))]),
+                            ClusterConfig([(k_a2, (tid,))])])
+    m = Simulator(cat, [job], sched, SimConfig(seed=1)).run()
+    assert m.cross_region_migrations == 0
+    assert m.egress_cost == 0.0
+    assert m.migrations >= 1  # the a1 -> a2 move did happen
+    assert m.cost_by_region["b"] == 0.0
+
+
+# ------------------------------------------------------- strictly additive
+def test_single_region_bit_identical_to_spot_path():
+    """Acceptance: a 1-region multi-region catalog driven by
+    EvaScheduler(multi_region=True) reproduces the PR-1 spot path
+    (aws_catalog + spot_aware=True) metric for metric."""
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    jobs_kw = dict(n_jobs=12, seed=11, duration_range_h=(0.3, 0.6))
+    cfg_kw = dict(seed=5, preemption_hazard_per_hour=0.5)
+
+    cat_mr = multi_region_catalog((Region("solo", price_model=pm),))
+    sched_mr = EvaScheduler(cat_mr, multi_region=True)
+    m_mr = Simulator(cat_mr, physical_trace(**jobs_kw), sched_mr,
+                     SimConfig(**cfg_kw)).run()
+
+    cat_sp = aws_catalog(price_model=pm)
+    sched_sp = EvaScheduler(cat_sp, spot_aware=True)
+    m_sp = Simulator(cat_sp, physical_trace(**jobs_kw), sched_sp,
+                     SimConfig(**cfg_kw)).run()
+
+    assert m_mr.total_cost == m_sp.total_cost  # bit-for-bit
+    assert m_mr.jct_sum == m_sp.jct_sum
+    assert m_mr.migrations == m_sp.migrations
+    assert m_mr.instances_launched == m_sp.instances_launched
+    assert m_mr.preemptions == m_sp.preemptions
+    assert m_mr.preemption_notices == m_sp.preemption_notices
+    assert m_mr.cross_region_migrations == 0 and m_mr.egress_cost == 0.0
+    assert sched_mr.arbitrage_moves == 0
+
+
+def test_static_seed_path_untouched():
+    """The plain static catalog path stays bit-identical to the seed (the
+    multi-region layer adds no RNG draws and no events there)."""
+    jobs_kw = dict(n_jobs=10, seed=11, duration_range_h=(0.3, 0.6))
+    m1 = Simulator(aws_catalog(), physical_trace(**jobs_kw),
+                   EvaScheduler(aws_catalog()), SimConfig(seed=5)).run()
+    m2 = Simulator(aws_catalog(), physical_trace(**jobs_kw),
+                   EvaScheduler(aws_catalog()), SimConfig(seed=5)).run()
+    assert m1.summary() == m2.summary()
+    assert m1.egress_cost == 0.0 and not m1.cost_by_region
+
+
+# ----------------------------------------------------------- the scheduler
+def test_region_arbitrage_rehomes_when_saving_beats_penalty():
+    """A live, still-cost-efficient instance in a dear region is re-homed to
+    the cheap same-hardware copy by the arbitrage pass (and not when egress
+    makes the move unprofitable)."""
+    from repro.core.scheduler import SchedulerView
+
+    def build(egress):
+        regs = (Region("dear", cost_scale=1.0), Region("cheap", cost_scale=0.5))
+        cat = multi_region_catalog(
+            regs, transfer=TransferMatrix.uniform(2, egress_usd_per_gb=egress,
+                                                  bandwidth_gbps=8.0))
+        return cat, EvaScheduler(cat, multi_region=True)
+
+    job = make_job(job_id=1, workload=3, arrival_time=0.0, duration_s=4000.0,
+                   n_tasks=1)
+    tid = job.tasks[0].task_id
+    tasks = TaskSet(job.tasks)
+
+    cat, sched = build(egress=0.02)
+    k_dear = cat.index_of("dear/p3.8xlarge")
+    k_cheap = cat.index_of("cheap/p3.8xlarge")
+    view = SchedulerView(time=0.0, tasks=tasks, pending_ids=set(),
+                         live=[LiveInstance(0, k_dear, (tid,))],
+                         task_workload={tid: 3})
+    cfg = sched._region_arbitrage(ClusterConfig([(k_dear, (tid,))]), view, cat)
+    assert cfg.assignments == [(k_cheap, (tid,))]
+    assert sched.arbitrage_moves == 1
+
+    # a prohibitive egress price kills the same move
+    cat2, sched2 = build(egress=1000.0)
+    view2 = SchedulerView(time=0.0, tasks=tasks, pending_ids=set(),
+                          live=[LiveInstance(0, cat2.index_of("dear/p3.8xlarge"),
+                                             (tid,))],
+                          task_workload={tid: 3})
+    cfg2 = sched2._region_arbitrage(
+        ClusterConfig([(cat2.index_of("dear/p3.8xlarge"), (tid,))]), view2, cat2)
+    assert cfg2.assignments == [(cat2.index_of("dear/p3.8xlarge"), (tid,))]
+    assert sched2.arbitrage_moves == 0
+
+
+def test_region_pin_keeps_all_packing_in_one_region():
+    regs = dispersed_demo_regions(3)
+    cat = multi_region_catalog(regs)
+    jobs = physical_trace(n_jobs=8, seed=11, duration_range_h=(0.3, 0.5))
+    sched = EvaScheduler(cat, multi_region=True, region="region-1")
+    m = Simulator(cat, jobs, sched,
+                  SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()
+    assert all(j.completion_time is not None for j in jobs)
+    assert m.cross_region_migrations == 0
+    assert m.cost_by_region["region-0"] == 0.0
+    assert m.cost_by_region["region-2"] == 0.0
+    assert m.cost_by_region["region-1"] == pytest.approx(m.total_cost)
+
+
+def test_region_capacity_is_enforced_and_routed_around():
+    """Region 'a' holds one instance at most: the scheduler's per-region
+    pack budget sends the overflow straight to 'b' (no launch denials
+    needed) and nothing starves."""
+    regs = (Region("a", max_instances=1), Region("b"))
+    cat = multi_region_catalog(regs)
+    jobs = [make_job(job_id=i + 1, workload=4, arrival_time=10.0 * i,
+                     duration_s=2000.0, n_tasks=1) for i in range(4)]  # gpt2
+    sched = EvaScheduler(cat, multi_region=True)
+    sim = Simulator(cat, jobs, sched, SimConfig(seed=2))
+    m = sim.run()
+    assert all(j.completion_time is not None for j in jobs)
+    # the budget-aware pack never over-asks, so the simulator never denies
+    assert m.capacity_denied == 0
+    # at no point were two instances alive in region 'a' simultaneously
+    spans = [(i.request_t, i.terminated_t if i.terminated_t is not None
+              else m.end_time)
+             for i in sim.instances.values()
+             if cat.region_of(i.type_index) == 0]
+    for i, (s1, e1) in enumerate(spans):
+        for s2, e2 in spans[i + 1:]:
+            assert min(e1, e2) <= max(s1, s2) + 1e-9
+    assert m.cost_by_region["b"] > 0  # overflow really ran in 'b'
+
+
+def test_simulator_denies_launches_beyond_region_cap():
+    """The simulator is the hard capacity backstop: a scheduler that asks
+    for more instances than a region's cap gets denied, and the task lands
+    once the config routes it elsewhere."""
+    regs = (Region("a", max_instances=1), Region("b"))
+    cat = multi_region_catalog(regs)
+    k_a = cat.index_of("a/p3.8xlarge")
+    k_b = cat.index_of("b/p3.8xlarge")
+    jobs = [make_job(job_id=i + 1, workload=4, arrival_time=0.0,
+                     duration_s=2000.0, n_tasks=1) for i in range(2)]
+    t1, t2 = (j.tasks[0].task_id for j in jobs)
+    over_ask = ClusterConfig([(k_a, (t1,)), (k_a, (t2,))])  # 2 > cap 1
+    routed = ClusterConfig([(k_a, (t1,)), (k_b, (t2,))])
+    sched = _Scripted(cat, [over_ask, routed, routed])
+    sim = Simulator(cat, jobs, sched, SimConfig(seed=3))
+    m = sim.run()
+    assert m.capacity_denied >= 1
+    assert all(j.completion_time is not None for j in jobs)
+    assert m.cost_by_region["a"] > 0 and m.cost_by_region["b"] > 0
+
+
+class _RestoreSched(SchedulerBase):
+    """Places the task in region 'a'; after it has run once and come back
+    pending (reclaimed), insists on region 'b' — forcing a cross-region
+    checkpoint *restore* rather than a live migration."""
+
+    name = "restore"
+
+    def __init__(self, catalog, cfg_a, cfg_b, tid):
+        super().__init__(catalog)
+        self.cfg_a, self.cfg_b, self.tid = cfg_a, cfg_b, tid
+        self.was_placed = False
+        self.evacuated = False
+
+    def schedule(self, view):
+        if self.tid not in view.pending_ids:
+            self.was_placed = True  # it is (or is becoming) resident
+            return self.cfg_b if self.evacuated else self.cfg_a
+        if self.was_placed:  # came back pending: it was reclaimed
+            self.evacuated = True
+            return self.cfg_b
+        return self.cfg_a
+
+
+def test_reclaim_then_restore_elsewhere_pays_the_transfer():
+    """A checkpoint stranded in region 'a' by a reclaim pays egress +
+    transfer when the task is restored in region 'b' — the restore path is
+    priced like a live migration, exactly once."""
+    regs = (Region("a", price_model=PriceModel.trace([0.0], [0.5])),
+            Region("b", price_model=PriceModel.trace([0.0], [0.5])))
+    cat = multi_region_catalog(
+        regs, transfer=TransferMatrix.uniform(2, egress_usd_per_gb=0.1,
+                                              bandwidth_gbps=8.0))
+    k_a = cat.index_of("a/p3.2xlarge")
+    k_b = cat.index_of("b/p3.2xlarge")
+    job = make_job(job_id=1, workload=3, arrival_time=0.0, duration_s=600.0,
+                   n_tasks=1)  # cyclegan: 7 GB checkpoint
+    tid = job.tasks[0].task_id
+    sched = _RestoreSched(cat, ClusterConfig([(k_a, (tid,))]),
+                          ClusterConfig([(k_b, (tid,))]), tid)
+    # enormous hazard: the 'a' instance is noticed at the first price update
+    # and reclaimed (the scheduler ignores the notice), killing the task
+    sim = Simulator(cat, [job], sched,
+                    SimConfig(seed=4, preemption_hazard_per_hour=1e5,
+                              checkpoint_period_s=60.0,
+                              max_time_s=40000.0))
+    m = sim.run()
+    assert m.preemptions >= 1  # the reclaim actually hit the task
+    gb = checkpoint_size_gb(3)
+    # every cross-region charge is a restore (never a live a->b migration:
+    # the scheduler only switches to 'b' once the task is already pending)
+    assert m.cross_region_migrations >= 1
+    assert m.egress_cost == pytest.approx(m.cross_region_migrations * gb * 0.1)
+
+
+def test_arbitrage_fires_end_to_end_on_mild_dispersion():
+    """Integration guard for the arbitrage pass: under mild price dispersion
+    dense kept instances stay cost-efficient in dear regions (eviction never
+    moves them), so cross-region re-homing must come from the S·D̂ > ΔM
+    arbitrage rewrite."""
+    regs = dispersed_demo_regions(3, low=0.65, high=0.8)
+    cat = multi_region_catalog(regs)
+    jobs = physical_trace(n_jobs=20, seed=11, duration_range_h=(0.5, 1.2))
+    sched = EvaScheduler(cat, multi_region=True)
+    m = Simulator(cat, jobs, sched, SimConfig(seed=5)).run()
+    assert all(j.completion_time is not None for j in jobs)
+    assert sched.arbitrage_moves > 0
+    assert m.cross_region_migrations > 0
+
+
+# ------------------------------------------------------------ the invariant
+def test_multiregion_beats_single_region_spot_on_dispersed_trace():
+    """Acceptance (benchmark/CI invariant): on the bundled dispersed-price
+    3-region market, multi-region Eva is strictly cheaper than Eva locked to
+    region-0's spot market, which in turn beats on-demand."""
+    regs = dispersed_demo_regions(3)
+    jobs_kw = dict(n_jobs=12, seed=11, duration_range_h=(0.3, 0.6))
+    cfg = dict(seed=5, preemption_hazard_per_hour=0.3)
+
+    cat_mr = multi_region_catalog(regs)
+    m_mr = Simulator(cat_mr, physical_trace(**jobs_kw),
+                     EvaScheduler(cat_mr, multi_region=True),
+                     SimConfig(**cfg)).run()
+    cat_sp = aws_catalog(price_model=regs[0].price_model)
+    m_sp = Simulator(cat_sp, physical_trace(**jobs_kw),
+                     EvaScheduler(cat_sp, spot_aware=True),
+                     SimConfig(**cfg)).run()
+    m_od = Simulator(aws_catalog(), physical_trace(**jobs_kw),
+                     EvaScheduler(aws_catalog()), SimConfig(seed=5)).run()
+    assert m_mr.total_cost < m_sp.total_cost < m_od.total_cost
+    assert m_mr.cross_region_migrations > 0  # it really arbitrages
+    assert m_mr.egress_cost > 0.0
+    assert sum(m_mr.cost_by_region.values()) == pytest.approx(m_mr.total_cost)

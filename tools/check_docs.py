@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Docs sanity checker (CI docs job; stdlib only).
+
+* every intra-repo markdown link in README.md and docs/*.md resolves to an
+  existing file;
+* every fenced ``bash`` command in those files that references a path under
+  ``benchmarks/`` or ``examples/`` points at a file that exists (module
+  spellings like ``-m benchmarks.run`` are resolved to their .py files too).
+
+Exit code 0 = clean; 1 = problems (listed on stdout).
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
+PATH_RE = re.compile(r"\b((?:benchmarks|examples)/[\w./-]+)")
+MODULE_RE = re.compile(r"-m\s+(benchmarks(?:\.\w+)+)")
+
+
+def md_files():
+    out = [os.path.join(ROOT, "README.md")]
+    out += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return out
+
+
+def check_links(path: str, text: str, problems: list) -> None:
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            problems.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                            f"-> {target}")
+
+
+def check_bash_blocks(path: str, text: str, problems: list) -> None:
+    for block in FENCE_RE.findall(text):
+        for ref in PATH_RE.findall(block):
+            ref = ref.rstrip(".")  # trailing sentence punctuation
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                problems.append(f"{os.path.relpath(path, ROOT)}: bash block "
+                                f"references missing file -> {ref}")
+        for mod in MODULE_RE.findall(block):
+            rel = mod.replace(".", os.sep) + ".py"
+            if not os.path.exists(os.path.join(ROOT, rel)):
+                problems.append(f"{os.path.relpath(path, ROOT)}: bash block "
+                                f"references missing module -> {mod}")
+
+
+def main() -> int:
+    problems: list = []
+    files = md_files()
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        check_links(path, text, problems)
+        check_bash_blocks(path, text, problems)
+    if problems:
+        print(f"check_docs: {len(problems)} problem(s)")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print(f"check_docs: OK ({len(files)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
