@@ -42,6 +42,8 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
             opts["spot_aware"] = True
         if name == "eva-multiregion":
             opts["multi_region"] = True
+        if name == "eva-credit":
+            opts["credit_aware"] = True
         opts.update(kw)
         return EvaScheduler(catalog, **opts)
     raise KeyError(name)
@@ -61,6 +63,9 @@ def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None,
         out["full_adoption"] = round(sched.full_adoption_rate, 3)
     if getattr(sched, "multi_region", False):
         out["arbitrage_moves"] = sched.arbitrage_moves
+    if getattr(sched, "credit_aware", False):
+        out["credit_drains"] = sched.credit_drains
+        out["credit_signals"] = sched.credit_signals
     return out
 
 

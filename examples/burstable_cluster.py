@@ -1,0 +1,83 @@
+"""Burstable-credit (CASH) walkthrough: credit dynamics, credit-adjusted
+reservation prices, and the credit-aware Eva scheduler.
+
+    PYTHONPATH=src python examples/burstable_cluster.py [--jobs 16]
+
+1. Watch a burstable instance's credit balance drain and its effective
+   speed collapse to the baseline while the hourly bill stays flat.
+2. Price a burstable type the credit-aware way: effective $/throughput
+   over a planning horizon, from a fresh launch and from an exhausted
+   balance.
+3. Run the same CPU trace under credit-aware Eva, credit-blind Eva and
+   on-demand Eva, and compare cost / JCT / throttled hours.
+"""
+import argparse
+
+from repro.cluster import SimConfig, Simulator, burstable_trace
+from repro.core import (EvaScheduler, TaskSet, aws_catalog,
+                        burstable_demo_catalog, make_task,
+                        reservation_prices)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--jobs", type=int, default=16)
+args = ap.parse_args()
+
+# -- 1. the credit state machine ---------------------------------------------
+cat = burstable_demo_catalog()
+k = cat.index_of("t7i.2xlarge")
+cm = cat.credit_models[k]
+print(f"t7i.2xlarge: ${cat.costs[k]:.3f}/h "
+      f"(c7i.2xlarge on demand: ${cat.costs[cat.index_of('c7i.2xlarge')]:.3f}/h)")
+print(f"credit model: baseline {cm.baseline_fraction:.0%}, accrual "
+      f"{cm.accrual_per_hour:.2f} h/h, launch {cm.launch_credit_hours:g} h, "
+      f"cap {cm.credit_cap_hours:g} h")
+bal = cm.launch_credit_hours
+print("busy at full duty, the balance drains at "
+      f"{cm.drain_per_hour():.2f} h/h -> throttles after "
+      f"{cm.burst_hours(bal):.2f} h busy:")
+for t_h in (0.0, 0.25, 0.5, 0.625, 1.0):
+    b = max(0.0, bal - cm.drain_per_hour() * t_h)
+    print(f"  t={t_h:5.3f}h  balance={b:5.2f}h  speed={cm.speed(b):4.0%}"
+          f"  bill=${cat.costs[k]:.3f}/h (unchanged)")
+
+# -- 2. credit-adjusted reservation prices -----------------------------------
+tasks = TaskSet([make_task(job_id=1, workload=8)])  # diamond: 8 vCPU / 16 GB
+for label, horizon_s in (("30 min", 1800.0), ("2 h", 7200.0), ("8 h", 28800.0)):
+    rp = reservation_prices(tasks, cat, credit_horizon_s=horizon_s)
+    plain = reservation_prices(tasks, cat)
+    print(f"RP(diamond) over {label:6s} horizon: ${rp[0]:.3f}/h "
+          f"(sticker-price RP: ${plain[0]:.3f}/h)")
+print("-> a burstable type is cheap only while its forecast credits last;\n"
+      "   past the burst window its effective price exceeds the on-demand twin")
+
+# -- 3. schedulers head to head ----------------------------------------------
+print(f"\n{args.jobs} CPU jobs on the burstable demo market")
+results = {}
+for name in ("eva-credit", "eva-blind", "eva-ondemand"):
+    if name == "eva-credit":
+        c = burstable_demo_catalog()
+        sched = EvaScheduler(c, credit_aware=True)
+    elif name == "eva-blind":
+        c = burstable_demo_catalog()
+        sched = EvaScheduler(c)
+    else:
+        c = aws_catalog()
+        sched = EvaScheduler(c)
+    jobs = burstable_trace(n_jobs=args.jobs, seed=11)
+    m = Simulator(c, jobs, sched, SimConfig(seed=5)).run()
+    results[name] = m
+    extra = ""
+    if m.has_credits:
+        extra = (f"  exhaustions={m.credit_exhaustions}"
+                 f" throttled={m.throttled_s / 3600.0:.1f}h"
+                 f" drains={sched.credit_drains}")
+    print(f"  {name:13s} ${m.total_cost:7.2f}  jct={m.avg_jct_hours:5.2f}h"
+          f"  migrations={m.migrations}{extra}")
+
+save_blind = 1.0 - (results["eva-credit"].total_cost
+                    / results["eva-blind"].total_cost)
+save_od = 1.0 - (results["eva-credit"].total_cost
+                 / results["eva-ondemand"].total_cost)
+print(f"\ncredit-aware Eva saves {save_blind:.1%} vs credit-blind Eva "
+      f"(escapes the throttle) and {save_od:.1%} vs on-demand Eva "
+      "(harvests the cheap burst window)")

@@ -30,12 +30,34 @@ scheduling-round data flow).  The simulated cloud models:
   billed exactly once per move (restoring a checkpoint stranded in another
   region after a reclaim/failure pays the same charge), and per-region
   ``max_instances`` capacity is enforced by denying launches into full
-  regions (the tasks stay put / pending and are repacked next round).
+  regions (the tasks stay put / pending and are repacked next round),
+* optional burstable instance types (catalog types carrying a
+  ``core.catalog.CreditModel``): each burstable instance tracks a credit
+  balance in full-speed hours — drained at ``duty − accrual`` per busy hour
+  (``duty`` = the busiest resident RUNNING task's ``burst_duty``), accrued
+  at ``accrual_per_hour`` while idle, capped.  When a busy instance's
+  balance hits zero (a deterministic ``CREDIT_EXHAUST`` event — no RNG) it
+  is *throttled*: every resident task progresses at ``baseline_fraction`` ×
+  its interference-adjusted rate while billing continues at the unchanged
+  hourly price — cost stays flat while throughput collapses, the asymmetry
+  the credit-aware scheduler prices in.  Exhaustion is surfaced to the
+  scheduler as a credit-pressure signal (``on_credit_pressure`` + an
+  immediate extra round, mirroring spot revocation notices) and per-round
+  via ``SchedulerView.instance_credits`` / ``SchedulerView.throttled``.
+  Throughput observations from throttled instances are withheld from the
+  monitor callbacks (credit state is cloud-visible à la CloudWatch, so the
+  monitor can and does discard throttle-confounded samples instead of
+  polluting the co-location interference table).  The executor never
+  matches a *fresh* (zero-overlap) slot onto a throttled instance — asking
+  for a new instance of a burstable type buys a new instance with launch
+  credits, not someone's exhausted one.
 
-The spot and multi-region layers are strictly additive: with a static (or
-absent) price model and a single-region catalog no extra events are
-scheduled and no extra RNG draws occur, so on-demand runs are bit-for-bit
-identical to the seed simulator.
+The spot, multi-region and credit layers are strictly additive: with a
+static (or absent) price model, a single-region catalog and no burstable
+types no extra events are scheduled and no extra RNG draws occur, so
+on-demand runs are bit-for-bit identical to the seed simulator.  (The
+credit layer draws no randomness at all — credit dynamics are a pure
+function of the event trajectory.)
 
 Progress accounting is lazy: every state change accrues Δt into cost /
 allocation / idle-time integrals and re-projects job-completion events
@@ -121,6 +143,11 @@ class _Instance:
     preempt_deadline: Optional[float] = None  # revocation notice received
     assigned: Set[int] = dataclasses.field(default_factory=set)
     residents: Set[int] = dataclasses.field(default_factory=set)  # outbound ckpt
+    # burstable-credit state (types carrying a CreditModel only; the balance
+    # is integrated lazily in _accrue, so it is current as of _last_accrue)
+    credit_hours: float = 0.0  # balance in full-speed hours
+    throttled: bool = False  # busy at zero balance -> baseline speed
+    credit_seq: int = 0  # bumps invalidate in-flight CREDIT_EXHAUST events
 
     @property
     def alive(self) -> bool:
@@ -153,6 +180,10 @@ class Metrics:
     cross_region_migrations: int = 0
     capacity_denied: int = 0
     cost_by_region: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # burstable-credit accounting (populated only for burstable catalogs)
+    has_credits: bool = False
+    credit_exhaustions: int = 0
+    throttled_s: float = 0.0  # Σ instance-seconds spent throttled
 
     @property
     def avg_jct_hours(self) -> float:
@@ -198,14 +229,18 @@ class Metrics:
             d["capacity_denied"] = self.capacity_denied
             d.update({f"cost_{name}": round(v, 2)
                       for name, v in sorted(self.cost_by_region.items())})
+        if self.has_credits:  # burstable runs only
+            d["credit_exhaustions"] = self.credit_exhaustions
+            d["throttled_hours"] = round(self.throttled_s / 3600.0, 2)
         return d
 
 
 # event kinds (ordering within same timestamp: arrivals & completions before
-# rounds so the round sees fresh state; price updates and preemption reclaims
-# also precede rounds so the scheduler reacts to current prices and notices)
+# rounds so the round sees fresh state; price updates, preemption reclaims
+# and credit exhaustions also precede rounds so the scheduler reacts to
+# current prices, notices and throttle state)
 (ARRIVAL, INSTANCE_READY, CKPT_DONE, LAUNCH_DONE, JOB_DONE, FAILURE,
- PRICE_UPDATE, PREEMPT_FIRE, ROUND) = range(9)
+ PRICE_UPDATE, PREEMPT_FIRE, CREDIT_EXHAUST, ROUND) = range(10)
 
 
 class Simulator:
@@ -246,6 +281,13 @@ class Simulator:
             self._region_name_of_type = [self._regions[r].name
                                          for r in self._region_ids.tolist()]
             self.metrics.cost_by_region = {r.name: 0.0 for r in self._regions}
+        # Burstable credits: active only when some catalog type carries a
+        # CreditModel.  Deterministic (no RNG); all paths gated on
+        # self._credits so other catalogs are bit-for-bit untouched.
+        self._credit_models = catalog.credit_models
+        self._credits = self._credit_models is not None
+        if self._credits:
+            self.metrics.has_credits = True
         if self._spot:
             self._spot_rng = np.random.default_rng(self.cfg.seed + 0x5B07)
             self._cur_costs = pm.prices_at(catalog.costs, 0.0)
@@ -295,6 +337,10 @@ class Simulator:
             m.ntask_integral += len(inst.assigned) * dt
             m.cap_integral += self.catalog.capacities[inst.type_index] * dt
             m.alloc_integral += self._alloc_of(inst) * dt
+            if self._credits:  # integrate the credit balance (billing is NOT
+                self._credit_integrate(inst, dt)  # touched: cost stays flat)
+                if inst.throttled:
+                    m.throttled_s += dt
             if self._spot:  # integrate the piecewise-constant spot price
                 amt = dt / 3600.0 * self._cur_costs[inst.type_index]
                 m.total_cost += amt
@@ -334,7 +380,70 @@ class Simulator:
         t = 1.0
         for w2 in self._colocated_running(tid):
             t *= self._m[ts.workload, w2]
+        if self._credits and self.instances[ts.src].throttled:
+            t *= self._credit_models[
+                self.instances[ts.src].type_index].baseline_fraction
         return t
+
+    # ------------------------------------------------------------- credits
+    def _instance_duty(self, inst: _Instance) -> float:
+        """Busy intensity of an instance: the largest burst duty cycle among
+        its RUNNING resident tasks (0 when nothing runs)."""
+        duty = 0.0
+        for tid in inst.residents:
+            if self.tasks[tid].state == RUNNING:
+                d = WORKLOADS[self.tasks[tid].workload].burst_duty
+                if d > duty:
+                    duty = d
+        return duty
+
+    def _credit_integrate(self, inst: _Instance, dt: float) -> None:
+        """Advance an instance's credit balance by ``dt`` seconds of the
+        *current* (pre-event) duty.  Throttled instances stay pinned at
+        zero: the accrual is consumed by the baseline itself."""
+        cm = self._credit_models[inst.type_index]
+        if cm is None or inst.throttled:
+            return
+        net = cm.accrual_per_hour - self._instance_duty(inst)  # per hour
+        inst.credit_hours = min(cm.credit_cap_hours,
+                                max(0.0, inst.credit_hours + net * dt / 3600.0))
+
+    def _credit_reproject(self, inst: _Instance) -> None:
+        """Recompute throttle state and (re)project the deterministic
+        exhaustion event after any change to the instance's RUNNING set."""
+        cm = self._credit_models[inst.type_index]
+        if cm is None or not inst.alive:
+            return
+        inst.credit_seq += 1  # invalidate any in-flight projection
+        duty = self._instance_duty(inst)
+        drain = cm.drain_per_hour(duty)
+        if duty <= 0.0 or drain <= 0.0:
+            inst.throttled = False  # idle or sustainable duty: (re)accruing
+            return
+        if inst.credit_hours <= 1e-9:
+            inst.credit_hours = 0.0
+            if not inst.throttled:
+                inst.throttled = True
+                self._on_credit_exhausted(inst)
+            return
+        inst.throttled = False
+        eta = self.now + inst.credit_hours / drain * 3600.0
+        self._push(eta, CREDIT_EXHAUST, (inst.iid, inst.credit_seq))
+
+    def _on_credit_exhausted(self, inst: _Instance) -> None:
+        """An instance just throttled: surface the credit-pressure signal
+        (mirrors the spot revocation-notice wiring — scheduler callback +
+        an immediate extra round so it can react within the round)."""
+        self.metrics.credit_exhaustions += 1
+        self.scheduler.on_credit_pressure([inst.iid], self.now)
+        if self._round_scheduled_at != self.now:
+            self._push(self.now, ROUND, ())
+
+    def _on_credit_exhaust_event(self, iid: int, seq: int) -> None:
+        inst = self.instances.get(iid)
+        if inst is None or not inst.alive or inst.credit_seq != seq:
+            return  # stale projection
+        self._touch_instance_jobs(iid)  # reprojects credits + job rates
 
     def _job_rate(self, jid: int) -> float:
         js = self.jobs[jid]
@@ -359,6 +468,9 @@ class Simulator:
         inst = self.instances.get(iid)
         if inst is None:
             return
+        if self._credits and inst.alive:
+            # throttle state first: job rates below depend on it
+            self._credit_reproject(inst)
         jids = {self.tasks[t].job_id for t in inst.residents | inst.assigned}
         for j in jids:
             self._touch_job(j)
@@ -389,6 +501,10 @@ class Simulator:
         acq = float(np.clip(6.0 + self.rng.exponential(13.0), 6.0, 83.0))
         setup = float(self.rng.uniform(140.0, 251.0))
         inst = _Instance(iid, k, self.now, self.now + acq + setup)
+        if self._credits:
+            cm = self._credit_models[k]
+            if cm is not None:
+                inst.credit_hours = cm.effective_launch_hours
         self.instances[iid] = inst
         self.metrics.instances_launched += 1
         self._push(inst.ready_t, INSTANCE_READY, (iid,))
@@ -461,16 +577,19 @@ class Simulator:
         plan = diff_configs(live_view, config)
 
         # map plan slots to concrete instances (reuse matched, launch fresh).
-        # A revoked instance may only be reused by a slot that keeps some of
-        # its current tasks (a non-spot-aware scheduler rides out the
-        # notice); a zero-overlap match would land brand-new tasks on a
-        # doomed instance, so it launches fresh instead.
+        # A revoked (spot notice) or throttled (exhausted credits) instance
+        # may only be reused by a slot that keeps some of its current tasks
+        # (a non-aware scheduler rides it out); a zero-overlap match would
+        # land brand-new tasks on a doomed/baseline-pinned instance, so it
+        # launches fresh instead — a fresh burstable instance comes with
+        # launch credits, not someone's exhausted balance.
         slot_inst: Dict[int, Optional[_Instance]] = {}
         for slot, (k, tids, matched) in enumerate(plan.slots):
             if matched is not None:
                 minst = self.instances[matched]
-                if (self._spot and minst.preempt_deadline is not None
-                        and not (set(tids) & minst.assigned)):
+                doomed = ((self._spot and minst.preempt_deadline is not None)
+                          or (self._credits and minst.throttled))
+                if doomed and not (set(tids) & minst.assigned):
                     slot_inst[slot] = self._launch_or_deny(k)
                 else:
                     slot_inst[slot] = minst
@@ -554,6 +673,12 @@ class Simulator:
             states = [self.tasks[t.task_id] for t in tasks]
             if any(s.state != RUNNING for s in states):
                 continue
+            if self._credits and any(self.instances[s.src].throttled
+                                     for s in states):
+                # throttle-confounded sample: the observed slowdown is the
+                # credit baseline, not co-location interference — withhold
+                # it from the monitor (credit state is cloud-visible)
+                continue
             placements = []
             tputs = []
             for t in tasks:
@@ -601,11 +726,22 @@ class Simulator:
         if self._regions is not None:
             ckpt_region = {t: self.tasks[t].ckpt_region for t in tids
                            if self.tasks[t].ckpt_region is not None}
+        instance_credits = None
+        throttled = None
+        if self._credits:
+            instance_credits, throttled = {}, set()
+            for i in self._live_instances():
+                if self._credit_models[i.type_index] is not None:
+                    instance_credits[i.iid] = i.credit_hours
+                    if i.throttled:
+                        throttled.add(i.iid)
         view = SchedulerView(
             time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
             task_workload={t: self.tasks[t].workload for t in tids},
             remaining_s=remaining or None, revoked=revoked or None,
-            task_ckpt_region=ckpt_region or None)
+            task_ckpt_region=ckpt_region or None,
+            instance_credits=instance_credits or None,
+            throttled=throttled or None)
         config = self.scheduler.schedule(view)
         self._execute_config(config)
 
@@ -668,10 +804,12 @@ class Simulator:
         js.done_t = self.now
         js.job.completion_time = self.now
         self._jobs_outstanding -= 1
-        if self._spot and self._jobs_outstanding == 0:
-            # drop remaining one-shot breakpoint events (a long price trace
-            # would otherwise no-op through the heap and inflate end_time)
-            self._heap = [e for e in self._heap if e[1] != PRICE_UPDATE]
+        if (self._spot or self._credits) and self._jobs_outstanding == 0:
+            # drop remaining one-shot breakpoint / credit-exhaustion events
+            # (a long price trace or a far-out exhaustion projection would
+            # otherwise no-op through the heap and inflate end_time)
+            self._heap = [e for e in self._heap
+                          if e[1] not in (PRICE_UPDATE, CREDIT_EXHAUST)]
             heapq.heapify(self._heap)
         self.metrics.jct_sum += self.now - js.job.arrival_time
         self.metrics.idle_sum += js.idle_s
@@ -788,6 +926,8 @@ class Simulator:
                 self._on_price_update(*payload)
             elif kind == PREEMPT_FIRE:
                 self._on_preempt_fire(*payload)
+            elif kind == CREDIT_EXHAUST:
+                self._on_credit_exhaust_event(*payload)
             elif kind == ROUND:
                 self._run_round()
                 if self._live_task_ids():

@@ -13,6 +13,10 @@
   keeping the trace's own resource demands — exactly the paper's procedure.
 * knobs for §6.6-6.8: multi-GPU composition (5:4:1 of 2/4/8-GPU jobs),
   multi-task share (1:1 of 2-/4-task jobs), arrival-rate scaling.
+* ``burstable_trace`` — CPU-only jobs (the Table-7 workloads burstable
+  T-family instances can host) with durations long enough to outlast a
+  fresh instance's launch credits; the bundled trace for
+  ``benchmarks/bench_credits.py`` and the credit tests.
 """
 from __future__ import annotations
 
@@ -63,6 +67,25 @@ def physical_trace(n_jobs: int = 120, seed: int = 0,
     for _ in range(n_jobs):
         t += rng.exponential(mean_interarrival_s)
         w = int(rng.integers(NUM_WORKLOADS))
+        dur = rng.uniform(*duration_range_h) * 3600.0
+        jobs.append(_table7_job(rng, w, t, dur))
+    return jobs
+
+
+def burstable_trace(n_jobs: int = 16, seed: int = 11,
+                    mean_interarrival_s: float = 900.0,
+                    duration_range_h=(0.6, 1.5)) -> List[Job]:
+    """CPU-only trace for the burstable-credit scenario: jobs drawn from the
+    Table-7 CPU workloads (gcn / a3c / diamond / openfoam — the shapes a
+    T-family instance can host), with durations that outlast the bundled
+    demo catalog's launch credits so credit-blind schedulers actually hit
+    the throttle mid-job."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    jobs = []
+    for _ in range(n_jobs):
+        t += rng.exponential(mean_interarrival_s)
+        w = int(rng.choice(_CPU_WORKLOADS))
         dur = rng.uniform(*duration_range_h) * 3600.0
         jobs.append(_table7_job(rng, w, t, dur))
     return jobs

@@ -27,9 +27,24 @@ Public API (see docs/ARCHITECTURE.md for how it plugs into scheduling):
   checkpoint-transfer penalty a cross-region migration pays.
   ``dispersed_demo_regions()`` builds the bundled 3-region staggered
   cheap-window market used by benchmarks and tests.
+* ``CreditModel`` — the burstable (AWS T-family / CASH) layer: an instance
+  type may carry a credit model (baseline fraction, accrual rate, cap,
+  launch credits).  A burstable instance runs at full speed while its
+  credit balance lasts and is throttled to ``baseline_fraction`` once it
+  hits zero — while its *hourly price never changes*.  The catalog exposes
+  the state-dependent economics: ``avg_speed_over(horizon_s, balances)``
+  forecasts the mean effective throughput of each type over a horizon and
+  ``credit_priced(horizon_s, balances)`` returns a planning snapshot whose
+  costs are effective $/throughput (cost ÷ forecast speed) so reservation
+  prices and Algorithm 1 see a burstable type as cheap only while its
+  forecast credits last.  ``burstable_demo_catalog()`` bundles the demo
+  market (on-demand AWS types + discounted burstable c7i variants) used by
+  ``benchmarks/bench_credits.py`` and the credit tests.
 
 Single-region catalogs carry ``regions=None`` and take none of the
 multi-region code paths: their behaviour is bit-for-bit the PR-1 catalog.
+Catalogs without burstable types carry ``credit_models=None`` and take none
+of the credit code paths (``credit_priced`` is the identity there).
 """
 from __future__ import annotations
 
@@ -47,11 +62,79 @@ FAMILIES = ("p3", "c7i", "r7i")
 
 
 @dataclasses.dataclass(frozen=True)
+class CreditModel:
+    """Burstable-instance credit dynamics (AWS T-family / CASH, Sharma 2020).
+
+    Credits are measured in *full-speed hours*: one credit-hour buys one
+    hour of full-throughput compute.  A busy instance drains its balance at
+    ``duty − accrual_per_hour`` per hour (``duty`` is the busiest resident
+    task's burst duty cycle, 1.0 by default); an idle one accrues at
+    ``accrual_per_hour`` up to ``credit_cap_hours``.  At zero balance a
+    busy instance is *throttled*: every resident task progresses at
+    ``baseline_fraction`` of its normal rate while the hourly price is
+    billed unchanged — the cost/throughput asymmetry credit-aware
+    scheduling exploits.  While throttled the accrual is consumed by the
+    baseline itself, so the balance stays pinned at zero until the
+    instance goes idle.  Fresh instances start with
+    ``launch_credit_hours`` (AWS T3 launch credits).
+
+    ``accrual_per_hour`` defaults to ``baseline_fraction`` — the T-family
+    identity (the baseline is exactly the sustainable duty).
+    """
+
+    baseline_fraction: float
+    accrual_per_hour: Optional[float] = None
+    credit_cap_hours: float = 2.0
+    launch_credit_hours: float = 0.5
+
+    def __post_init__(self):
+        assert 0.0 < self.baseline_fraction < 1.0
+        if self.accrual_per_hour is None:
+            object.__setattr__(self, "accrual_per_hour",
+                               self.baseline_fraction)
+
+    @property
+    def effective_launch_hours(self) -> float:
+        """Launch balance actually granted: the cap bounds it, and planner
+        (``Catalog.launch_balances``) and simulator must agree on it."""
+        return min(self.launch_credit_hours, self.credit_cap_hours)
+
+    def drain_per_hour(self, duty: float = 1.0) -> float:
+        """Net balance change per busy hour (negative = accruing)."""
+        return float(duty) - self.accrual_per_hour
+
+    def burst_hours(self, balance_h: float, duty: float = 1.0) -> float:
+        """Busy hours until a balance exhausts (inf for sustainable duty)."""
+        d = self.drain_per_hour(duty)
+        if d <= 0.0:
+            return float("inf")
+        return max(float(balance_h), 0.0) / d
+
+    def speed(self, balance_h: float) -> float:
+        """Instantaneous effective-throughput factor at a balance."""
+        return 1.0 if balance_h > 1e-9 else self.baseline_fraction
+
+    def avg_speed_over(self, balance_h: float, horizon_h: float,
+                       duty: float = 1.0) -> float:
+        """Forecast mean effective-throughput factor over ``horizon_h``
+        busy hours starting from ``balance_h``: full speed while the
+        balance lasts, ``baseline_fraction`` after."""
+        if horizon_h <= 0.0:
+            return self.speed(balance_h)
+        t_full = self.burst_hours(balance_h, duty)
+        if t_full >= horizon_h:
+            return 1.0
+        return (t_full + (horizon_h - t_full) * self.baseline_fraction) \
+            / horizon_h
+
+
+@dataclasses.dataclass(frozen=True)
 class InstanceType:
     name: str
     family: str
     capacity: tuple  # (gpu, cpu, ram_gb)
     hourly_cost: float
+    credit_model: Optional[CreditModel] = None  # burstable types only
 
     @property
     def family_id(self) -> int:
@@ -357,6 +440,9 @@ class Catalog:
     base_index : (K,) int64 — index of each type in the un-expanded base
                  catalog (same base_index across regions = same hardware)
     transfer   : cross-region ``TransferMatrix`` (multi-region only)
+    credit_models : burstable catalogs only — one ``Optional[CreditModel]``
+                 per type (None entries = ordinary on-demand/spot types);
+                 None when no type in the catalog is burstable
     """
 
     types: tuple
@@ -370,6 +456,7 @@ class Catalog:
     region_ids: Optional[np.ndarray] = None
     base_index: Optional[np.ndarray] = None
     transfer: Optional[TransferMatrix] = None
+    credit_models: Optional[tuple] = None
 
     @staticmethod
     def from_types(types: Sequence[InstanceType],
@@ -379,7 +466,11 @@ class Catalog:
         costs = np.array([t.hourly_cost for t in types], dtype=np.float64)
         fam = np.array([t.family_id for t in types], dtype=np.int64)
         order = np.argsort(-costs, kind="stable")
-        return Catalog(types, caps, costs, fam, order, price_model)
+        credits = None
+        if any(t.credit_model is not None for t in types):
+            credits = tuple(t.credit_model for t in types)
+        return Catalog(types, caps, costs, fam, order, price_model,
+                       credit_models=credits)
 
     def __len__(self) -> int:
         return len(self.types)
@@ -442,6 +533,56 @@ class Catalog:
         return dataclasses.replace(self, costs=costs, order_desc=order,
                                    base_costs=base)
 
+    # -- burstable credits --------------------------------------------------
+    @property
+    def is_burstable(self) -> bool:
+        return self.credit_models is not None
+
+    @property
+    def launch_balances(self) -> np.ndarray:
+        """(K,) launch-credit hours per type (0 for non-burstable types)."""
+        if self.credit_models is None:
+            return np.zeros(len(self))
+        return np.array([0.0 if cm is None else cm.effective_launch_hours
+                         for cm in self.credit_models])
+
+    def avg_speed_over(self, horizon_s: float,
+                       balances: Optional[np.ndarray] = None) -> np.ndarray:
+        """(K,) forecast mean effective-throughput factor of each type over
+        a ``horizon_s`` busy window: 1.0 for non-burstable types, the
+        credit-adjusted average for burstable ones.  ``balances`` defaults
+        to the launch-credit balance of a fresh instance of each type."""
+        out = np.ones(len(self))
+        if self.credit_models is None:
+            return out
+        bal = self.launch_balances if balances is None \
+            else np.asarray(balances, dtype=np.float64)
+        h = float(horizon_s) / 3600.0
+        for k, cm in enumerate(self.credit_models):
+            if cm is not None:
+                out[k] = cm.avg_speed_over(float(bal[k]), h)
+        return out
+
+    def credit_priced(self, horizon_s: Optional[float],
+                      balances: Optional[np.ndarray] = None) -> "Catalog":
+        """Planning snapshot priced at effective $/throughput over a horizon.
+
+        Each burstable type's cost is divided by its forecast mean speed
+        (``avg_speed_over``), so a type whose credits will not last the
+        horizon looks proportionally dearer to reservation prices and to
+        Algorithm 1's descending-cost order — which is recomputed.  The
+        identity for non-burstable catalogs (and ``horizon_s=None``), so
+        on-demand/spot/multi-region paths are bit-for-bit unchanged.
+        Billing always uses the *raw* costs: throttling never discounts
+        the bill, which is the asymmetry this view prices in.
+        """
+        if self.credit_models is None or horizon_s is None:
+            return self
+        speed = self.avg_speed_over(horizon_s, balances)
+        costs = self.costs / speed
+        order = np.argsort(-costs, kind="stable")
+        return dataclasses.replace(self, costs=costs, order_desc=order)
+
 
 def aws_catalog(price_model: Optional[PriceModel] = None) -> Catalog:
     return Catalog.from_types(AWS_CATALOG, price_model)
@@ -474,7 +615,8 @@ def multi_region_catalog(regions: Sequence[Region],
         for b_i, t in enumerate(base):
             types.append(InstanceType(f"{region.name}/{t.name}", t.family,
                                       t.capacity,
-                                      t.hourly_cost * region.cost_scale))
+                                      t.hourly_cost * region.cost_scale,
+                                      credit_model=t.credit_model))
             rids.append(r_i)
             bidx.append(b_i)
     pm: Optional[PriceModel] = None
@@ -488,6 +630,47 @@ def multi_region_catalog(regions: Sequence[Region],
         cat, regions=regions,
         region_ids=np.asarray(rids, dtype=np.int64),
         base_index=np.asarray(bidx, dtype=np.int64), transfer=transfer)
+
+
+# --------------------------------------------------------------------------
+# burstable demo market
+# --------------------------------------------------------------------------
+# Burstable variants cover the c7i sizes the Table-7 CPU workloads actually
+# fit on (T-family stops well short of the 24/48xlarge metal tiers).
+_BURSTABLE_SIZES = ("large", "xlarge", "2xlarge", "4xlarge", "8xlarge",
+                    "12xlarge", "16xlarge")
+
+
+def burstable_demo_catalog(price_fraction: float = 0.42,
+                           baseline_fraction: float = 0.2,
+                           launch_credit_hours: float = 0.5,
+                           credit_cap_hours: float = 2.0,
+                           price_model: Optional[PriceModel] = None
+                           ) -> Catalog:
+    """The bundled burstable market (``bench_credits`` + credit tests).
+
+    All 21 on-demand AWS types, plus burstable ``t7i.*`` twins of the c7i
+    compute tier at ``price_fraction`` × the on-demand price, each carrying
+    a shared ``CreditModel``: a fresh instance bursts at full speed for
+    ``launch_credit_hours / (1 − accrual)`` busy hours, then throttles to
+    ``baseline_fraction``.  The defaults make the trap concrete: a
+    burstable instance is 58 % cheaper per hour, but once throttled its
+    effective price is ``price_fraction / baseline_fraction`` = 2.1× the
+    on-demand twin — credit-blind reservation prices anchor to the cheap
+    hourly sticker and ride the throttle; credit-aware ones burst while
+    the forecast balance lasts and migrate off when it runs out.
+    """
+    cm = CreditModel(baseline_fraction=baseline_fraction,
+                     credit_cap_hours=credit_cap_hours,
+                     launch_credit_hours=launch_credit_hours)
+    types = list(AWS_CATALOG)
+    by_name = {t.name: t for t in AWS_CATALOG}
+    for size in _BURSTABLE_SIZES:
+        base = by_name[f"c7i.{size}"]
+        types.append(InstanceType(f"t7i.{size}", base.family, base.capacity,
+                                  base.hourly_cost * price_fraction,
+                                  credit_model=cm))
+    return Catalog.from_types(types, price_model)
 
 
 def dispersed_demo_regions(n_regions: int = 3, low: float = 0.25,

@@ -189,7 +189,8 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
                          job_rp: Optional[np.ndarray] = None,
                          time_s: Optional[float] = None,
                          type_mask: Optional[np.ndarray] = None,
-                         region_caps: Optional[Sequence[Optional[int]]] = None
+                         region_caps: Optional[Sequence[Optional[int]]] = None,
+                         credit_horizon_s: Optional[float] = None
                          ) -> ClusterConfig:
     """Run Algorithm 1 over ``tasks`` and return the packed configuration.
 
@@ -205,10 +206,17 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
     capped-but-cheap regions fill to their cap instead of starving the
     overflow.  On a region-expanded catalog without mask or caps, Algorithm 1
     prices candidate instances across every region (region-qualified types
-    are ordinary types to it).
+    are ordinary types to it).  ``credit_horizon_s`` packs against the
+    credit-priced planning snapshot (``catalog.credit_priced``): burstable
+    types whose launch credits will not last the horizon look
+    proportionally dearer, so both the descending-cost order and the
+    cost-efficiency bar see effective $/throughput instead of the sticker
+    price (identity for non-burstable catalogs).
     """
     if time_s is not None:
         catalog = catalog.at(time_s)
+    if credit_horizon_s is not None:
+        catalog = catalog.credit_priced(credit_horizon_s)
     if len(tasks) == 0:
         return ClusterConfig([])
     region_budget = None

@@ -17,11 +17,25 @@ budget and the repack only provisions into the remaining headroom (overflow
 goes to the next-cheapest region).  On a multi-region catalog without mask
 or caps, repacked tasks are priced across every region's current prices.
 
-``keep_bonus(k, tids) -> $/h`` relaxes the keep test by the amortized cost
-of actually moving the set elsewhere — the multi-region scheduler uses it to
-charge cross-region checkpoint transfer + egress against the price gap, so
-instances are only evicted toward a cheaper market when the move pays for
-itself within the D-hat horizon.
+``keep_bonus(k, tids) -> $/h`` shifts the keep test by a per-instance slack.
+Two schedulers use it:
+
+* multi-region: a *positive* bonus equal to the amortized cost of actually
+  moving the set elsewhere (cross-region checkpoint transfer + egress over
+  the D-hat horizon), so instances are only evicted toward a cheaper market
+  when the move pays for itself;
+* credit-aware (burstable): the difference between the planning cost of a
+  *fresh* instance of the type and the effective cost of *this* instance at
+  its current credit balance.  The slack decays toward zero as the balance
+  drains and turns negative once the instance forecasts worse than a fresh
+  launch — at zero balance the keep test effectively compares TNRP against
+  ``cost / baseline_fraction``, so exhausted instances are evicted into the
+  repack set exactly when the throughput collapse makes the move worth its
+  migration cost under the ensemble's S·D̂ > ΔM criterion.
+
+``credit_horizon_s`` snapshots the catalog through
+``catalog.credit_priced`` (fresh-launch balances) before any pricing, same
+as ``full_reconfiguration``.
 """
 from __future__ import annotations
 
@@ -48,9 +62,13 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
                                 Sequence[Optional[int]]] = None,
                             keep_bonus: Optional[
                                 Callable[[int, Tuple[int, ...]], float]
-                            ] = None) -> ClusterConfig:
+                            ] = None,
+                            credit_horizon_s: Optional[float] = None
+                            ) -> ClusterConfig:
     if time_s is not None:
         catalog = catalog.at(time_s)  # all downstream prices from one instant
+    if credit_horizon_s is not None:
+        catalog = catalog.credit_priced(credit_horizon_s)
     live_task_ids = {t for _, tids in live_assignments for t in tids}
     # Drop completed tasks from live assignments.
     system_ids = set(tasks.ids.tolist())

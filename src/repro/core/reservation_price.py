@@ -20,6 +20,16 @@ region-expanded catalog (``core.catalog.multi_region_catalog``) plain
 cheapest feasible region-qualified type wins; ``regional_reservation_prices``
 exposes the per-region breakdown for region-level analyses (examples, tests,
 price-dispersion diagnostics).
+
+Burstable catalogs (``core.catalog.CreditModel``) add ``credit_horizon_s``:
+when given, prices are taken from ``catalog.credit_priced(horizon_s)`` —
+each burstable type's cost divided by its forecast mean effective
+throughput over the horizon, starting from a fresh instance's launch
+credits.  RP(τ) then answers the credit-aware question: what is the
+cheapest *effective* $/throughput way to run τ for the next D̂ seconds?  A
+burstable type whose credits outlast the horizon keeps its discounted
+sticker price; one that would throttle mid-horizon is inflated toward
+``cost / baseline_fraction``.  The identity on non-burstable catalogs.
 """
 from __future__ import annotations
 
@@ -51,11 +61,16 @@ def _masked_costs(tasks: TaskSet, catalog: Catalog,
 
 def reservation_prices(tasks: TaskSet, catalog: Catalog,
                        time_s: Optional[float] = None,
-                       type_mask: Optional[np.ndarray] = None) -> np.ndarray:
+                       type_mask: Optional[np.ndarray] = None,
+                       credit_horizon_s: Optional[float] = None) -> np.ndarray:
     """(T,) RP(τ).  Raises if some task fits no instance type (the paper
-    removes such jobs from the trace; callers should filter first)."""
+    removes such jobs from the trace; callers should filter first).
+    ``credit_horizon_s`` prices burstable types at their credit-adjusted
+    effective cost over the horizon (see module docstring)."""
     if time_s is not None:
         catalog = catalog.at(time_s)
+    if credit_horizon_s is not None:
+        catalog = catalog.credit_priced(credit_horizon_s)
     rp = _masked_costs(tasks, catalog, type_mask).min(axis=1)
     if np.any(~np.isfinite(rp)):
         bad = tasks.ids[~np.isfinite(rp)]
@@ -65,10 +80,13 @@ def reservation_prices(tasks: TaskSet, catalog: Catalog,
 
 def cheapest_type(tasks: TaskSet, catalog: Catalog,
                   time_s: Optional[float] = None,
-                  type_mask: Optional[np.ndarray] = None) -> np.ndarray:
+                  type_mask: Optional[np.ndarray] = None,
+                  credit_horizon_s: Optional[float] = None) -> np.ndarray:
     """(T,) index of the reservation-price instance type of each task."""
     if time_s is not None:
         catalog = catalog.at(time_s)
+    if credit_horizon_s is not None:
+        catalog = catalog.credit_priced(credit_horizon_s)
     return _masked_costs(tasks, catalog, type_mask).argmin(axis=1)
 
 

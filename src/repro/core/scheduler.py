@@ -3,18 +3,24 @@
 Public API (docs/ARCHITECTURE.md diagrams the round-by-round data flow):
 
 * ``SchedulerView`` — the per-round snapshot a scheduler sees: live tasks,
-  pending ids, live placements, and (spot scenarios) revocation notices.
+  pending ids, live placements, (spot scenarios) revocation notices and
+  (burstable scenarios) per-instance credit balances + throttled set.
 * ``SchedulerBase`` — ``schedule(view) -> ClusterConfig`` plus the monitor
-  hooks (``on_event``, ``on_preemption_notice``, ``observe_single/job``).
+  hooks (``on_event``, ``on_preemption_notice``, ``on_credit_pressure``,
+  ``observe_single/job``).
 * ``EvaScheduler`` — the paper's ensemble of Full and Partial
   Reconfiguration over TNRP, with the ablation knobs
   (``interference_aware``, ``multi_task_aware``, ``mode``) and the
   beyond-paper scenario flags: ``spot_aware`` (re-price each round against
-  the spot snapshot, evacuate revoked instances) and ``multi_region``
+  the spot snapshot, evacuate revoked instances), ``multi_region``
   (spot behaviour + per-region-pair arbitrage on a
   ``core.catalog.multi_region_catalog``: re-home instances to the cheapest
   region copy whenever the amortized price saving beats the cross-region
-  migration penalty).  ``region="name"`` pins a scheduler to a single
+  migration penalty) and ``credit_aware`` (burstable catalogs: price every
+  round against ``catalog.credit_priced(D̂)``, decay the keep-test slack
+  with each instance's live credit balance, and answer credit-pressure
+  signals with a forced partial that drains throttled instances onto
+  steady types).  ``region="name"`` pins a scheduler to a single
   region of a multi-region catalog (the single-market baseline).
 * ``NoPackingScheduler`` — one task per reservation-price instance (§6.1).
 
@@ -59,6 +65,10 @@ class SchedulerView:
     # task id -> region index of its durable checkpoint (multi-region only;
     # lets migration_cost price a cross-region restore of a reclaimed task)
     task_ckpt_region: Optional[Dict[int, int]] = None
+    # burstable scenarios only: live burstable instance id -> credit balance
+    # (full-speed hours), and the subset currently throttled to baseline.
+    instance_credits: Optional[Dict[int, float]] = None
+    throttled: Optional[Set[int]] = None
 
 
 class SchedulerBase:
@@ -75,6 +85,10 @@ class SchedulerBase:
 
     def on_preemption_notice(self, instance_ids: Sequence[int],
                              time_s: float) -> None:  # spot revocation notice
+        pass
+
+    def on_credit_pressure(self, instance_ids: Sequence[int],
+                           time_s: float) -> None:  # credits just exhausted
         pass
 
     def observe_single(self, workload: int, colocated: Sequence[int],
@@ -116,6 +130,40 @@ class EvaScheduler(SchedulerBase):
     migration-cost delta of the move (checkpoint transfer time + egress fee,
     priced by ``core.plan.migration_cost``).  ``region="name"`` instead pins
     all packing to one region of the catalog (single-market baseline).
+
+    ``credit_aware=True`` targets a burstable catalog (types carrying a
+    ``core.catalog.CreditModel``, e.g. ``burstable_demo_catalog``).  Three
+    mechanisms, all riding the D̂ horizon the ensemble already estimates:
+
+    * *credit-adjusted pricing* — every round plans against
+      ``catalog.credit_priced(D̂)``: each burstable type's cost is divided
+      by the forecast mean speed of a *fresh* instance over the next D̂
+      seconds, so reservation prices, Algorithm 1's order/cost-efficiency
+      bar, savings S and migration costs M all see effective $/throughput.
+      A burstable type is cheap exactly while its launch credits outlast
+      the horizon.
+    * *balance-decayed keep test* — each live burstable instance gets a
+      ``keep_bonus`` equal to the planning cost of a fresh instance minus
+      its own effective cost at its *live* balance
+      (``SchedulerView.instance_credits``).  The slack is ~0 while the
+      balance is healthy, decays as it drains, and at exhaustion the keep
+      test effectively compares TNRP against ``cost/baseline_fraction`` —
+      collapsing exactly when throughput does, so the instance's tasks are
+      evicted into the repack set and the S·D̂ > ΔM economics decide the
+      move.
+    * *credit-pressure reaction* — exhaustion signals
+      (``on_credit_pressure`` + ``SchedulerView.throttled``) force a
+      partial reconfiguration, the same wiring spot revocation notices
+      use: throttled instances are dropped from the live view, their tasks
+      join the repack set, and — because anonymous slots of the same
+      burstable type would simply re-match the exhausted instance — the
+      drain repack is masked to *steady* (non-burstable) types.  Fresh
+      arrivals in later rounds burst again on new instances with launch
+      credits.
+
+    On a catalog without burstable types ``credit_aware=True`` is inert
+    (``credit_priced`` is the identity, no bonuses, no forced drains):
+    decisions are bit-for-bit those of the PR-2 scheduler.
     """
 
     name = "eva"
@@ -125,6 +173,7 @@ class EvaScheduler(SchedulerBase):
                  default_t: float = 0.95, engine: str = "numpy",
                  migration_delay_scale: float = 1.0,
                  spot_aware: bool = False, multi_region: bool = False,
+                 credit_aware: bool = False,
                  region: Optional[str] = None):
         super().__init__(catalog)
         assert mode in ("ensemble", "full-only", "partial-only")
@@ -135,6 +184,7 @@ class EvaScheduler(SchedulerBase):
         self.migration_delay_scale = migration_delay_scale
         self.spot_aware = spot_aware
         self.multi_region = multi_region
+        self.credit_aware = credit_aware
         if multi_region:
             assert catalog.is_multi_region, \
                 "multi_region=True needs a multi_region_catalog"
@@ -151,6 +201,8 @@ class EvaScheduler(SchedulerBase):
                                       for r in catalog.regions)
         self.forced_partials = 0
         self.arbitrage_moves = 0
+        self.credit_signals = 0  # exhausted instances signalled to us
+        self.credit_drains = 0  # forced partials that drained throttled insts
         self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
         self.estimator = EventRateEstimator()
         self.decisions: List[EnsembleDecision] = []
@@ -160,6 +212,9 @@ class EvaScheduler(SchedulerBase):
     # -- monitor ------------------------------------------------------------
     def on_event(self, time_s: float) -> None:
         self.estimator.on_event(time_s)
+
+    def on_credit_pressure(self, instance_ids, time_s: float) -> None:
+        self.credit_signals += len(instance_ids)
 
     def observe_single(self, workload, colocated, value) -> None:
         if self.interference_aware:
@@ -175,25 +230,48 @@ class EvaScheduler(SchedulerBase):
         table = self.table if self.interference_aware else None
         kw = dict(interference_aware=self.interference_aware,
                   multi_task_aware=self.multi_task_aware, engine=self.engine)
-        track = self.spot_aware or self.multi_region
+        track = self.spot_aware or self.multi_region or self.credit_aware
         # Spot awareness: all prices this round come from the catalog
         # snapshot at the current time (identity for static catalogs).
-        cat = self.catalog.at(view.time) if track else self.catalog
-        keep_bonus = self._keep_bonus_fn(cat, view.task_workload)
+        raw = self.catalog.at(view.time) if track else self.catalog
+        credits_on = self.credit_aware and raw.is_burstable
+        # Credit awareness: plan against effective $/throughput over the D̂
+        # horizon (identity for non-burstable catalogs) — billing still
+        # happens at the raw prices; this is purely the planning view.
+        cat = raw.credit_priced(self.estimator.d_hat()) if credits_on else raw
+        keep_bonus = self._keep_bonus_fn(raw, cat, view, credits_on)
 
-        if track and view.revoked:
-            # Forced partial reconfiguration: evacuate revoked instances.
-            # Their tasks join the repack set; dropping the instances from
-            # the live view guarantees nothing is kept (or placed) on them.
-            live = [i for i in view.live if i.instance_id not in view.revoked]
+        evac: Set[int] = set(view.revoked) if (track and view.revoked) else set()
+        throttled: Set[int] = set()
+        if credits_on and view.throttled:
+            throttled = set(view.throttled)
+            evac |= throttled
+        if evac:
+            # Forced partial reconfiguration: evacuate revoked instances and
+            # drain throttled ones.  Their tasks join the repack set;
+            # dropping the instances from the live view guarantees nothing
+            # is kept (or placed) on them.
+            live = [i for i in view.live if i.instance_id not in evac]
             pending = set(view.pending_ids)
             for inst in view.live:
-                if inst.instance_id in view.revoked:
+                if inst.instance_id in evac:
                     pending |= set(inst.task_ids)
+            mask = self._region_mask
+            if throttled:
+                # Drain onto steady (non-burstable) types: an anonymous slot
+                # of the same burstable type would simply re-match the
+                # exhausted instance, so the escape must change type.  Fresh
+                # arrivals burst again in later (unmasked) rounds.
+                steady = np.array([cm is None for cm in raw.credit_models])
+                if mask is not None:
+                    steady = steady & mask
+                if steady.any():  # burstable-only catalogs cannot drain
+                    mask = steady
+                self.credit_drains += 1
             self.forced_partials += 1
             cfg = partial_reconfiguration(
                 view.tasks, [(i.type_index, i.task_ids) for i in live],
-                pending, cat, table, type_mask=self._region_mask,
+                pending, cat, table, type_mask=mask,
                 region_caps=self._region_caps, keep_bonus=keep_bonus, **kw)
             return self._finish(cfg, view, cat)
 
@@ -237,14 +315,17 @@ class EvaScheduler(SchedulerBase):
             return self._finish(full, view, cat)
         return self._finish(partial, view, cat)
 
-    # -- multi-region helpers ------------------------------------------------
-    def _keep_bonus_fn(self, cat: Catalog, task_workload: Dict[int, int]):
-        """Multi-region keep-test slack: the amortized ($/h over D̂) cost of
-        re-homing an instance's task set to the cheapest same-hardware region
-        copy — relaunch idle time, per-task checkpoint+launch delay,
-        checkpoint transfer time, and the egress fee.  Zero when the
-        instance already sits in the cheapest region, so intra-region
-        evictions are untouched.
+    # -- keep-test slack (multi-region + credit) -----------------------------
+    def _keep_bonus_fn(self, raw: Catalog, cat: Catalog, view: SchedulerView,
+                       credits_on: bool):
+        """Composite per-instance keep-test slack.
+
+        Multi-region part (``multi_region=True``): the amortized ($/h over
+        D̂) cost of re-homing an instance's task set to the cheapest
+        same-hardware region copy — relaunch idle time, per-task
+        checkpoint+launch delay, checkpoint transfer time, and the egress
+        fee.  Zero when the instance already sits in the cheapest region,
+        so intra-region evictions are untouched.
 
         Known trade-off: the slack assumes an eviction from a dear region
         re-homes cross-region (true when the price gap is what made the set
@@ -252,23 +333,54 @@ class EvaScheduler(SchedulerBase):
         that turned inefficient for other reasons (e.g. a completed sibling
         shrank the set) gets the same slack and may be held up to one D̂
         window before intra-region consolidation — bounded by the slack
-        being the one-off move cost spread over D̂."""
-        if not self.multi_region:
+        being the one-off move cost spread over D̂.
+
+        Credit part (``credit_aware=True`` on a burstable catalog): the
+        planning cost of a *fresh* instance of the type (``cat.costs[k]``,
+        launch-credit priced over D̂) minus the effective cost of *this*
+        instance at its live balance.  ~0 while the balance matches a fresh
+        launch, decaying below zero as credits drain; at exhaustion the
+        keep test effectively demands TNRP ≥ cost/baseline_fraction, which
+        collapses with the throughput and evicts the set into the repack."""
+        fns = []
+        task_workload = view.task_workload
+        if self.multi_region:
+            d_hr = max(self.estimator.d_hat() / 3600.0, 1e-9)
+
+            def region_bonus(k: int, tids) -> float:
+                k2 = cat.cheapest_copy(k, self._region_mask)
+                if cat.region_of(k2) == cat.region_of(k):
+                    return 0.0
+                pen = ((INSTANCE_ACQUISITION_S + INSTANCE_SETUP_S) / 3600.0
+                       * cat.costs[k2])
+                for t in tids:
+                    pen += task_move_cost(cat, task_workload[t], k, k2,
+                                          self.migration_delay_scale)
+                return pen / d_hr
+
+            fns.append(region_bonus)
+        if credits_on and view.instance_credits:
+            balances = view.instance_credits
+            task_iid = {t: i.instance_id for i in view.live
+                        for t in i.task_ids}
+            horizon_h = self.estimator.d_hat() / 3600.0
+
+            def credit_bonus(k: int, tids) -> float:
+                cm = raw.credit_models[k]
+                if cm is None or not tids:
+                    return 0.0
+                bal = balances.get(task_iid.get(tids[0], -1))
+                if bal is None:
+                    return 0.0
+                eff = raw.costs[k] / cm.avg_speed_over(bal, horizon_h)
+                return float(cat.costs[k] - eff)
+
+            fns.append(credit_bonus)
+        if not fns:
             return None
-        d_hr = max(self.estimator.d_hat() / 3600.0, 1e-9)
-
-        def bonus(k: int, tids) -> float:
-            k2 = cat.cheapest_copy(k, self._region_mask)
-            if cat.region_of(k2) == cat.region_of(k):
-                return 0.0
-            pen = ((INSTANCE_ACQUISITION_S + INSTANCE_SETUP_S) / 3600.0
-                   * cat.costs[k2])
-            for t in tids:
-                pen += task_move_cost(cat, task_workload[t], k, k2,
-                                      self.migration_delay_scale)
-            return pen / d_hr
-
-        return bonus
+        if len(fns) == 1:
+            return fns[0]
+        return lambda k, tids: sum(f(k, tids) for f in fns)
 
     def _finish(self, config: ClusterConfig, view: SchedulerView,
                 cat: Catalog) -> ClusterConfig:

@@ -1,0 +1,102 @@
+"""tools/check_docs.py — the CI docs gate — gets its own tests: the link
+checker, the fenced-bash path/module extraction, and a full run over the
+real repo docs (which must be clean, since CI enforces exactly that)."""
+import importlib.util
+import os
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", REPO / "tools" / "check_docs.py")
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def _write(root, rel, text):
+    path = root / rel
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(text)
+    return path
+
+
+def _run_in(tmp_path, monkeypatch, readme):
+    """Point the checker at a synthetic repo and collect its problems."""
+    monkeypatch.setattr(check_docs, "ROOT", str(tmp_path))
+    _write(tmp_path, "README.md", readme)
+    problems = []
+    for path in check_docs.md_files():
+        text = open(path, encoding="utf-8").read()
+        check_docs.check_links(path, text, problems)
+        check_docs.check_bash_blocks(path, text, problems)
+    return problems
+
+
+def test_md_files_covers_readme_and_docs(tmp_path, monkeypatch):
+    monkeypatch.setattr(check_docs, "ROOT", str(tmp_path))
+    _write(tmp_path, "README.md", "hi")
+    _write(tmp_path, "docs/B.md", "b")
+    _write(tmp_path, "docs/A.md", "a")
+    files = [os.path.relpath(p, tmp_path) for p in check_docs.md_files()]
+    # README first, docs sorted; nothing else scanned
+    assert files == ["README.md", os.path.join("docs", "A.md"),
+                     os.path.join("docs", "B.md")]
+
+
+def test_link_checker_flags_broken_and_accepts_good(tmp_path, monkeypatch):
+    _write(tmp_path, "docs/REAL.md", "exists")
+    problems = _run_in(tmp_path, monkeypatch,
+                       "[ok](docs/REAL.md) [anchor](docs/REAL.md#sec)\n"
+                       "[web](https://example.com) [frag](#local)\n"
+                       "[gone](docs/MISSING.md)\n")
+    assert len(problems) == 1
+    assert "MISSING.md" in problems[0] and "broken link" in problems[0]
+
+
+def test_links_resolve_relative_to_the_containing_file(tmp_path, monkeypatch):
+    # docs/X.md linking ../README.md must resolve against docs/, not ROOT
+    _write(tmp_path, "docs/X.md", "[up](../README.md) [bad](../nope.md)")
+    problems = _run_in(tmp_path, monkeypatch, "root readme")
+    assert len(problems) == 1 and "nope.md" in problems[0]
+
+
+def test_bash_blocks_flag_missing_paths_and_modules(tmp_path, monkeypatch):
+    _write(tmp_path, "benchmarks/run.py", "# exists")
+    _write(tmp_path, "examples/demo.py", "# exists")
+    readme = (
+        "```bash\n"
+        "python benchmarks/run.py --quick\n"
+        "python examples/demo.py\n"
+        "python -m benchmarks.run --quick\n"
+        "python benchmarks/bench_missing.py\n"
+        "python -m benchmarks.bench_ghost\n"
+        "```\n"
+        "outside a fence: benchmarks/never_checked.py\n")
+    problems = _run_in(tmp_path, monkeypatch, readme)
+    assert len(problems) == 2
+    joined = "\n".join(problems)
+    assert "benchmarks/bench_missing.py" in joined
+    assert "benchmarks.bench_ghost" in joined
+    assert "never_checked" not in joined  # only fenced bash is enforced
+
+
+def test_trailing_sentence_punctuation_is_stripped(tmp_path, monkeypatch):
+    _write(tmp_path, "examples/demo.py", "# exists")
+    problems = _run_in(tmp_path, monkeypatch,
+                       "```bash\nsee examples/demo.py.\n```\n")
+    assert problems == []
+
+
+def test_main_exit_codes(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(check_docs, "ROOT", str(tmp_path))
+    _write(tmp_path, "README.md", "[gone](missing.md)")
+    assert check_docs.main() == 1
+    assert "broken link" in capsys.readouterr().out
+    _write(tmp_path, "README.md", "all good")
+    assert check_docs.main() == 0
+    assert "OK" in capsys.readouterr().out
+
+
+def test_real_repo_docs_are_clean(capsys):
+    """The actual repo must pass its own gate (CI runs this same check)."""
+    assert check_docs.ROOT == str(REPO)
+    assert check_docs.main() == 0, capsys.readouterr().out

@@ -1,0 +1,428 @@
+"""Burstable-credit (CASH) layer: credit dynamics in the catalog, throttling
+in the simulator, credit-adjusted reservation prices, and the credit-aware
+Eva scheduler.
+
+Contract tests anchoring the design:
+* non-burstable catalogs are *bit-identical* to PR 2 — on-demand and spot
+  runs driven with ``credit_aware=True`` reproduce the plain runs metric
+  for metric (the credit layer is strictly additive);
+* throttling collapses throughput while the bill stays flat (the
+  cost/throughput asymmetry), and exhaustion is a deterministic event;
+* a throttled instance triggers migration off via the decayed keep test +
+  forced drain (the acceptance test), and fresh slots are never matched
+  onto exhausted instances;
+* eva-credit is strictly cheaper than credit-blind eva AND on-demand eva on
+  the bundled ``burstable_demo_catalog`` market (the benchmark/CI
+  invariant).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig, Simulator, burstable_trace
+from repro.core import (Catalog, ClusterConfig, CreditModel, EvaScheduler,
+                        InstanceType, LiveInstance, PriceModel, Region,
+                        SchedulerBase, SchedulerView, TaskSet, aws_catalog,
+                        burstable_demo_catalog, full_reconfiguration,
+                        make_job, multi_region_catalog, reservation_prices)
+
+B = 0.2  # demo baseline fraction
+PRICE_FRACTION = 0.42
+
+
+# ------------------------------------------------------------- credit model
+def test_credit_model_dynamics():
+    cm = CreditModel(baseline_fraction=B, launch_credit_hours=0.5,
+                     credit_cap_hours=2.0)
+    assert cm.accrual_per_hour == B  # T-family identity default
+    assert cm.drain_per_hour() == pytest.approx(1.0 - B)
+    assert cm.burst_hours(0.5) == pytest.approx(0.5 / 0.8)
+    # sustainable duty never exhausts
+    assert cm.burst_hours(0.5, duty=B) == float("inf")
+    assert cm.avg_speed_over(0.5, 10.0, duty=B) == 1.0
+    # instantaneous speed: full with balance, baseline at zero
+    assert cm.speed(0.3) == 1.0
+    assert cm.speed(0.0) == B
+    # average over a horizon: full while the balance lasts, baseline after
+    assert cm.avg_speed_over(0.8, 1.0) == 1.0  # 1h burst covers 1h horizon
+    assert cm.avg_speed_over(0.0, 1.0) == pytest.approx(B)
+    t_full = cm.burst_hours(0.5)
+    expect = (t_full + (2.0 - t_full) * B) / 2.0
+    assert cm.avg_speed_over(0.5, 2.0) == pytest.approx(expect)
+
+
+def test_credit_priced_identity_and_adjustment():
+    plain = aws_catalog()
+    assert plain.credit_models is None and not plain.is_burstable
+    assert plain.credit_priced(3600.0) is plain  # identity, PR-2 contract
+    cat = burstable_demo_catalog()
+    assert cat.credit_priced(None) is cat
+    burst = np.array([cm is not None for cm in cat.credit_models])
+    # zero balances: burstable types inflate by exactly 1/baseline
+    zero = cat.credit_priced(3600.0, balances=np.zeros(len(cat)))
+    np.testing.assert_allclose(zero.costs[burst], cat.costs[burst] / B)
+    np.testing.assert_array_equal(zero.costs[~burst], cat.costs[~burst])
+    # launch balances cover a short horizon: identity prices, same order
+    short = cat.credit_priced(1200.0)
+    np.testing.assert_allclose(short.costs, cat.costs)
+    # billing-side costs of the original catalog are never touched
+    np.testing.assert_array_equal(cat.costs[burst],
+                                  np.array([t.hourly_cost for t, b in
+                                            zip(cat.types, burst) if b]))
+
+
+def test_launch_credits_clamped_to_cap_everywhere():
+    """Planner and simulator must agree on the launch balance when the
+    configured launch credits exceed the cap."""
+    cm = CreditModel(baseline_fraction=B, launch_credit_hours=3.0,
+                     credit_cap_hours=2.0)
+    assert cm.effective_launch_hours == 2.0
+    cat = burstable_demo_catalog(launch_credit_hours=3.0,
+                                 credit_cap_hours=2.0)
+    k_b = cat.index_of("t7i.2xlarge")
+    assert cat.launch_balances[k_b] == 2.0  # what credit_priced forecasts
+    job = _one_job(8, 600.0)
+    sched = _Scripted(cat, [ClusterConfig([(k_b, (job.tasks[0].task_id,))])])
+    sim = Simulator(cat, [job], sched, SimConfig(seed=1))
+    sim.run()
+    # the simulator granted the same clamped balance the planner priced
+    # (minus the drain, plus setup-idle accrual — both bounded by the cap)
+    assert sim.instances[0].credit_hours <= 2.0
+
+
+def test_burstable_demo_catalog_shape():
+    cat = burstable_demo_catalog()
+    assert len(cat) == len(aws_catalog()) + 7
+    assert sum(cm is not None for cm in cat.credit_models) == 7
+    k_b = cat.index_of("t7i.2xlarge")
+    k_od = cat.index_of("c7i.2xlarge")
+    assert cat.costs[k_b] == pytest.approx(cat.costs[k_od] * PRICE_FRACTION)
+    np.testing.assert_array_equal(cat.capacities[k_b], cat.capacities[k_od])
+    # throttled, a burstable type is dearer per unit of work than its twin
+    assert cat.costs[k_b] / B > cat.costs[k_od]
+    bal = cat.launch_balances
+    assert bal[k_b] == 0.5 and bal[k_od] == 0.0
+
+
+def test_reservation_prices_credit_horizon():
+    cat = burstable_demo_catalog()
+    tasks = TaskSet(make_job(job_id=1, workload=8, arrival_time=0.0,
+                             duration_s=1000.0, n_tasks=1).tasks)  # diamond
+    k_b, k_od = cat.index_of("t7i.2xlarge"), cat.index_of("c7i.2xlarge")
+    # short horizon: launch credits outlast it -> burstable sticker price
+    rp_short = reservation_prices(tasks, cat, credit_horizon_s=1200.0)
+    assert rp_short[0] == pytest.approx(cat.costs[k_b])
+    # long horizon: the burst window is a sliver -> anchors to the on-demand
+    # twin (the credit-adjusted burstable price exceeds it)
+    rp_long = reservation_prices(tasks, cat, credit_horizon_s=8 * 3600.0)
+    assert rp_long[0] == pytest.approx(cat.costs[k_od])
+    # no horizon: the credit-blind sticker price
+    assert reservation_prices(tasks, cat)[0] == pytest.approx(cat.costs[k_b])
+
+
+def test_full_reconfig_credit_horizon_switches_types():
+    cat = burstable_demo_catalog()
+    jobs = [make_job(job_id=i + 1, workload=8, arrival_time=0.0,
+                     duration_s=1000.0, n_tasks=1) for i in range(3)]
+    tasks = TaskSet([j.tasks[0] for j in jobs])
+    short = full_reconfiguration(tasks, cat, None, credit_horizon_s=1200.0)
+    assert short.num_tasks() == 3
+    assert all(cat.credit_models[k] is not None for k, _ in short.assignments)
+    long = full_reconfiguration(tasks, cat, None, credit_horizon_s=8 * 3600.0)
+    assert long.num_tasks() == 3
+    assert all(cat.credit_models[k] is None for k, _ in long.assignments)
+
+
+def test_multi_region_catalog_carries_credit_models():
+    base = burstable_demo_catalog().types
+    regs = (Region("a"), Region("b", cost_scale=1.1))
+    cat = multi_region_catalog(regs, base_types=base)
+    assert cat.is_burstable
+    assert len(cat.credit_models) == 2 * len(base)
+    pattern = [t.credit_model is not None for t in base]
+    assert [cm is not None for cm in cat.credit_models] == pattern * 2
+    # the credit-priced planning view composes with region expansion
+    zero = cat.credit_priced(3600.0, balances=np.zeros(len(cat)))
+    k = cat.index_of("b/t7i.2xlarge")
+    assert zero.costs[k] == pytest.approx(cat.costs[k] / B)
+
+
+# ---------------------------------------------------------------- simulator
+class _Scripted(SchedulerBase):
+    """Replays a fixed list of configurations, one per round."""
+
+    name = "scripted"
+
+    def __init__(self, catalog, script):
+        super().__init__(catalog)
+        self.script = list(script)
+        self.round = 0
+
+    def schedule(self, view):
+        cfg = self.script[min(self.round, len(self.script) - 1)]
+        self.round += 1
+        return cfg
+
+
+def _one_job(workload, duration_s, arrival=0.0):
+    return make_job(job_id=1, workload=workload, arrival_time=arrival,
+                    duration_s=duration_s, n_tasks=1)
+
+
+def test_throttle_collapses_throughput_but_not_the_bill():
+    """A pinned diamond job exhausts its launch credits mid-run: progress
+    drops to the baseline rate (completion stretches accordingly) while
+    billing stays at the unchanged hourly price — the CASH asymmetry."""
+    cat = burstable_demo_catalog()
+    k_b = cat.index_of("t7i.2xlarge")
+    job = _one_job(8, 0.9 * 3600.0)  # diamond, 0.9 h of work
+    tid = job.tasks[0].task_id
+    sched = _Scripted(cat, [ClusterConfig([(k_b, (tid,))])])
+    sim = Simulator(cat, [job], sched, SimConfig(seed=1))
+    m = sim.run()
+    assert job.completion_time is not None
+    assert m.credit_exhaustions == 1
+    inst = sim.instances[0]
+    # credits accrue from request until the task starts running (setup is
+    # idle time), then drain at 1 - accrual per busy hour
+    t_run = inst.ready_t + 12.0  # diamond launch delay (Table 7)
+    bal = 0.5 + B * (t_run - inst.request_t) / 3600.0
+    t_full_h = bal / (1.0 - B)  # busy hours until exhaustion
+    assert t_full_h < 0.9  # the job really outlasts its burst window
+    # the remaining work crawls at the baseline rate
+    expect_throttled = (0.9 - t_full_h) / B * 3600.0
+    assert m.throttled_s == pytest.approx(expect_throttled, rel=1e-6)
+    assert job.completion_time == pytest.approx(
+        t_run + t_full_h * 3600.0 + expect_throttled)
+    alive_h = (inst.terminated_t - inst.request_t) / 3600.0
+    # the bill is exactly price x alive time: throttling never discounts it
+    assert m.total_cost == pytest.approx(cat.costs[k_b] * alive_h)
+    assert m.summary()["credit_exhaustions"] == 1
+
+
+def test_burst_duty_scales_the_drain():
+    """a3c (duty 0.7) drains credits slower than diamond (duty 1.0): the
+    same 0.8 h job throttles on diamond's drain rate but finishes within
+    a3c's longer burst window."""
+    cat = burstable_demo_catalog()
+    runs = {}
+    for w, type_name in ((8, "t7i.2xlarge"), (7, "t7i.xlarge")):
+        job = _one_job(w, 0.8 * 3600.0)
+        k = cat.index_of(type_name)
+        sched = _Scripted(cat, [ClusterConfig([(k, (job.tasks[0].task_id,))])])
+        runs[w] = Simulator(cat, [job], sched, SimConfig(seed=1)).run()
+    assert runs[8].credit_exhaustions == 1  # 0.8 h > 0.5/0.8 h burst
+    assert runs[7].credit_exhaustions == 0  # 0.8 h < 0.5/0.5 h burst
+    assert runs[7].throttled_s == 0.0
+
+
+class _Recorder(EvaScheduler):
+    """Credit-blind Eva that records observe_single samples and
+    credit-pressure signals."""
+
+    def __init__(self, catalog):
+        super().__init__(catalog)
+        self.samples = []
+        self.pressure = []
+
+    def observe_single(self, workload, colocated, value):
+        self.samples.append(float(value))
+        super().observe_single(workload, colocated, value)
+
+    def on_credit_pressure(self, instance_ids, time_s):
+        self.pressure.append((tuple(instance_ids), float(time_s)))
+        super().on_credit_pressure(instance_ids, time_s)
+
+
+def test_throttled_observations_withheld_from_monitor():
+    """Two co-located a3c tasks on one burstable instance: interference
+    samples flow to the monitor only while the instance is unthrottled —
+    a throttled sample would read ~baseline x interference and poison the
+    co-location table."""
+    cat = burstable_demo_catalog()
+    k = cat.index_of("t7i.2xlarge")  # fits two a3c (4 vCPU each)
+    jobs = [make_job(job_id=i + 1, workload=7, arrival_time=0.0,
+                     duration_s=2.5 * 3600.0, n_tasks=1) for i in range(2)]
+    t1, t2 = (j.tasks[0].task_id for j in jobs)
+    cfg = ClusterConfig([(k, (t1, t2))])
+    sched = _Recorder(cat)
+    sched.schedule = lambda view: cfg  # pin the placement, keep the hooks
+    m = Simulator(cat, jobs, sched, SimConfig(seed=1)).run()
+    assert m.credit_exhaustions >= 1 and m.throttled_s > 0
+    assert sched.samples, "unthrottled rounds must still report"
+    # every sample is pure co-location interference, never x baseline
+    assert min(sched.samples) > 0.5
+    assert sched.pressure and sched.pressure[0][0] == (0,)
+
+
+def test_credit_pressure_fires_an_extra_round():
+    """Exhaustion schedules an immediate extra round (off the fixed round
+    grid) so the scheduler can react within the event, mirroring the spot
+    revocation wiring."""
+    cat = burstable_demo_catalog()
+    k = cat.index_of("t7i.2xlarge")
+    job = _one_job(8, 1.2 * 3600.0)
+    tid = job.tasks[0].task_id
+
+    times = []
+
+    class _Pinned(_Scripted):
+        def schedule(self, view):
+            times.append(view.time)
+            return super().schedule(view)
+
+    sched = _Pinned(cat, [ClusterConfig([(k, (tid,))])])
+    m = Simulator(cat, [job], sched, SimConfig(seed=1)).run()
+    assert m.credit_exhaustions == 1
+    off_grid = [t for t in times if t % 300.0 != 0.0]
+    assert off_grid, "no extra round fired at the exhaustion instant"
+
+
+def test_fresh_slots_never_match_throttled_instances():
+    """Anonymous-slot matching may not hand a brand-new task an exhausted
+    instance: a zero-overlap slot of a burstable type launches fresh (with
+    launch credits) instead."""
+    cat = burstable_demo_catalog()
+    k_b = cat.index_of("t7i.2xlarge")
+    k_od = cat.index_of("c7i.2xlarge")
+    j1 = make_job(job_id=1, workload=8, arrival_time=0.0,
+                  duration_s=2.0 * 3600.0, n_tasks=1)
+    j2 = make_job(job_id=2, workload=8, arrival_time=3600.0,
+                  duration_s=0.5 * 3600.0, n_tasks=1)
+    t1, t2 = j1.tasks[0].task_id, j2.tasks[0].task_id
+
+    class _TwoPhase(SchedulerBase):
+        name = "two-phase"
+
+        def schedule(self, view):
+            ids = set(view.tasks.ids.tolist())
+            if t2 not in ids and j2.completion_time is None:
+                return ClusterConfig([(k_b, (t1,))])
+            # j1's instance is throttled by now; move t1 to on-demand and
+            # ask for a burstable instance for t2 — zero overlap with the
+            # exhausted one, so the executor must launch fresh
+            slots = [(k_od, (t1,))] if t1 in ids else []
+            if t2 in ids:
+                slots.append((k_b, (t2,)))
+            return ClusterConfig(slots)
+
+    sim = Simulator(cat, [j1, j2], _TwoPhase(cat), SimConfig(seed=1))
+    m = sim.run()
+    assert m.credit_exhaustions == 1
+    assert all(j.completion_time is not None for j in (j1, j2))
+    # three instances: t1's exhausted t7i, t1's c7i escape, t2's fresh t7i
+    assert m.instances_launched == 3
+    # t2 ran at full speed on its fresh instance: jct ~ duration + overheads
+    jct2 = j2.completion_time - j2.arrival_time
+    assert jct2 < 0.8 * 3600.0  # throttled it would take ~2.5 h
+
+
+# ------------------------------------------------- strictly additive (PR 2)
+def test_ondemand_bit_identical_with_credit_aware_flag():
+    """Acceptance: a non-burstable catalog driven by
+    EvaScheduler(credit_aware=True) reproduces the plain PR-2 run metric
+    for metric, and a plain catalog run carries no credit metrics."""
+    from repro.cluster import physical_trace
+    jobs_kw = dict(n_jobs=10, seed=11, duration_range_h=(0.3, 0.6))
+    m1 = Simulator(aws_catalog(), physical_trace(**jobs_kw),
+                   EvaScheduler(aws_catalog(), credit_aware=True),
+                   SimConfig(seed=5)).run()
+    m2 = Simulator(aws_catalog(), physical_trace(**jobs_kw),
+                   EvaScheduler(aws_catalog()), SimConfig(seed=5)).run()
+    assert m1.summary() == m2.summary()
+    assert m1.total_cost == m2.total_cost  # bit-for-bit
+    assert m1.jct_sum == m2.jct_sum
+    assert m1.migrations == m2.migrations
+    assert not m1.has_credits and "credit_exhaustions" not in m1.summary()
+
+
+def test_spot_bit_identical_with_credit_aware_flag():
+    """The spot path of PR 1/2 is also untouched: credit_aware on a
+    non-burstable spot catalog changes nothing, preemptions included."""
+    from repro.cluster import physical_trace
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    jobs_kw = dict(n_jobs=12, seed=11, duration_range_h=(0.3, 0.6))
+    cfg_kw = dict(seed=5, preemption_hazard_per_hour=0.5)
+    m1 = Simulator(aws_catalog(price_model=pm), physical_trace(**jobs_kw),
+                   EvaScheduler(aws_catalog(price_model=pm), spot_aware=True,
+                                credit_aware=True),
+                   SimConfig(**cfg_kw)).run()
+    m2 = Simulator(aws_catalog(price_model=pm), physical_trace(**jobs_kw),
+                   EvaScheduler(aws_catalog(price_model=pm), spot_aware=True),
+                   SimConfig(**cfg_kw)).run()
+    assert m1.total_cost == m2.total_cost
+    assert m1.preemptions == m2.preemptions
+    assert m1.preemption_notices == m2.preemption_notices
+    assert m1.migrations == m2.migrations
+    assert m1.instances_launched == m2.instances_launched
+
+
+# ------------------------------------------------------------ the scheduler
+def test_keep_test_healthy_balance_keeps_exhausted_drains():
+    """The balance-decayed keep test: a burstable instance with a healthy
+    balance is kept; a throttled one is drained onto its steady twin."""
+    cat = burstable_demo_catalog()
+    k_b = cat.index_of("t7i.2xlarge")
+    job = _one_job(8, 4000.0)
+    tid = job.tasks[0].task_id
+    tasks = TaskSet(job.tasks)
+
+    sched = EvaScheduler(cat, credit_aware=True)
+    healthy = SchedulerView(time=600.0, tasks=tasks, pending_ids=set(),
+                            live=[LiveInstance(0, k_b, (tid,))],
+                            task_workload={tid: 8},
+                            instance_credits={0: 0.5})
+    cfg = sched.schedule(healthy)
+    assert (k_b, (tid,)) in [(k, tuple(t)) for k, t in cfg.assignments]
+    assert sched.credit_drains == 0
+
+    exhausted = SchedulerView(time=3000.0, tasks=tasks, pending_ids=set(),
+                              live=[LiveInstance(0, k_b, (tid,))],
+                              task_workload={tid: 8},
+                              instance_credits={0: 0.0}, throttled={0})
+    cfg2 = sched.schedule(exhausted)
+    assert cfg2.num_tasks() == 1
+    assert all(cat.credit_models[k] is None for k, _ in cfg2.assignments)
+    assert sched.credit_drains == 1
+
+
+def test_throttle_triggers_migration_acceptance():
+    """Acceptance: on a single long CPU job, credit-aware Eva bursts on the
+    cheap instance, migrates off at exhaustion (S·D̂ beats ΔM once the
+    throughput collapses), and beats the credit-blind run on both cost and
+    JCT; the blind run rides the throttle to completion."""
+    runs = {}
+    for aware in (True, False):
+        cat = burstable_demo_catalog()
+        job = _one_job(8, 1.2 * 3600.0)  # diamond, 1.2 h of work
+        sched = EvaScheduler(cat, credit_aware=aware)
+        m = Simulator(cat, [job], sched, SimConfig(seed=3)).run()
+        assert job.completion_time is not None
+        runs[aware] = (m, sched, job)
+    m_aware, s_aware, j_aware = runs[True]
+    m_blind, s_blind, j_blind = runs[False]
+    # the blind run throttles and crawls; the aware run escapes
+    assert m_blind.throttled_s > 3600.0
+    assert m_aware.migrations >= 1  # it really moved off
+    assert s_aware.credit_signals >= 1  # the pressure signal arrived
+    assert s_aware.credit_drains >= 1
+    assert m_aware.throttled_s < 600.0  # at most the drain round latency
+    assert j_aware.completion_time < j_blind.completion_time
+    assert m_aware.total_cost < m_blind.total_cost
+
+
+def test_credit_aware_beats_blind_and_ondemand():
+    """Acceptance (benchmark/CI invariant): on the bundled burstable demo
+    market, credit-aware Eva is strictly cheaper than credit-blind Eva AND
+    always-on-demand Eva."""
+    costs = {}
+    for name, cat, kw in (
+            ("credit", burstable_demo_catalog(), dict(credit_aware=True)),
+            ("blind", burstable_demo_catalog(), {}),
+            ("ondemand", aws_catalog(), {})):
+        jobs = burstable_trace(n_jobs=16, seed=11)
+        m = Simulator(cat, jobs, EvaScheduler(cat, **kw),
+                      SimConfig(seed=5)).run()
+        assert all(j.completion_time is not None for j in jobs)
+        costs[name] = m.total_cost
+    assert costs["credit"] < costs["blind"]
+    assert costs["credit"] < costs["ondemand"]
