@@ -44,6 +44,9 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
             opts["multi_region"] = True
         if name == "eva-credit":
             opts["credit_aware"] = True
+        if name == "eva-autoscale":
+            opts["spot_aware"] = True
+            opts["autoscale"] = True
         opts.update(kw)
         return EvaScheduler(catalog, **opts)
     raise KeyError(name)
@@ -66,6 +69,11 @@ def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None,
     if getattr(sched, "credit_aware", False):
         out["credit_drains"] = sched.credit_drains
         out["credit_signals"] = sched.credit_signals
+    if getattr(sched, "admission", None) is not None:
+        out["admissions"] = sched.admission.admissions
+        out["forced_admissions"] = sched.admission.forced_admissions
+        out["re_deferrals"] = sched.admission.re_deferrals
+        out["held_job_rounds"] = sched.admission.held_job_rounds
     return out
 
 

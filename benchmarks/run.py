@@ -19,13 +19,13 @@ def main():
     ap.add_argument("--only", default=None,
                     help="run a single bench: micro|endtoend|multitask|"
                          "interference|migration|composition|arrival|"
-                         "roofline|spot|multiregion|credits")
+                         "roofline|spot|multiregion|credits|autoscale")
     args = ap.parse_args()
 
-    from . import (bench_arrival, bench_composition, bench_credits,
-                   bench_endtoend, bench_interference, bench_micro,
-                   bench_migration, bench_multiregion, bench_multitask,
-                   bench_roofline, bench_spot)
+    from . import (bench_arrival, bench_autoscale, bench_composition,
+                   bench_credits, bench_endtoend, bench_interference,
+                   bench_micro, bench_migration, bench_multiregion,
+                   bench_multitask, bench_roofline, bench_spot)
     benches = {
         "micro": lambda: bench_micro.run(quick=args.quick),
         "endtoend": lambda: bench_endtoend.run(quick=args.quick,
@@ -41,6 +41,8 @@ def main():
                                                      full=args.full),
         "credits": lambda: bench_credits.run(quick=args.quick,
                                              full=args.full),
+        "autoscale": lambda: bench_autoscale.run(quick=args.quick,
+                                                 full=args.full),
     }
     todo = [args.only] if args.only else list(benches)
     t0 = time.time()

@@ -1,0 +1,90 @@
+"""Price-pressure autoscaling walkthrough: horizon price forecasts,
+strike-priced admission, and deadline-bounded deferral.
+
+    PYTHONPATH=src python examples/deferrable_cluster.py [--jobs 24]
+
+1. Forecast an OU spot market: the closed-form mean-reversion forecast
+   starts at the current price and converges to the long-run anchor as the
+   horizon grows — the signal admission control trades on.
+2. Watch the strike test on one job: cheap forecast -> admit, dear
+   forecast -> hold, latest-start reached -> deadline-forced admission.
+3. Run the bundled mixed tight/loose deferrable trace under
+   admission-controlled Eva vs always-admit eva-spot and compare cost,
+   JCT, deferrals and deadline misses.
+"""
+import argparse
+
+from repro.autoscale import PriceForecaster, latest_start_s
+from repro.cluster import SimConfig, Simulator, deferrable_trace
+from repro.core import (EvaScheduler, PriceModel, TaskSet, aws_catalog,
+                        make_task, reservation_prices)
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--jobs", type=int, default=24)
+ap.add_argument("--strike", type=float, default=0.9)
+args = ap.parse_args()
+
+# -- 1. horizon price forecasts ----------------------------------------------
+pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+cat = aws_catalog(price_model=pm)
+fore = PriceForecaster.for_catalog(cat)
+now = 6 * 3600.0
+k = cat.index_of("c7i.2xlarge")
+cur = cat.at(now).costs[k]
+anchor = fore.anchor_catalog(cat, now).costs[k]
+print(f"c7i.2xlarge at t=6h: current ${cur:.3f}/h, long-run anchor "
+      f"${anchor:.3f}/h (on-demand ${cat.costs[k]:.3f}/h)")
+for h in (0.5, 2.0, 8.0, 48.0):
+    f = fore.forecast_catalog(cat, now, h * 3600.0).costs[k]
+    print(f"  forecast mean over {h:4.1f}h horizon: ${f:.3f}/h")
+print("-> the forecast starts at the current price and reverts to the "
+      "anchor;\n   a strike below 1.0 admits only when the market is "
+      "genuinely cheap")
+
+# -- 2. the strike test on one job -------------------------------------------
+tasks = TaskSet([make_task(job_id=1, workload=8)])  # diamond: 8 vCPU / 16 GB
+dur = 0.5 * 3600.0
+deadline = now + 6 * 3600.0
+ls = latest_start_s(deadline, dur)
+print(f"\none diamond job, duration {dur / 3600.0:g}h, deadline at "
+      f"t={deadline / 3600.0:g}h -> latest start t={ls / 3600.0:.2f}h "
+      f"(strike {args.strike:g})")
+for t_h in (2.0, 6.0, 16.0):
+    t = t_h * 3600.0
+    rp_f = reservation_prices(tasks, fore.forecast_catalog(cat, t, dur))[0]
+    rp_a = reservation_prices(tasks, fore.anchor_catalog(cat, t))[0]
+    verdict = "ADMIT" if rp_f <= args.strike * rp_a else "hold"
+    print(f"  t={t_h:4.1f}h  RP(forecast)=${rp_f:.4f}/h  "
+          f"strike bar=${args.strike * rp_a:.4f}/h  -> {verdict}")
+print("-> held jobs wait for a dip; the latest-start bound admits them "
+      "unconditionally")
+
+# -- 3. schedulers head to head ----------------------------------------------
+print(f"\n{args.jobs} deferrable jobs (mixed tight/loose deadlines) on the "
+      "OU spot market")
+results = {}
+for name in ("eva-autoscale", "eva-spot"):
+    c = aws_catalog(price_model=pm)
+    kw = dict(spot_aware=True)
+    if name == "eva-autoscale":
+        kw.update(autoscale=True, strike=args.strike)
+    sched = EvaScheduler(c, **kw)
+    jobs = deferrable_trace(n_jobs=args.jobs, seed=13)
+    m = Simulator(c, jobs, sched,
+                  SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()
+    results[name] = m
+    extra = ""
+    if sched.admission is not None:
+        a = sched.admission
+        extra = (f"  deferred={m.deferred_jobs} (wait "
+                 f"{m.deferred_wait_s / 3600.0:.1f}h)"
+                 f" forced={a.forced_admissions}"
+                 f" misses={m.deadline_misses}")
+    print(f"  {name:13s} ${m.total_cost:7.2f}  jct={m.avg_jct_hours:5.2f}h"
+          f"{extra}")
+
+saving = 1.0 - (results["eva-autoscale"].total_cost
+                / results["eva-spot"].total_cost)
+print(f"\nadmission-controlled Eva saves {saving:.1%} vs always-admit "
+      "eva-spot by running the deferrable jobs in the market's cheap "
+      "windows — with every deadline met")

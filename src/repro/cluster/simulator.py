@@ -52,12 +52,29 @@ scheduling-round data flow).  The simulated cloud models:
   for a new instance of a burstable type buys a new instance with launch
   credits, not someone's exhausted one.
 
-The spot, multi-region and credit layers are strictly additive: with a
-static (or absent) price model, a single-region catalog and no burstable
-types no extra events are scheduled and no extra RNG draws occur, so
-on-demand runs are bit-for-bit identical to the seed simulator.  (The
-credit layer draws no randomness at all — credit dynamics are a pure
-function of the event trajectory.)
+* optional deferrable jobs (``Job.deferrable`` / ``Job.deadline_s``, the
+  price-pressure autoscaling axis): an arrived job whose tasks a scheduler
+  declines to place stays in a *pending* (not-admitted) state — zero
+  billing, idle time accruing — until a config first assigns its tasks
+  (the ARRIVE→PENDING→ADMIT transition, recorded per job).  The view
+  surfaces ``SchedulerView.deferrable`` / ``deadline_s`` / ``pending``
+  each round; a deterministic ``DEFER_DEADLINE`` event fires at each
+  deferrable job's latest-start time (``repro.autoscale.latest_start_s``
+  on its true duration) and — if the job is still pending — signals
+  ``on_deadline_pressure`` plus an immediate extra round, the same
+  pressure wiring spot notices and credit exhaustion use.  A scheduler
+  re-deferring an admitted-but-unstarted job simply omits its tasks from
+  the config: the executor *withdraws* the not-yet-launched placements
+  (WAITING tasks only; launching/running tasks are never withdrawn).
+  ``Metrics.deadline_misses`` / ``deferred_jobs`` / ``deferred_wait_s`` /
+  ``withdrawals`` account for the axis.
+
+The spot, multi-region, credit and deferral layers are strictly additive:
+with a static (or absent) price model, a single-region catalog, no
+burstable types and no deferrable/deadlined jobs no extra events are
+scheduled and no extra RNG draws occur, so on-demand runs are bit-for-bit
+identical to the seed simulator.  (The credit and deferral layers draw no
+randomness at all — both are pure functions of the event trajectory.)
 
 Progress accounting is lazy: every state change accrues Δt into cost /
 allocation / idle-time integrals and re-projects job-completion events
@@ -73,6 +90,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from ..autoscale.admission import latest_start_s
 from ..core.catalog import Catalog, FAMILIES
 from ..core.cluster_types import ClusterConfig, Job, TaskSet
 from ..core.plan import LiveInstance, diff_configs
@@ -129,6 +147,9 @@ class _JobState:
     tput_weighted: float = 0.0  # ∫ tput dt while running
     done_t: Optional[float] = None
     arrived: bool = False
+    # deferral scenarios: instant a config first assigned this job's tasks
+    # (the PENDING→ADMIT transition); reset to None if fully withdrawn
+    admitted_t: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -184,6 +205,13 @@ class Metrics:
     has_credits: bool = False
     credit_exhaustions: int = 0
     throttled_s: float = 0.0  # Σ instance-seconds spent throttled
+    # deferral accounting (populated only when some job is deferrable or
+    # carries a deadline)
+    has_deadlines: bool = False
+    deadline_misses: int = 0
+    deferred_jobs: int = 0  # admitted later than their first possible round
+    deferred_wait_s: float = 0.0  # Σ arrival→admission wait, deferrable jobs
+    withdrawals: int = 0  # re-deferred placements released before launch
 
     @property
     def avg_jct_hours(self) -> float:
@@ -232,15 +260,22 @@ class Metrics:
         if self.has_credits:  # burstable runs only
             d["credit_exhaustions"] = self.credit_exhaustions
             d["throttled_hours"] = round(self.throttled_s / 3600.0, 2)
+        if self.has_deadlines:  # deferral/autoscale runs only
+            d["deadline_misses"] = self.deadline_misses
+            d["deferred_jobs"] = self.deferred_jobs
+            d["deferred_wait_hours"] = round(self.deferred_wait_s / 3600.0, 2)
+            d["withdrawals"] = self.withdrawals
         return d
 
 
 # event kinds (ordering within same timestamp: arrivals & completions before
-# rounds so the round sees fresh state; price updates, preemption reclaims
-# and credit exhaustions also precede rounds so the scheduler reacts to
-# current prices, notices and throttle state)
+# rounds so the round sees fresh state; price updates, preemption reclaims,
+# credit exhaustions and deferral deadlines also precede rounds so the
+# scheduler reacts to current prices, notices, throttle state and
+# latest-start signals)
 (ARRIVAL, INSTANCE_READY, CKPT_DONE, LAUNCH_DONE, JOB_DONE, FAILURE,
- PRICE_UPDATE, PREEMPT_FIRE, CREDIT_EXHAUST, ROUND) = range(10)
+ PRICE_UPDATE, PREEMPT_FIRE, CREDIT_EXHAUST, DEFER_DEADLINE,
+ ROUND) = range(11)
 
 
 class Simulator:
@@ -288,6 +323,29 @@ class Simulator:
         self._credits = self._credit_models is not None
         if self._credits:
             self.metrics.has_credits = True
+        # Deferrable jobs (price-pressure autoscaling): active only when the
+        # trace carries deferrable or deadlined jobs.  Deterministic (no
+        # RNG); all paths gated on self._deferrals so other traces are
+        # bit-for-bit untouched.  Each deferrable deadlined job gets a
+        # DEFER_DEADLINE event at its latest-start time — if still pending
+        # then, the deadline-pressure signal fires (callback + immediate
+        # round) so the admission bound is honoured between rounds.
+        self._deferrals = any(j.deferrable or j.deadline_s is not None
+                              for j in jobs)
+        if self._deferrals:
+            self.metrics.has_deadlines = True
+            # the backstop must agree with the live controller's bound, so
+            # read its (possibly customized) margin/overhead when present
+            ctl = getattr(scheduler, "admission", None)
+            ls_kw = {} if ctl is None else dict(
+                margin=ctl.margin, overhead_s=ctl.overhead_s)
+            for job in jobs:
+                if job.deferrable and job.deadline_s is not None:
+                    t = max(latest_start_s(job.deadline_s, job.duration_s,
+                                           **ls_kw),
+                            job.arrival_time)
+                    if t <= self.cfg.max_time_s:
+                        self._push(t, DEFER_DEADLINE, (job.job_id,))
         if self._spot:
             self._spot_rng = np.random.default_rng(self.cfg.seed + 0x5B07)
             self._cur_costs = pm.prices_at(catalog.costs, 0.0)
@@ -430,14 +488,20 @@ class Simulator:
         eta = self.now + inst.credit_hours / drain * 3600.0
         self._push(eta, CREDIT_EXHAUST, (inst.iid, inst.credit_seq))
 
-    def _on_credit_exhausted(self, inst: _Instance) -> None:
-        """An instance just throttled: surface the credit-pressure signal
-        (mirrors the spot revocation-notice wiring — scheduler callback +
-        an immediate extra round so it can react within the round)."""
-        self.metrics.credit_exhaustions += 1
-        self.scheduler.on_credit_pressure([inst.iid], self.now)
+    def _pressure_signal(self, notify, ids: Sequence[int]) -> None:
+        """Shared forced-reaction wiring for every scheduler-visible
+        pressure event — spot revocation notices, credit exhaustion and
+        deferral latest-start deadlines: deliver the callback, then fire an
+        immediate extra round (unless one is already queued at this
+        instant) so the scheduler can react within the event."""
+        notify(ids, self.now)
         if self._round_scheduled_at != self.now:
             self._push(self.now, ROUND, ())
+
+    def _on_credit_exhausted(self, inst: _Instance) -> None:
+        """An instance just throttled: surface the credit-pressure signal."""
+        self.metrics.credit_exhaustions += 1
+        self._pressure_signal(self.scheduler.on_credit_pressure, [inst.iid])
 
     def _on_credit_exhaust_event(self, iid: int, seq: int) -> None:
         inst = self.instances.get(iid)
@@ -571,6 +635,8 @@ class Simulator:
         ts.restore_transfer_s = 0.0  # ckpt_region keeps the durable copy
 
     def _execute_config(self, config: ClusterConfig):
+        if self._deferrals:
+            self._withdraw_deferred(config)
         live = self._live_instances()
         live_view = [LiveInstance(i.iid, i.type_index, tuple(sorted(i.assigned)))
                      for i in live]
@@ -631,6 +697,10 @@ class Simulator:
                 ts.epoch += 1
                 ts.dst = dst.iid
                 dst.assigned.add(mig.task_id)
+                if self._deferrals:  # PENDING -> ADMIT transition
+                    js = self.jobs[ts.job_id]
+                    if js.admitted_t is None:
+                        js.admitted_t = self.now
                 if ts.placed_once:
                     ts.migrations += 1
                     self.metrics.migrations += 1
@@ -735,13 +805,21 @@ class Simulator:
                     instance_credits[i.iid] = i.credit_hours
                     if i.throttled:
                         throttled.add(i.iid)
+        deferrable = deadline = pending_jobs = None
+        if self._deferrals:
+            jids = {self.tasks[t].job_id for t in tids}
+            deferrable = {j for j in jids if self.jobs[j].job.deferrable}
+            deadline = {j: float(self.jobs[j].job.deadline_s) for j in jids
+                        if self.jobs[j].job.deadline_s is not None}
+            pending_jobs = {j for j in jids if self._job_pending(j)}
         view = SchedulerView(
             time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
             task_workload={t: self.tasks[t].workload for t in tids},
             remaining_s=remaining or None, revoked=revoked or None,
             task_ckpt_region=ckpt_region or None,
             instance_credits=instance_credits or None,
-            throttled=throttled or None)
+            throttled=throttled or None, deferrable=deferrable or None,
+            deadline_s=deadline or None, pending=pending_jobs or None)
         config = self.scheduler.schedule(view)
         self._execute_config(config)
 
@@ -804,12 +882,24 @@ class Simulator:
         js.done_t = self.now
         js.job.completion_time = self.now
         self._jobs_outstanding -= 1
-        if (self._spot or self._credits) and self._jobs_outstanding == 0:
-            # drop remaining one-shot breakpoint / credit-exhaustion events
-            # (a long price trace or a far-out exhaustion projection would
-            # otherwise no-op through the heap and inflate end_time)
+        if self._deferrals:
+            if (js.job.deadline_s is not None
+                    and self.now > js.job.deadline_s):
+                self.metrics.deadline_misses += 1
+            if js.job.deferrable and js.admitted_t is not None:
+                wait = max(js.admitted_t - js.job.arrival_time, 0.0)
+                self.metrics.deferred_wait_s += wait
+                if wait > self.cfg.round_interval_s:  # held past round 1
+                    self.metrics.deferred_jobs += 1
+        if (self._spot or self._credits or self._deferrals) \
+                and self._jobs_outstanding == 0:
+            # drop remaining one-shot breakpoint / credit-exhaustion /
+            # latest-start events (a long price trace or a far-out
+            # projection would otherwise no-op through the heap and inflate
+            # end_time)
             self._heap = [e for e in self._heap
-                          if e[1] not in (PRICE_UPDATE, CREDIT_EXHAUST)]
+                          if e[1] not in (PRICE_UPDATE, CREDIT_EXHAUST,
+                                          DEFER_DEADLINE)]
             heapq.heapify(self._heap)
         self.metrics.jct_sum += self.now - js.job.arrival_time
         self.metrics.idle_sum += js.idle_s
@@ -885,11 +975,10 @@ class Simulator:
                     self._push(inst.preempt_deadline, PREEMPT_FIRE, (iid,))
                     noticed.append(iid)
         if noticed:
-            self.scheduler.on_preemption_notice(noticed, self.now)
-            # immediate extra round so the scheduler can evacuate within the
-            # notice window (unless one is already queued at this instant)
-            if self._round_scheduled_at != self.now:
-                self._push(self.now, ROUND, ())
+            # immediate reaction so the scheduler can evacuate within the
+            # notice window
+            self._pressure_signal(self.scheduler.on_preemption_notice,
+                                  noticed)
         # only the periodic chain self-perpetuates; breakpoint events are
         # one-shots scheduled up-front
         if periodic and self._jobs_outstanding > 0:
@@ -901,6 +990,46 @@ class Simulator:
             return  # evacuated and terminated before the deadline
         self.metrics.preemptions += 1
         self._kill_instance(inst, self._spot_rng)
+
+    # ----------------------------------------------------- deferral handlers
+    def _job_pending(self, jid: int) -> bool:
+        """No task of the job has started (running or mid-launch): the job
+        is still in the pending state — cheap to defer or re-defer."""
+        return all(self.tasks[t.task_id].state in (PENDING, WAITING)
+                   for t in self.jobs[jid].job.tasks)
+
+    def _on_defer_deadline(self, jid: int):
+        """A deferrable job's latest-start time arrived.  If the scheduler
+        is still holding it, signal deadline pressure (callback + immediate
+        extra round — the shared pressure wiring) so it can be admitted in
+        this very instant rather than up to a round interval late."""
+        js = self.jobs.get(jid)
+        if js is None or not js.arrived or js.done_t is not None:
+            return
+        if not self._job_pending(jid):
+            return  # already admitted and under way
+        self._pressure_signal(self.scheduler.on_deadline_pressure, [jid])
+
+    def _withdraw_deferred(self, config: ClusterConfig) -> None:
+        """Release reserved-but-unstarted placements of re-deferred jobs:
+        the config omits their tasks, so any WAITING task (assigned to an
+        instance that is still acquiring / not yet launched on) of a
+        deferrable job returns to PENDING and its slot reservation is
+        dropped before the plan diff — the vacated instance then terminates
+        or is re-matched like any other.  Tasks that are launching, running
+        or checkpointing are never withdrawn."""
+        cfg_tids = {t for _, tids in config.assignments for t in tids}
+        for inst in self._live_instances():
+            for tid in sorted(inst.assigned):
+                ts = self.tasks[tid]
+                if (tid in cfg_tids or ts.state != WAITING
+                        or not self.jobs[ts.job_id].job.deferrable):
+                    continue
+                inst.assigned.discard(tid)
+                self._make_pending(tid)
+                self.metrics.withdrawals += 1
+                if self._job_pending(ts.job_id):
+                    self.jobs[ts.job_id].admitted_t = None  # back to PENDING
 
     # ----------------------------------------------------------------- main
     def run(self) -> Metrics:
@@ -928,6 +1057,8 @@ class Simulator:
                 self._on_preempt_fire(*payload)
             elif kind == CREDIT_EXHAUST:
                 self._on_credit_exhaust_event(*payload)
+            elif kind == DEFER_DEADLINE:
+                self._on_defer_deadline(*payload)
             elif kind == ROUND:
                 self._run_round()
                 if self._live_task_ids():
@@ -936,5 +1067,10 @@ class Simulator:
         for inst in self.instances.values():
             if inst.alive:
                 self._terminate(inst)
+        if self._deferrals:  # deadlines blown by never finishing count too
+            for js in self.jobs.values():
+                if (js.done_t is None and js.job.deadline_s is not None
+                        and self.now > js.job.deadline_s):
+                    self.metrics.deadline_misses += 1
         self.metrics.end_time = self.now
         return self.metrics

@@ -17,6 +17,12 @@
   T-family instances can host) with durations long enough to outlast a
   fresh instance's launch credits; the bundled trace for
   ``benchmarks/bench_credits.py`` and the credit tests.
+* ``deferrable_trace`` — every job deferrable with a completion deadline, a
+  mixed population of deadline-*tight* jobs (almost no slack beyond the
+  latest-start margin: admission is deadline-forced nearly immediately) and
+  deadline-*loose* ones (hours of slack to wait out dear markets); the
+  bundled trace for ``benchmarks/bench_autoscale.py`` and the autoscale
+  tests.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from ..autoscale.admission import ADMIT_OVERHEAD_S, RUNTIME_MARGIN
 from ..core.catalog import FAMILIES
 from ..core.cluster_types import Job, Task
 from ..core.workloads import NUM_WORKLOADS, WORKLOADS
@@ -39,8 +46,13 @@ _task_ids = itertools.count(1_000_000)
 def _table7_job(rng, workload: int, arrival: float, duration: float) -> Job:
     prof = WORKLOADS[workload]
     job_id = next(_job_ids)
+    # workload-profile autoscaling defaults (deadline_s is arrival-relative
+    # on the profile, absolute on the job); per-job overrides come later
     job = Job(job_id=job_id, workload=workload, arrival_time=arrival,
-              duration_s=duration, n_tasks=prof.n_tasks)
+              duration_s=duration, n_tasks=prof.n_tasks,
+              deferrable=prof.deferrable,
+              deadline_s=None if prof.deadline_s is None
+              else arrival + prof.deadline_s)
     for _ in range(prof.n_tasks):
         demands = {f: prof.demand_for_family(f) for f in FAMILIES}
         job.tasks.append(Task(next(_task_ids), job_id, workload, demands))
@@ -88,6 +100,42 @@ def burstable_trace(n_jobs: int = 16, seed: int = 11,
         w = int(rng.choice(_CPU_WORKLOADS))
         dur = rng.uniform(*duration_range_h) * 3600.0
         jobs.append(_table7_job(rng, w, t, dur))
+    return jobs
+
+
+def deferrable_trace(n_jobs: int = 24, seed: int = 13,
+                     mean_interarrival_s: float = 900.0,
+                     duration_range_h=(0.3, 0.8),
+                     loose_fraction: float = 0.7,
+                     loose_window_h=(3.0, 9.0),
+                     tight_window_h=(0.0, 0.5),
+                     cpu_only: bool = False) -> List[Job]:
+    """Mixed deadline-tight / deadline-loose trace for the autoscaling axis.
+
+    Every job is deferrable and carries a completion deadline
+    ``arrival + RUNTIME_MARGIN x duration + ADMIT_OVERHEAD_S + window``, so
+    its latest-*start* slack is exactly ``window``: loose jobs
+    (``loose_fraction`` of the trace) get hours of slack to wait out dear
+    markets, tight ones are deadline-forced almost immediately — the
+    admission controller must treat them differently for the deadlines to
+    hold.  ``cpu_only=True`` restricts to the Table-7 CPU workloads (for
+    composing with the burstable market, whose T-family twins only host
+    CPU shapes)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    jobs = []
+    for _ in range(n_jobs):
+        t += rng.exponential(mean_interarrival_s)
+        w = int(rng.choice(_CPU_WORKLOADS)) if cpu_only \
+            else int(rng.integers(NUM_WORKLOADS))
+        dur = rng.uniform(*duration_range_h) * 3600.0
+        job = _table7_job(rng, w, t, dur)
+        window_h = loose_window_h if rng.uniform() < loose_fraction \
+            else tight_window_h
+        job.deferrable = True
+        job.deadline_s = (t + RUNTIME_MARGIN * dur + ADMIT_OVERHEAD_S
+                          + rng.uniform(*window_h) * 3600.0)
+        jobs.append(job)
     return jobs
 
 

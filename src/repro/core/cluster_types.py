@@ -37,6 +37,12 @@ class Job:
     duration_s: float  # standalone (no-interference) runtime
     n_tasks: int
     tasks: List[Task] = dataclasses.field(default_factory=list)
+    # price-pressure autoscaling: a deferrable job may be held pending (not
+    # admitted, zero billing) while the market is dear; ``deadline_s`` is the
+    # absolute completion deadline (None = none).  Defaults keep every
+    # existing trace on the admit-immediately path.
+    deadline_s: Optional[float] = None
+    deferrable: bool = False
     # runtime bookkeeping (filled by the simulator)
     completion_time: Optional[float] = None
 
@@ -121,10 +127,12 @@ def make_task(job_id: int, workload: int, task_id: Optional[int] = None) -> Task
 
 
 def make_job(job_id: int, workload: int, arrival_time: float, duration_s: float,
-             n_tasks: Optional[int] = None) -> Job:
+             n_tasks: Optional[int] = None, deadline_s: Optional[float] = None,
+             deferrable: bool = False) -> Job:
     prof = WORKLOADS[workload]
     n = prof.n_tasks if n_tasks is None else n_tasks
     job = Job(job_id=job_id, workload=workload, arrival_time=arrival_time,
-              duration_s=duration_s, n_tasks=n)
+              duration_s=duration_s, n_tasks=n, deadline_s=deadline_s,
+              deferrable=deferrable)
     job.tasks = [make_task(job_id, workload) for _ in range(n)]
     return job

@@ -3,11 +3,13 @@
 Public API (docs/ARCHITECTURE.md diagrams the round-by-round data flow):
 
 * ``SchedulerView`` — the per-round snapshot a scheduler sees: live tasks,
-  pending ids, live placements, (spot scenarios) revocation notices and
-  (burstable scenarios) per-instance credit balances + throttled set.
+  pending ids, live placements, (spot scenarios) revocation notices,
+  (burstable scenarios) per-instance credit balances + throttled set, and
+  (deferral scenarios) deferrable job ids, per-job deadlines and the
+  still-pending job set.
 * ``SchedulerBase`` — ``schedule(view) -> ClusterConfig`` plus the monitor
   hooks (``on_event``, ``on_preemption_notice``, ``on_credit_pressure``,
-  ``observe_single/job``).
+  ``on_deadline_pressure``, ``observe_single/job``).
 * ``EvaScheduler`` — the paper's ensemble of Full and Partial
   Reconfiguration over TNRP, with the ablation knobs
   (``interference_aware``, ``multi_task_aware``, ``mode``) and the
@@ -20,7 +22,10 @@ Public API (docs/ARCHITECTURE.md diagrams the round-by-round data flow):
   round against ``catalog.credit_priced(D̂)``, decay the keep-test slack
   with each instance's live credit balance, and answer credit-pressure
   signals with a forced partial that drains throttled instances onto
-  steady types).  ``region="name"`` pins a scheduler to a single
+  steady types) and ``autoscale`` (price-pressure admission control: a
+  ``repro.autoscale.AdmissionController`` holds deferrable jobs pending
+  while forecast prices sit above their strike, bounded by per-job
+  deadlines).  ``region="name"`` pins a scheduler to a single
   region of a multi-region catalog (the single-market baseline).
 * ``NoPackingScheduler`` — one task per reservation-price instance (§6.1).
 
@@ -69,6 +74,13 @@ class SchedulerView:
     # (full-speed hours), and the subset currently throttled to baseline.
     instance_credits: Optional[Dict[int, float]] = None
     throttled: Optional[Set[int]] = None
+    # deferral scenarios only (some job deferrable or deadlined; None
+    # otherwise): job ids marked deferrable, job id -> absolute completion
+    # deadline, and the jobs still *pending* — no task running or mid-launch,
+    # so holding (or re-deferring) them costs nothing but time.
+    deferrable: Optional[Set[int]] = None
+    deadline_s: Optional[Dict[int, float]] = None
+    pending: Optional[Set[int]] = None
 
 
 class SchedulerBase:
@@ -89,6 +101,10 @@ class SchedulerBase:
 
     def on_credit_pressure(self, instance_ids: Sequence[int],
                            time_s: float) -> None:  # credits just exhausted
+        pass
+
+    def on_deadline_pressure(self, job_ids: Sequence[int],
+                             time_s: float) -> None:  # latest start reached
         pass
 
     def observe_single(self, workload: int, colocated: Sequence[int],
@@ -164,6 +180,27 @@ class EvaScheduler(SchedulerBase):
     On a catalog without burstable types ``credit_aware=True`` is inert
     (``credit_priced`` is the identity, no bonuses, no forced drains):
     decisions are bit-for-bit those of the PR-2 scheduler.
+
+    ``autoscale=True`` adds price-pressure admission control over the job
+    population (``repro.autoscale``): each round, *before* Algorithm 1 sees
+    the task set, an ``AdmissionController`` reviews every deferrable
+    not-yet-started job (``SchedulerView.deferrable`` / ``pending`` /
+    ``deadline_s``) and holds it out of the round while the forecast
+    effective $/throughput of running it over its estimated duration
+    (``PriceForecaster`` + ``credit_priced`` — all three price axes priced
+    in) sits above its reservation-price-derived strike.  A held job's
+    tasks are simply absent from the packed task set, so nothing is
+    provisioned for them (zero billing while pending).  Each job is
+    admitted when the market dips below its strike, or unconditionally
+    once its latest-start time (deadline − margin·D̂_j − overhead)
+    arrives — deadline-forced admissions are routed through the same
+    forced-partial path spot notices and credit drains use, so they are
+    placed in the very round the ``DEFER_DEADLINE`` signal fires.
+    Admitted-but-unstarted jobs are re-deferred (with hysteresis) when
+    prices spike; the simulator withdraws their not-yet-launched
+    placements.  On a trace with no deferrable jobs the controller never
+    holds anything: decisions are bit-for-bit those of ``autoscale=False``
+    (the PR-3 scheduler).
     """
 
     name = "eva"
@@ -173,7 +210,8 @@ class EvaScheduler(SchedulerBase):
                  default_t: float = 0.95, engine: str = "numpy",
                  migration_delay_scale: float = 1.0,
                  spot_aware: bool = False, multi_region: bool = False,
-                 credit_aware: bool = False,
+                 credit_aware: bool = False, autoscale: bool = False,
+                 admission: Optional[object] = None, strike: float = 1.0,
                  region: Optional[str] = None):
         super().__init__(catalog)
         assert mode in ("ensemble", "full-only", "partial-only")
@@ -185,6 +223,7 @@ class EvaScheduler(SchedulerBase):
         self.spot_aware = spot_aware
         self.multi_region = multi_region
         self.credit_aware = credit_aware
+        self.autoscale = autoscale
         if multi_region:
             assert catalog.is_multi_region, \
                 "multi_region=True needs a multi_region_catalog"
@@ -193,6 +232,17 @@ class EvaScheduler(SchedulerBase):
             assert catalog.is_multi_region, "region= needs a multi_region_catalog"
             self._region_mask = catalog.region_type_mask(
                 catalog.region_index(region))
+        self.admission = None
+        if autoscale:
+            # deferred import: repro.autoscale itself imports core submodules
+            from ..autoscale.admission import AdmissionController
+            # a region pin restricts the strike test too: the controller may
+            # only price a job against types the packer can actually use
+            self.admission = admission if admission is not None \
+                else AdmissionController(catalog, strike=strike,
+                                         type_mask=self._region_mask)
+            # latest-start bounds need per-job duration estimates
+            self.needs_runtime_estimates = True
         # per-region instance-count budgets for the Algorithm-1 packs
         self._region_caps = None
         if multi_region and any(r.max_instances is not None
@@ -203,6 +253,7 @@ class EvaScheduler(SchedulerBase):
         self.arbitrage_moves = 0
         self.credit_signals = 0  # exhausted instances signalled to us
         self.credit_drains = 0  # forced partials that drained throttled insts
+        self.deadline_signals = 0  # latest-start deadlines signalled to us
         self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
         self.estimator = EventRateEstimator()
         self.decisions: List[EnsembleDecision] = []
@@ -215,6 +266,11 @@ class EvaScheduler(SchedulerBase):
 
     def on_credit_pressure(self, instance_ids, time_s: float) -> None:
         self.credit_signals += len(instance_ids)
+
+    def on_deadline_pressure(self, job_ids, time_s: float) -> None:
+        self.deadline_signals += len(job_ids)
+        if self.admission is not None:
+            self.admission.note_deadline(job_ids)
 
     def observe_single(self, workload, colocated, value) -> None:
         if self.interference_aware:
@@ -230,6 +286,12 @@ class EvaScheduler(SchedulerBase):
         table = self.table if self.interference_aware else None
         kw = dict(interference_aware=self.interference_aware,
                   multi_task_aware=self.multi_task_aware, engine=self.engine)
+        # Admission control first: deferrable jobs the controller holds are
+        # removed from the round's task set before anything is priced, so
+        # Algorithm 1 never provisions for them.
+        resumed: Set[int] = set()
+        if self.admission is not None and view.deferrable:
+            view, resumed = self._apply_admission(view)
         track = self.spot_aware or self.multi_region or self.credit_aware
         # Spot awareness: all prices this round come from the catalog
         # snapshot at the current time (identity for static catalogs).
@@ -246,34 +308,9 @@ class EvaScheduler(SchedulerBase):
         if credits_on and view.throttled:
             throttled = set(view.throttled)
             evac |= throttled
-        if evac:
-            # Forced partial reconfiguration: evacuate revoked instances and
-            # drain throttled ones.  Their tasks join the repack set;
-            # dropping the instances from the live view guarantees nothing
-            # is kept (or placed) on them.
-            live = [i for i in view.live if i.instance_id not in evac]
-            pending = set(view.pending_ids)
-            for inst in view.live:
-                if inst.instance_id in evac:
-                    pending |= set(inst.task_ids)
-            mask = self._region_mask
-            if throttled:
-                # Drain onto steady (non-burstable) types: an anonymous slot
-                # of the same burstable type would simply re-match the
-                # exhausted instance, so the escape must change type.  Fresh
-                # arrivals burst again in later (unmasked) rounds.
-                steady = np.array([cm is None for cm in raw.credit_models])
-                if mask is not None:
-                    steady = steady & mask
-                if steady.any():  # burstable-only catalogs cannot drain
-                    mask = steady
-                self.credit_drains += 1
-            self.forced_partials += 1
-            cfg = partial_reconfiguration(
-                view.tasks, [(i.type_index, i.task_ids) for i in live],
-                pending, cat, table, type_mask=mask,
-                region_caps=self._region_caps, keep_bonus=keep_bonus, **kw)
-            return self._finish(cfg, view, cat)
+        if evac or resumed:
+            return self._forced_partial(view, raw, cat, table, kw, keep_bonus,
+                                        evac, throttled)
 
         live_assignments = [(i.type_index, i.task_ids) for i in view.live]
         if self.mode == "full-only":
@@ -314,6 +351,58 @@ class EvaScheduler(SchedulerBase):
             self.estimator.on_full_reconfig()
             return self._finish(full, view, cat)
         return self._finish(partial, view, cat)
+
+    # -- pressure reactions (spot / credit / deferral), one shared path ------
+    def _apply_admission(self, view: SchedulerView
+                         ) -> Tuple[SchedulerView, Set[int]]:
+        """Run the admission controller and strip held jobs' tasks from the
+        round's view.  Returns the (possibly filtered) view plus the jobs
+        force-admitted by their latest-start bound this round."""
+        held, resumed = self.admission.review(view, self.estimator.d_hat())
+        if held:
+            ids = view.tasks.ids.tolist()
+            jids = view.tasks.job_ids.tolist()
+            held_t = {t for t, j in zip(ids, jids) if j in held}
+            view = dataclasses.replace(
+                view, tasks=view.tasks.subset(
+                    [t for t in ids if t not in held_t]),
+                pending_ids=set(view.pending_ids) - held_t)
+        return view, resumed
+
+    def _forced_partial(self, view: SchedulerView, raw: Catalog, cat: Catalog,
+                        table, kw, keep_bonus, evac: Set[int],
+                        throttled: Set[int]) -> ClusterConfig:
+        """Shared forced-partial wiring for every pressure signal: spot
+        revocation notices *evacuate* the doomed instances, credit
+        exhaustion *drains* throttled ones onto steady types, and a
+        deferral resume (latest-start deadline) *places* the force-admitted
+        job's tasks — all via one partial reconfiguration whose repack set
+        holds the triggering tasks.  Evacuated/drained instances are
+        dropped from the live view so nothing is kept (or placed) on them;
+        resumed jobs' tasks are already in ``pending_ids``."""
+        live = [i for i in view.live if i.instance_id not in evac]
+        pending = set(view.pending_ids)
+        for inst in view.live:
+            if inst.instance_id in evac:
+                pending |= set(inst.task_ids)
+        mask = self._region_mask
+        if throttled:
+            # Drain onto steady (non-burstable) types: an anonymous slot
+            # of the same burstable type would simply re-match the
+            # exhausted instance, so the escape must change type.  Fresh
+            # arrivals burst again in later (unmasked) rounds.
+            steady = np.array([cm is None for cm in raw.credit_models])
+            if mask is not None:
+                steady = steady & mask
+            if steady.any():  # burstable-only catalogs cannot drain
+                mask = steady
+            self.credit_drains += 1
+        self.forced_partials += 1
+        cfg = partial_reconfiguration(
+            view.tasks, [(i.type_index, i.task_ids) for i in live],
+            pending, cat, table, type_mask=mask,
+            region_caps=self._region_caps, keep_bonus=keep_bonus, **kw)
+        return self._finish(cfg, view, cat)
 
     # -- keep-test slack (multi-region + credit) -----------------------------
     def _keep_bonus_fn(self, raw: Catalog, cat: Catalog, view: SchedulerView,

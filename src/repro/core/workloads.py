@@ -15,6 +15,7 @@ only observes throughputs through the ThroughputMonitor, exactly as in §4.3.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -34,6 +35,14 @@ class WorkloadProfile:
     # CPU (burstable-instance credit drain; 1.0 = fully compute-bound).
     # Only the credit layer reads it — on non-burstable catalogs it is inert.
     burst_duty: float = 1.0
+    # Autoscaling defaults (price-pressure admission control): jobs of a
+    # deferrable workload may be held pending while the market is dear, and
+    # ``deadline_s`` is the default completion deadline relative to arrival
+    # (None = no deadline).  Trace generators stamp these onto each ``Job``
+    # (which may override them per job); the Table-7 profiles keep the
+    # non-deferrable defaults, so existing traces are untouched.
+    deferrable: bool = False
+    deadline_s: Optional[float] = None
 
     def demand_for_family(self, family: str) -> tuple:
         return self.demands.get(family, self.demands["p3"])

@@ -1,0 +1,408 @@
+"""Price-pressure autoscaling: horizon forecasts, admission control,
+deadline-bounded deferral, and the autoscale-aware Eva scheduler.
+
+Contract tests anchoring the design:
+* forecasters: the static forecast is *exact*, the OU closed form
+  converges to the long-run mean, the trace forecaster never peeks past
+  ``now``, and the region/credit layers compose;
+* ``autoscale=False`` (and ``autoscale=True`` on traces with no
+  deferrable jobs) is *bit-identical* to PR 3 on the spot, multi-region
+  and burstable demo catalogs — the deferral layer is strictly additive;
+* the simulator's pending-job state machine: zero billing while pending,
+  ``DEFER_DEADLINE`` signals fire an immediate extra round, withdrawals
+  release admitted-but-unstarted placements, deadline misses are counted;
+* eva-autoscale is strictly cheaper than always-admit eva-spot on the
+  bundled OU market with zero deadline misses (the benchmark/CI
+  invariant).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.autoscale import (ADMIT_OVERHEAD_S, RUNTIME_MARGIN,
+                             AdmissionController, OUForecaster,
+                             PriceForecaster, RegionForecaster,
+                             TraceForecaster, latest_start_s)
+from repro.cluster import (SimConfig, Simulator, burstable_trace,
+                           deferrable_trace, physical_trace)
+from repro.cluster import traces as traces_mod
+from repro.core import (ClusterConfig, EvaScheduler, PriceModel,
+                        SchedulerBase, SchedulerView, TaskSet, aws_catalog,
+                        burstable_demo_catalog, dispersed_demo_regions,
+                        make_job, multi_region_catalog)
+from repro.core.workloads import WORKLOADS
+
+
+# -------------------------------------------------------------- forecasters
+def test_static_forecast_exact():
+    cat = aws_catalog()
+    fore = PriceForecaster.for_catalog(cat)
+    assert fore.kind == "static"
+    # the static forecast is the identity: exact at every horizon
+    assert fore.forecast_catalog(cat, 0.0, 3600.0) is cat
+    assert fore.anchor_catalog(cat, 1e6) is cat
+    np.testing.assert_array_equal(fore.mean_multipliers(len(cat), 0.0, 1e5),
+                                  np.ones(len(cat)))
+    # PriceModel.static() is also dispatched to the exact passthrough
+    assert PriceForecaster.for_catalog(
+        aws_catalog(PriceModel.static())).kind == "static"
+
+
+def test_ou_forecast_converges_to_the_mean():
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.15, seed=3)
+    cat = aws_catalog(price_model=pm)
+    fore = PriceForecaster.for_catalog(cat)
+    assert isinstance(fore, OUForecaster)
+    now = 2 * 86400.0
+    cur = pm.multipliers_at(len(cat), now)
+    short = fore.mean_multipliers(len(cat), now, 300.0)
+    long = fore.mean_multipliers(len(cat), now, 30 * 86400.0)
+    # a short horizon tracks the current price, a long one the OU mean
+    np.testing.assert_allclose(short, cur, rtol=0.05)
+    np.testing.assert_allclose(long, pm.discount, rtol=0.02)
+    # convergence is monotone toward the mean
+    mid = fore.mean_multipliers(len(cat), now, 2 * 86400.0)
+    assert np.all(np.abs(mid - pm.discount)
+                  <= np.abs(short - pm.discount) + 1e-12)
+    np.testing.assert_allclose(fore.anchor_multipliers(len(cat), now),
+                               pm.discount)
+
+
+def test_trace_forecast_never_peeks_past_now():
+    times = np.arange(0.0, 10 * 3600.0, 600.0)
+    past = 0.4 + 0.1 * (np.arange(len(times)) % 3)
+    future_a, future_b = past.copy(), past.copy()
+    cut = len(times) // 2
+    future_a[cut:] = 5.0  # wildly different futures
+    future_b[cut:] = 0.01
+    now = float(times[cut]) - 1.0  # strictly before the divergence
+    f_a = TraceForecaster(PriceModel.trace(times, future_a))
+    f_b = TraceForecaster(PriceModel.trace(times, future_b))
+    for h in (600.0, 3600.0, 86400.0):
+        np.testing.assert_array_equal(f_a.mean_multipliers(4, now, h),
+                                      f_b.mean_multipliers(4, now, h))
+    np.testing.assert_array_equal(f_a.anchor_multipliers(4, now),
+                                  f_b.anchor_multipliers(4, now))
+    # the anchor is the empirical quantile of the observed history only
+    np.testing.assert_allclose(f_a.anchor_multipliers(4, now),
+                               np.quantile(past[:cut], 0.5))
+
+
+def test_trace_forecast_blends_current_into_anchor():
+    times = np.array([0.0, 600.0, 1200.0, 1800.0])
+    mult = np.array([0.8, 0.8, 0.2, 0.8])
+    fore = TraceForecaster(PriceModel.trace(times, mult))
+    now = 1200.0  # current 0.2, median hold 600 s, anchor median 0.8
+    short = fore.mean_multipliers(1, now, 60.0)[0]
+    long = fore.mean_multipliers(1, now, 6 * 3600.0)[0]
+    assert short == pytest.approx(0.2)
+    assert long > 0.7  # dominated by the anchor
+    assert fore.anchor_multipliers(1, now)[0] == pytest.approx(0.8)
+
+
+def test_region_forecaster_blocks_and_composition():
+    regs = dispersed_demo_regions(3)
+    cat = multi_region_catalog(regs)
+    fore = PriceForecaster.for_catalog(cat)
+    assert isinstance(fore, RegionForecaster)
+    n_base = len(cat) // 3
+    now = 2 * 3600.0
+    mult = fore.mean_multipliers(len(cat), now, 600.0)
+    # each region block is forecast by its own sub-model: short-horizon
+    # forecasts track each region's current (staggered) multiplier
+    cur = cat.price_model.multipliers_at(len(cat), now)
+    np.testing.assert_allclose(mult, cur, rtol=0.35)
+    assert len({round(float(m), 6) for m in mult[::n_base]}) > 1
+    snap = fore.forecast_catalog(cat, now, 600.0)
+    np.testing.assert_allclose(snap.costs, snap.base_costs * mult)
+
+
+def test_forecast_composes_with_credit_priced():
+    pm = PriceModel.mean_reverting(discount=0.5, seed=9)
+    cat = burstable_demo_catalog(price_model=pm)
+    fore = PriceForecaster.for_catalog(cat)
+    h = 8 * 3600.0
+    snap = fore.forecast_catalog(cat, 3600.0, h)
+    eff = snap.credit_priced(h)
+    k = cat.index_of("t7i.2xlarge")
+    speed = cat.avg_speed_over(h)[k]
+    assert speed < 1.0  # launch credits do not cover an 8 h horizon
+    assert eff.costs[k] == pytest.approx(snap.costs[k] / speed)
+
+
+# ------------------------------------------------------ admission controller
+def _one_job_view(cat, *, time, deadline, workload=8, remaining=1800.0,
+                  deferrable=True, pending=True):
+    job = make_job(job_id=1, workload=workload, arrival_time=0.0,
+                   duration_s=remaining, n_tasks=1,
+                   deadline_s=deadline, deferrable=deferrable)
+    tid = job.tasks[0].task_id
+    return SchedulerView(
+        time=time, tasks=TaskSet(job.tasks), pending_ids={tid}, live=[],
+        task_workload={tid: workload}, remaining_s={tid: remaining},
+        deferrable={1} if deferrable else None,
+        deadline_s={1: deadline}, pending={1} if pending else None)
+
+
+def test_latest_start_bound_forces_admission():
+    cat = aws_catalog()  # static: strike 0.9 would hold forever otherwise
+    ctl = AdmissionController(cat, strike=0.9)
+    dl = 4 * 3600.0
+    early = _one_job_view(cat, time=0.0, deadline=dl)
+    held, forced = ctl.review(early, d_hat_s=600.0)
+    assert held == {1} and not forced
+    late_t = latest_start_s(dl, 1800.0) + 1.0
+    late = _one_job_view(cat, time=late_t, deadline=dl)
+    held, forced = ctl.review(late, d_hat_s=600.0)
+    assert not held and forced == {1}
+    assert ctl.forced_admissions == 1
+    # latest_start leaves margin x duration + overhead before the deadline
+    assert late_t + RUNTIME_MARGIN * 1800.0 + ADMIT_OVERHEAD_S \
+        == pytest.approx(dl + 1.0)
+
+
+def test_strike_one_admits_on_static_market():
+    cat = aws_catalog()
+    ctl = AdmissionController(cat, strike=1.0)
+    view = _one_job_view(cat, time=0.0, deadline=8 * 3600.0)
+    held, forced = ctl.review(view, d_hat_s=600.0)
+    assert not held and not forced  # forecast == anchor bar: admit now
+    assert ctl.admissions == 1 and ctl.forced_admissions == 0
+
+
+def test_re_deferral_needs_hysteresis():
+    times = np.array([0.0, 600.0, 1200.0, 1800.0])
+    mult = np.array([0.3, 0.3, 3.0, 3.0])  # cheap history, then a spike
+    cat = aws_catalog(price_model=PriceModel.trace(times, mult))
+    ctl = AdmissionController(cat, strike=1.0, hold_hysteresis=0.25)
+    cheap = _one_job_view(cat, time=0.0, deadline=10 * 3600.0)
+    held, _ = ctl.review(cheap, d_hat_s=600.0)
+    assert not held and ctl.admissions == 1
+    # spike: still pending, forecast way above bar x (1 + hysteresis)
+    spike = _one_job_view(cat, time=1300.0, deadline=10 * 3600.0)
+    held, _ = ctl.review(spike, d_hat_s=600.0)
+    assert held == {1} and ctl.re_deferrals == 1
+    # a started job (not in view.pending) is never touched
+    started = _one_job_view(cat, time=1300.0, deadline=10 * 3600.0,
+                            pending=False)
+    held, _ = ctl.review(started, d_hat_s=600.0)
+    assert not held
+
+
+def test_region_pin_threads_mask_into_admission():
+    """A region-pinned autoscale scheduler must strike-test against the
+    pinned region's types only — another region's cheap window is not a
+    market the packer can use."""
+    cat = multi_region_catalog(dispersed_demo_regions(3))
+    pinned = EvaScheduler(cat, multi_region=True, region="region-0",
+                          autoscale=True)
+    np.testing.assert_array_equal(pinned.admission.type_mask,
+                                  cat.region_type_mask(0))
+    unpinned = EvaScheduler(cat, multi_region=True, autoscale=True)
+    assert unpinned.admission.type_mask is None
+
+
+def test_custom_margin_honoured_by_defer_deadline_backstop():
+    """The simulator's DEFER_DEADLINE backstop reads the live controller's
+    margin/overhead, so a customized (looser) bound really is admitted
+    later than the default one would be."""
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.02, seed=7)
+    cat = aws_catalog(price_model=pm)
+    dur = 0.4 * 3600.0
+    dl = RUNTIME_MARGIN * dur + ADMIT_OVERHEAD_S + 3 * 3600.0
+    job = make_job(job_id=1, workload=8, arrival_time=0.0, duration_s=dur,
+                   n_tasks=1, deadline_s=dl, deferrable=True)
+    ctl = AdmissionController(cat, strike=1e-6, margin=1.2, overhead_s=900.0)
+    sched = EvaScheduler(cat, spot_aware=True, autoscale=True, admission=ctl)
+    sim = Simulator(cat, [job], sched, SimConfig(seed=5))
+    m = sim.run()
+    custom_ls = latest_start_s(dl, dur, margin=1.2, overhead_s=900.0)
+    assert custom_ls > latest_start_s(dl, dur)  # looser bound: starts later
+    assert sim.jobs[1].admitted_t == pytest.approx(custom_ls, abs=1.0)
+    assert m.deadline_misses == 0
+
+
+# ------------------------------------------------------------- the simulator
+def test_deferral_state_machine_zero_billing_while_pending():
+    """A deferrable job on a market that never dips below its strike stays
+    PENDING (zero billing) until its latest-start bound admits it; the
+    deadline still holds and the wait is accounted."""
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.02, seed=7)
+    cat = aws_catalog(price_model=pm)
+    dur = 0.4 * 3600.0
+    dl = RUNTIME_MARGIN * dur + ADMIT_OVERHEAD_S + 4 * 3600.0
+    job = make_job(job_id=1, workload=8, arrival_time=0.0, duration_s=dur,
+                   n_tasks=1, deadline_s=dl, deferrable=True)
+    sched = EvaScheduler(cat, spot_aware=True, autoscale=True, strike=1e-6)
+    sim = Simulator(cat, [job], sched, SimConfig(seed=5))
+    m = sim.run()
+    js = sim.jobs[1]
+    assert job.completion_time is not None and m.deadline_misses == 0
+    # held ~4 h, admitted only by the deadline bound
+    assert js.admitted_t == pytest.approx(latest_start_s(dl, dur), abs=301.0)
+    assert sched.admission.forced_admissions == 1
+    assert sched.deadline_signals >= 1  # DEFER_DEADLINE signal arrived
+    assert m.deferred_jobs == 1
+    assert m.deferred_wait_s == pytest.approx(js.admitted_t)
+    # zero billing while pending: exactly one instance, billed only from
+    # its (post-admission) request
+    assert m.instances_launched == 1
+    inst = sim.instances[0]
+    assert inst.request_t >= js.admitted_t
+    summary = m.summary()
+    assert summary["deadline_misses"] == 0 and summary["deferred_jobs"] == 1
+
+
+def test_defer_deadline_fires_extra_round_off_grid():
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.02, seed=7)
+    cat = aws_catalog(price_model=pm)
+    dur = 0.4 * 3600.0
+    dl = RUNTIME_MARGIN * dur + ADMIT_OVERHEAD_S + 2 * 3600.0 + 77.0
+    job = make_job(job_id=1, workload=8, arrival_time=0.0, duration_s=dur,
+                   n_tasks=1, deadline_s=dl, deferrable=True)
+    times = []
+
+    class _Probe(EvaScheduler):
+        def schedule(self, view):
+            times.append(view.time)
+            return super().schedule(view)
+
+    sched = _Probe(cat, spot_aware=True, autoscale=True, strike=1e-6)
+    Simulator(cat, [job], sched, SimConfig(seed=5)).run()
+    ls = latest_start_s(dl, dur)
+    assert ls % 300.0 != 0.0 and ls in times, \
+        "no extra round fired at the latest-start instant"
+
+
+class _AssignThenDrop(SchedulerBase):
+    """Assigns the task in round 1, omits it for ``drop_rounds`` rounds
+    (re-deferral), then assigns again — exercising the executor's
+    withdrawal of a reserved-but-unstarted placement."""
+
+    name = "assign-then-drop"
+
+    def __init__(self, catalog, k, tid, drop_rounds=2):
+        super().__init__(catalog)
+        self.k, self.tid = k, tid
+        self.drop = range(2, 2 + drop_rounds)
+        self.round = 0
+
+    def schedule(self, view):
+        self.round += 1
+        if self.round in self.drop or self.tid not in set(
+                view.tasks.ids.tolist()):
+            return ClusterConfig([])
+        return ClusterConfig([(self.k, (self.tid,))])
+
+
+def test_withdrawal_releases_unstarted_placement():
+    cat = aws_catalog()
+    job = make_job(job_id=1, workload=8, arrival_time=0.0,
+                   duration_s=1200.0, n_tasks=1,
+                   deadline_s=10 * 3600.0, deferrable=True)
+    tid = job.tasks[0].task_id
+    k = cat.index_of("c7i.2xlarge")
+    # 120 s rounds: round 2 lands inside the ~230 s acquisition+setup
+    # window, so the task is still WAITING when the config omits it
+    sched = _AssignThenDrop(cat, k, tid)
+    sim = Simulator(cat, [job], sched, SimConfig(seed=1,
+                                                 round_interval_s=120.0))
+    m = sim.run()
+    assert m.withdrawals >= 1
+    assert job.completion_time is not None and m.deadline_misses == 0
+    # the withdrawn placement's instance was released and a fresh one
+    # carried the job
+    assert m.instances_launched >= 2
+
+
+def test_deferrable_trace_shape():
+    jobs = deferrable_trace(n_jobs=40, seed=13)
+    assert all(j.deferrable and j.deadline_s is not None for j in jobs)
+    slack = [j.deadline_s - j.arrival_time - RUNTIME_MARGIN * j.duration_s
+             - ADMIT_OVERHEAD_S for j in jobs]
+    assert min(slack) >= 0.0  # every deadline is meetable at latest start
+    assert min(slack) <= 0.5 * 3600.0  # tight population present
+    assert max(slack) >= 3 * 3600.0  # loose population present
+    cpu = deferrable_trace(n_jobs=10, seed=13, cpu_only=True)
+    assert all(WORKLOADS[j.workload].demands["p3"][0] == 0 for j in cpu)
+
+
+def test_workload_profile_defaults_stamped(monkeypatch):
+    profiles = list(WORKLOADS)
+    profiles[8] = dataclasses.replace(profiles[8], deferrable=True,
+                                      deadline_s=7200.0)
+    monkeypatch.setattr(traces_mod, "WORKLOADS", tuple(profiles))
+    rng = np.random.default_rng(0)
+    job = traces_mod._table7_job(rng, 8, arrival=100.0, duration=600.0)
+    assert job.deferrable and job.deadline_s == pytest.approx(7300.0)
+    plain = traces_mod._table7_job(rng, 3, arrival=100.0, duration=600.0)
+    assert not plain.deferrable and plain.deadline_s is None
+
+
+# ------------------------------------------------- strictly additive (PR 3)
+def _bit_identical(catalog_fn, trace_fn, sched_kw, cfg_kw):
+    m = []
+    for autoscale in (True, False):
+        cat = catalog_fn()
+        kw = dict(sched_kw)
+        if autoscale:
+            kw["autoscale"] = True
+        sim = Simulator(cat, trace_fn(), EvaScheduler(cat, **kw),
+                        SimConfig(**cfg_kw))
+        m.append(sim.run())
+    assert m[0].summary() == m[1].summary()
+    assert m[0].total_cost == m[1].total_cost  # bit-for-bit
+    assert m[0].migrations == m[1].migrations
+    assert m[0].instances_launched == m[1].instances_launched
+    assert not m[0].has_deadlines and "deadline_misses" not in m[0].summary()
+
+
+def test_autoscale_bit_identical_on_spot_catalog():
+    """Acceptance: with no deferrable jobs in the trace, autoscale=True
+    reproduces the autoscale=False (PR 3) spot run metric for metric."""
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    _bit_identical(
+        lambda: aws_catalog(price_model=pm),
+        lambda: physical_trace(n_jobs=10, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(spot_aware=True),
+        dict(seed=5, preemption_hazard_per_hour=0.5))
+
+
+def test_autoscale_bit_identical_on_multiregion_catalog():
+    _bit_identical(
+        lambda: multi_region_catalog(dispersed_demo_regions(3)),
+        lambda: physical_trace(n_jobs=8, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(multi_region=True),
+        dict(seed=5, preemption_hazard_per_hour=0.3))
+
+
+def test_autoscale_bit_identical_on_burstable_catalog():
+    _bit_identical(
+        burstable_demo_catalog,
+        lambda: burstable_trace(n_jobs=10, seed=11),
+        dict(credit_aware=True),
+        dict(seed=5))
+
+
+# ------------------------------------------------------------ the acceptance
+def test_autoscale_beats_always_admit_acceptance():
+    """Acceptance (benchmark/CI invariant): on the bundled OU market,
+    admission-controlled Eva is strictly cheaper than always-admit
+    eva-spot with zero deadline misses."""
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    results = {}
+    for name, kw in (("autoscale", dict(spot_aware=True, autoscale=True,
+                                        strike=0.9)),
+                     ("always-admit", dict(spot_aware=True))):
+        cat = aws_catalog(price_model=pm)
+        jobs = deferrable_trace(n_jobs=24, seed=13)
+        m = Simulator(cat, jobs, EvaScheduler(cat, **kw),
+                      SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()
+        assert all(j.completion_time is not None for j in jobs)
+        results[name] = m
+    assert results["autoscale"].deadline_misses == 0
+    assert results["autoscale"].total_cost \
+        < results["always-admit"].total_cost
