@@ -4,7 +4,7 @@ Runs the bundled mixed deadline-tight / deadline-loose deferrable trace
 (``cluster/traces.deferrable_trace``) through admission-controlled and
 always-admit regimes:
 
-* ``eva-autoscale`` — ``EvaScheduler(spot_aware=True, autoscale=True)``:
+* ``eva-autoscale`` — policy stack ``[SpotLayer(), AutoscaleLayer()]``:
   deferrable jobs are held pending while the forecast effective
   $/throughput over their estimated duration sits above their
   reservation-price-derived strike, and admitted when the OU market dips

@@ -1,0 +1,107 @@
+"""Stability-vs-cost scenario benchmark (beyond the paper; arXiv 2201.09050).
+
+Runs the bundled mixed deadline-tight / deadline-loose deferrable trace
+(``cluster/traces.deferrable_trace``) on the bundled OU spot market through
+three admission regimes:
+
+* ``eva-stability`` — ``StabilityLayer`` on the policy stack:
+  drift-plus-penalty admission (queue backlog vs price premium, dial
+  ``V``) plus warm-keep pricing of live instances while jobs are queued.
+  The first scenario axis written purely against the policy-layer API.
+* ``eva-autoscale`` (always-defer) — pure strike-price chasing with a deep
+  strike: every deferrable job is held until the market dips below 0.7 ×
+  its anchor reservation price (or its latest-start deadline forces it).
+  Cheap, but the pending queue grows with every dear phase.
+* ``eva-spot`` — always-admit on the same market (the queue-free anchor).
+
+The acceptance invariant (also enforced in CI): eva-stability holds the
+**max pending-queue length strictly below** the always-defer chaser at a
+total cost **within 5 %** — bounded queues may not be bought with
+runaway spending, and deferral still may not blow deadlines.  A ``V``
+sweep shows the cost/stability dial between the two regimes.
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only stability
+"""
+from __future__ import annotations
+
+from repro.cluster import SimConfig, deferrable_trace
+from repro.core import PriceModel, aws_catalog
+
+from .common import print_table, run_sim, save_results
+
+COLS = ["scheduler", "market", "total_cost", "avg_jct_hours",
+        "deadline_misses", "max_pending_jobs", "held_job_rounds",
+        "admissions", "forced_admissions", "wall_s"]
+
+CHASER_STRIKE = 0.7  # the always-defer baseline: hold out for deep dips
+COST_SLACK = 1.05  # stability may cost at most 5 % over the chaser
+
+
+def _trace(n_jobs, seed=13):
+    return deferrable_trace(n_jobs=n_jobs, seed=seed)
+
+
+def stability_vs_chasing(quick=False, n_jobs=None, hazard=0.3, seed=5):
+    n_jobs = n_jobs or (24 if quick else 96)
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    cfg = SimConfig(seed=seed, preemption_hazard_per_hour=hazard)
+    rows = []
+    for name, kw in (
+            ("eva-stability", {}),
+            ("eva-autoscale", dict(strike=CHASER_STRIKE)),
+            ("eva-spot", {})):
+        out = run_sim(name, _trace(n_jobs), cfg,
+                      catalog=aws_catalog(price_model=pm), **kw)
+        out["scheduler"] = name if name != "eva-autoscale" \
+            else f"eva-autoscale (strike={CHASER_STRIKE:g})"
+        out["market"] = "spot (OU)"
+        rows.append(out)
+    print_table("Stability: drift-plus-penalty admission vs always-defer "
+                "strike chasing vs always-admit", rows, COLS)
+    stab, chase, _ = rows
+    ratio = stab["total_cost"] / chase["total_cost"]
+    print(f"eva-stability queue peak {stab['max_pending_jobs']} vs chaser "
+          f"{chase['max_pending_jobs']} at {ratio:.1%} of its cost "
+          f"({stab['deadline_misses']} vs {chase['deadline_misses']} "
+          f"deadline misses)")
+    assert stab["max_pending_jobs"] < chase["max_pending_jobs"], \
+        "stability must bound the pending queue below the strike chaser"
+    assert stab["total_cost"] <= COST_SLACK * chase["total_cost"], \
+        "bounded queues may cost at most 5% over strike chasing"
+    assert stab["deadline_misses"] == 0, \
+        "stability-admission must not blow deadlines"
+    return rows
+
+
+def v_sweep(quick=False, n_jobs=None, hazard=0.3, seed=5):
+    """The drift-plus-penalty dial: V = rounds of queueing tolerated per
+    unit of relative price premium.  V = 0 admits after one held round
+    (pure stability), large V approaches strike chasing — cost falls,
+    queue grows."""
+    n_jobs = n_jobs or (16 if quick else 64)
+    vs = (0.0, 32.0, 128.0) if quick else (0.0, 8.0, 32.0, 128.0, 512.0)
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    rows = []
+    for v in vs:
+        cfg = SimConfig(seed=seed, preemption_hazard_per_hour=hazard)
+        out = run_sim("eva-stability", _trace(n_jobs), cfg,
+                      catalog=aws_catalog(price_model=pm), v=v)
+        out["scheduler"] = "eva-stability"
+        out["market"] = f"V={v:g}"
+        rows.append(out)
+    print_table("Stability: V sweep (queue patience per unit premium)",
+                rows, COLS)
+    return rows
+
+
+def run(quick=False, full=False):
+    n = 200 if full else None
+    out = {"stability_vs_chasing": stability_vs_chasing(quick=quick,
+                                                        n_jobs=n),
+           "v_sweep": v_sweep(quick=quick)}
+    save_results("bench_stability", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -10,9 +10,16 @@ import numpy as np
 from repro.cluster import SimConfig, Simulator, alibaba_like_trace, physical_trace
 from repro.core import EvaScheduler, NoPackingScheduler, aws_catalog
 from repro.core.workloads import M_TRUE
+from repro.policies import stack_from_flags
 from repro.schedulers import OwlScheduler, StratusScheduler, SynergyScheduler
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# scenario-axis flags consumed by stack_from_flags (benchmarks address the
+# axes by these names; the factory translates them into an explicit policy
+# stack so no deprecated boolean-flag path is exercised)
+_AXIS_KW = ("spot_aware", "multi_region", "credit_aware", "autoscale",
+            "stability", "region", "admission", "strike", "v")
 
 
 def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
@@ -38,16 +45,22 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
             opts["mode"] = "full-only"
         if name == "eva-partial-only":
             opts["mode"] = "partial-only"
+        axes = {k: kw.pop(k) for k in _AXIS_KW if k in kw}
         if name == "eva-spot":
-            opts["spot_aware"] = True
+            axes["spot_aware"] = True
         if name == "eva-multiregion":
-            opts["multi_region"] = True
+            axes["multi_region"] = True
         if name == "eva-credit":
-            opts["credit_aware"] = True
+            axes["credit_aware"] = True
         if name == "eva-autoscale":
-            opts["spot_aware"] = True
-            opts["autoscale"] = True
+            axes.setdefault("spot_aware", True)
+            axes["autoscale"] = True
+        if name == "eva-stability":
+            axes.setdefault("spot_aware", True)
+            axes["stability"] = True
         opts.update(kw)
+        if axes and "policies" not in opts:
+            opts["policies"] = stack_from_flags(**axes)
         return EvaScheduler(catalog, **opts)
     raise KeyError(name)
 
@@ -64,16 +77,12 @@ def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None,
     out["wall_s"] = round(time.time() - t0, 1)
     if hasattr(sched, "full_adoption_rate"):
         out["full_adoption"] = round(sched.full_adoption_rate, 3)
-    if getattr(sched, "multi_region", False):
-        out["arbitrage_moves"] = sched.arbitrage_moves
-    if getattr(sched, "credit_aware", False):
-        out["credit_drains"] = sched.credit_drains
-        out["credit_signals"] = sched.credit_signals
-    if getattr(sched, "admission", None) is not None:
-        out["admissions"] = sched.admission.admissions
-        out["forced_admissions"] = sched.admission.forced_admissions
-        out["re_deferrals"] = sched.admission.re_deferrals
-        out["held_job_rounds"] = sched.admission.held_job_rounds
+    # per-layer counters (arbitrage moves, credit drains, admission stats,
+    # stability queue peaks, ...) come from the policy stack itself — no
+    # flag sniffing
+    stack = getattr(sched, "stack", None)
+    if stack is not None:
+        out.update(stack.summary())
     return out
 
 

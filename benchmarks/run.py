@@ -19,13 +19,15 @@ def main():
     ap.add_argument("--only", default=None,
                     help="run a single bench: micro|endtoend|multitask|"
                          "interference|migration|composition|arrival|"
-                         "roofline|spot|multiregion|credits|autoscale")
+                         "roofline|spot|multiregion|credits|autoscale|"
+                         "stability")
     args = ap.parse_args()
 
     from . import (bench_arrival, bench_autoscale, bench_composition,
                    bench_credits, bench_endtoend, bench_interference,
                    bench_micro, bench_migration, bench_multiregion,
-                   bench_multitask, bench_roofline, bench_spot)
+                   bench_multitask, bench_roofline, bench_spot,
+                   bench_stability)
     benches = {
         "micro": lambda: bench_micro.run(quick=args.quick),
         "endtoend": lambda: bench_endtoend.run(quick=args.quick,
@@ -42,6 +44,8 @@ def main():
         "credits": lambda: bench_credits.run(quick=args.quick,
                                              full=args.full),
         "autoscale": lambda: bench_autoscale.run(quick=args.quick,
+                                                 full=args.full),
+        "stability": lambda: bench_stability.run(quick=args.quick,
                                                  full=args.full),
     }
     todo = [args.only] if args.only else list(benches)

@@ -14,6 +14,7 @@ reservation prices, and the credit-aware Eva scheduler.
 import argparse
 
 from repro.cluster import SimConfig, Simulator, burstable_trace
+from repro.policies import CreditLayer, SpotLayer
 from repro.core import (EvaScheduler, TaskSet, aws_catalog,
                         burstable_demo_catalog, make_task,
                         reservation_prices)
@@ -56,7 +57,7 @@ results = {}
 for name in ("eva-credit", "eva-blind", "eva-ondemand"):
     if name == "eva-credit":
         c = burstable_demo_catalog()
-        sched = EvaScheduler(c, credit_aware=True)
+        sched = EvaScheduler(c, policies=[SpotLayer(), CreditLayer()])
     elif name == "eva-blind":
         c = burstable_demo_catalog()
         sched = EvaScheduler(c)

@@ -16,6 +16,7 @@ import argparse
 
 from repro.autoscale import PriceForecaster, latest_start_s
 from repro.cluster import SimConfig, Simulator, deferrable_trace
+from repro.policies import AutoscaleLayer, SpotLayer
 from repro.core import (EvaScheduler, PriceModel, TaskSet, aws_catalog,
                         make_task, reservation_prices)
 
@@ -65,10 +66,10 @@ print(f"\n{args.jobs} deferrable jobs (mixed tight/loose deadlines) on the "
 results = {}
 for name in ("eva-autoscale", "eva-spot"):
     c = aws_catalog(price_model=pm)
-    kw = dict(spot_aware=True)
+    layers = [SpotLayer()]
     if name == "eva-autoscale":
-        kw.update(autoscale=True, strike=args.strike)
-    sched = EvaScheduler(c, **kw)
+        layers.append(AutoscaleLayer(strike=args.strike))
+    sched = EvaScheduler(c, policies=layers)
     jobs = deferrable_trace(n_jobs=args.jobs, seed=13)
     m = Simulator(c, jobs, sched,
                   SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()

@@ -14,6 +14,7 @@ cross-region migration costs, and the multi-region Eva scheduler.
 import argparse
 
 from repro.cluster import SimConfig, Simulator, physical_trace
+from repro.policies import MultiRegionLayer, SpotLayer
 from repro.core import (EvaScheduler, TaskSet, aws_catalog,
                         checkpoint_size_gb, dispersed_demo_regions, make_task,
                         multi_region_catalog, regional_reservation_prices)
@@ -61,11 +62,11 @@ for name in ("eva-multiregion", "eva-spot", "eva"):
                           duration_range_h=(0.3, 0.8))
     if name == "eva-multiregion":
         c = multi_region_catalog(regions)
-        sched = EvaScheduler(c, multi_region=True)
+        sched = EvaScheduler(c, policies=[SpotLayer(), MultiRegionLayer()])
         cfg = SimConfig(seed=5, preemption_hazard_per_hour=args.hazard)
     elif name == "eva-spot":
         c = aws_catalog(price_model=regions[0].price_model)
-        sched = EvaScheduler(c, spot_aware=True)
+        sched = EvaScheduler(c, policies=[SpotLayer()])
         cfg = SimConfig(seed=5, preemption_hazard_per_hour=args.hazard)
     else:
         c = aws_catalog()

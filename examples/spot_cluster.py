@@ -11,6 +11,7 @@
 import argparse
 
 from repro.cluster import SimConfig, Simulator, physical_trace
+from repro.policies import SpotLayer
 from repro.core import (EvaScheduler, NoPackingScheduler, PriceModel,
                         aws_catalog)
 
@@ -41,7 +42,7 @@ for name in ("eva-spot", "eva", "no-packing"):
                           duration_range_h=(0.3, 0.8))
     if name == "eva-spot":
         cat = aws_catalog(price_model=pm)
-        sched = EvaScheduler(cat, spot_aware=True)
+        sched = EvaScheduler(cat, policies=[SpotLayer()])
         cfg = SimConfig(seed=5, preemption_hazard_per_hour=args.hazard)
     else:
         cat = aws_catalog()

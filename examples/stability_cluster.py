@@ -1,0 +1,74 @@
+"""Stability-vs-cost walkthrough: the policy stack, drift-plus-penalty
+admission, and bounded pending queues (arXiv 2201.09050).
+
+    PYTHONPATH=src python examples/stability_cluster.py [--jobs 24] [--v 32]
+
+1. Compose a scheduler from policy layers (the same API every scenario
+   axis now uses) and show the stack.
+2. Watch the drift-plus-penalty trade-off on one held job: the backlog
+   term grows each held round until it outweighs the price premium.
+3. Run the bundled deferrable trace on the OU spot market under
+   eva-stability vs the always-defer strike chaser vs always-admit
+   eva-spot, and compare cost / queue peak / deadline misses.
+"""
+import argparse
+
+from repro.cluster import SimConfig, Simulator, deferrable_trace
+from repro.core import EvaScheduler, PriceModel, aws_catalog
+from repro.policies import AutoscaleLayer, SpotLayer, StabilityLayer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--jobs", type=int, default=24)
+ap.add_argument("--v", type=float, default=32.0,
+                help="queue patience per unit of relative price premium")
+args = ap.parse_args()
+
+# -- 1. a scheduler is Algorithm 1 + a stack of policy layers ----------------
+pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+cat = aws_catalog(price_model=pm)
+sched = EvaScheduler(cat, policies=[SpotLayer(),
+                                    StabilityLayer(v=args.v)])
+print(f"policy stack: {sched.stack.describe()}")
+ctl = sched.admission
+print(f"stability controller: strike={ctl.strike:g}, V={ctl.v:g} "
+      "(V->inf = pure strike chasing, V=0 = admit after one held round)")
+
+# -- 2. drift vs penalty on one held job -------------------------------------
+# admit when  q · rp_anchor  >  V · (rp_forecast − strike · rp_anchor):
+# a standing 30% premium over the strike bar is outweighed after V·0.3
+# held rounds — the queue backlog is bounded without any deadline help.
+premium_rel = 0.3
+rounds = args.v * premium_rel
+print(f"\na job facing a standing {premium_rel:.0%} premium over its "
+      f"strike bar is admitted after ~{rounds:.0f} held rounds "
+      f"({rounds * 300 / 3600.0:.1f}h at 5-min rounds)")
+
+# -- 3. schedulers head to head ----------------------------------------------
+print(f"\n{args.jobs} deferrable jobs (mixed tight/loose deadlines) on the "
+      "OU spot market")
+runs = (
+    ("eva-stability", [SpotLayer(), StabilityLayer(v=args.v)]),
+    ("eva-chaser-0.7", [SpotLayer(), AutoscaleLayer(strike=0.7)]),
+    ("eva-spot", [SpotLayer()]),
+)
+results = {}
+for name, layers in runs:
+    c = aws_catalog(price_model=pm)
+    s = EvaScheduler(c, policies=layers)
+    jobs = deferrable_trace(n_jobs=args.jobs, seed=13)
+    m = Simulator(c, jobs, s,
+                  SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()
+    results[name] = m
+    extra = ""
+    if s.admission is not None:
+        extra = (f"  queue_peak={m.max_pending_jobs}"
+                 f" held_rounds={s.admission.held_job_rounds}"
+                 f" misses={m.deadline_misses}")
+    print(f"  {name:14s} ${m.total_cost:7.2f}  jct={m.avg_jct_hours:5.2f}h"
+          f"{extra}")
+
+stab, chase = results["eva-stability"], results["eva-chaser-0.7"]
+print(f"\neva-stability holds the pending queue at {stab.max_pending_jobs} "
+      f"vs the chaser's {chase.max_pending_jobs}, at "
+      f"{stab.total_cost / chase.total_cost:.1%} of its cost — bounded "
+      "queues without runaway spending, every deadline met")

@@ -87,6 +87,9 @@ class AdmissionController:
         self.min_horizon_s = float(min_horizon_s)
         self._admitted: Set[int] = set()  # admitted, possibly unstarted
         self._force: Set[int] = set()  # deadline-pressure signals
+        # per-job held-round backlog (the queue drift term stability-aware
+        # subclasses weigh against the price premium)
+        self._held_rounds: Dict[int, int] = {}
         # observability
         self.admissions = 0
         self.forced_admissions = 0
@@ -117,6 +120,30 @@ class AdmissionController:
         return float(reservation_prices(sub, cat,
                                         type_mask=self.type_mask).sum())
 
+    # -- the admit/hold decision (subclass points) ---------------------------
+    def queue_rounds(self, jid: int) -> int:
+        """Rounds this job has been held so far (its share of the
+        ``held_job_rounds`` queue backlog)."""
+        return self._held_rounds.get(jid, 0)
+
+    def _hold(self, jid: int, held: Set[int]) -> None:
+        held.add(jid)
+        self.held_job_rounds += 1
+        self._held_rounds[jid] = self._held_rounds.get(jid, 0) + 1
+
+    def _admit_now(self, jid: int, rp_f: float, rp_a: float) -> bool:
+        """The strike test: admit while the forecast reservation price
+        sits at or below ``strike`` × the long-run anchor.  Stability-aware
+        subclasses extend this with a queue-drift term."""
+        return rp_f <= self.strike * rp_a + 1e-12
+
+    def _re_defer(self, jid: int, rp_f: float, rp_a: float) -> bool:
+        """Re-deferral test for admitted-but-unstarted jobs: hysteresis,
+        because withdrawing an in-flight placement wastes the already
+        billed acquisition time — only a real spike re-defers."""
+        return rp_f > self.strike * rp_a * (1.0 + self.hold_hysteresis) \
+            + 1e-12
+
     # -- the round review ----------------------------------------------------
     def review(self, view, d_hat_s: float) -> Tuple[Set[int], Set[int]]:
         """Review every deferrable unstarted job at ``view.time``.
@@ -131,10 +158,15 @@ class AdmissionController:
             self._force.clear()
             return set(), set()
         pending = view.pending if view.pending is not None else set()
-        candidates = set(view.deferrable) & pending
         live_jobs = set(view.tasks.job_ids.tolist())
+        # intersect with the jobs actually present in the view: an earlier
+        # admission layer in a policy stack may already have stripped some
+        # held jobs' tasks, and those are no longer this review's to judge
+        candidates = set(view.deferrable) & pending & live_jobs
         self._admitted &= live_jobs & pending  # started/done jobs drop out
         self._force &= live_jobs
+        self._held_rounds = {j: r for j, r in self._held_rounds.items()
+                             if j in live_jobs}
         if not candidates:
             return set(), set()
 
@@ -175,20 +207,15 @@ class AdmissionController:
                 cache[h] = pair
             rp_f = self._job_rp(view, job_tasks[jid], pair[0])
             rp_a = self._job_rp(view, job_tasks[jid], pair[1])
-            bar = self.strike * rp_a
             if jid in self._admitted:
-                # hysteresis: withdrawing an in-flight placement wastes the
-                # billed acquisition time, so only a real spike re-defers
-                if rp_f > bar * (1.0 + self.hold_hysteresis) + 1e-12:
+                if self._re_defer(jid, rp_f, rp_a):
                     self._admitted.discard(jid)
                     self.re_deferrals += 1
-                    held.add(jid)
-                    self.held_job_rounds += 1
+                    self._hold(jid, held)
                 continue
-            if rp_f <= bar + 1e-12:
+            if self._admit_now(jid, rp_f, rp_a):
                 self._admitted.add(jid)
                 self.admissions += 1
             else:
-                held.add(jid)
-                self.held_job_rounds += 1
+                self._hold(jid, held)
         return held, forced

@@ -69,6 +69,13 @@ scheduling-round data flow).  The simulated cloud models:
   ``Metrics.deadline_misses`` / ``deferred_jobs`` / ``deferred_wait_s`` /
   ``withdrawals`` account for the axis.
 
+Every scheduler-visible pressure event — spot revocation notices, credit
+exhaustion, deferral latest-start deadlines — travels one shared wiring:
+a ``PressureSignal`` published on the simulator's ``PressureBus``
+(``repro.policies.pressure``; delivered to ``scheduler.on_pressure``
+exactly once) followed by an immediate extra scheduling round,
+de-duplicated so coincident signals react in a single round.
+
 The spot, multi-region, credit and deferral layers are strictly additive:
 with a static (or absent) price model, a single-region catalog, no
 burstable types and no deferrable/deadlined jobs no extra events are
@@ -96,6 +103,8 @@ from ..core.cluster_types import ClusterConfig, Job, TaskSet
 from ..core.plan import LiveInstance, diff_configs
 from ..core.scheduler import SchedulerBase, SchedulerView
 from ..core.workloads import M_TRUE, WORKLOADS, checkpoint_size_gb
+from ..policies.pressure import (CREDIT, DEADLINE, SPOT, PressureBus,
+                                 PressureSignal)
 
 # task states
 PENDING, WAITING, CKPT, LAUNCH, RUNNING = range(5)
@@ -212,6 +221,7 @@ class Metrics:
     deferred_jobs: int = 0  # admitted later than their first possible round
     deferred_wait_s: float = 0.0  # Σ arrival→admission wait, deferrable jobs
     withdrawals: int = 0  # re-deferred placements released before launch
+    max_pending_jobs: int = 0  # peak not-yet-admitted deferrable queue length
 
     @property
     def avg_jct_hours(self) -> float:
@@ -265,6 +275,7 @@ class Metrics:
             d["deferred_jobs"] = self.deferred_jobs
             d["deferred_wait_hours"] = round(self.deferred_wait_s / 3600.0, 2)
             d["withdrawals"] = self.withdrawals
+            d["max_pending_jobs"] = self.max_pending_jobs
         return d
 
 
@@ -292,6 +303,12 @@ class Simulator:
         self._seq = itertools.count()
         self._heap: List[Tuple[float, int, int, int, tuple]] = []
         self._round_scheduled_at: float = -1.0
+        self._pressure_round_at: float = -1.0  # immediate-round de-dup
+        # One bus for every pressure wiring (spot / credit / deadline); the
+        # scheduler's on_pressure fans the signal out to its policy stack
+        # and the legacy per-kind hooks.
+        self.pressure_bus = PressureBus()
+        self.pressure_bus.subscribe(scheduler.on_pressure)
         self.now = 0.0
         self._last_accrue = 0.0
         self.metrics = Metrics()
@@ -488,20 +505,25 @@ class Simulator:
         eta = self.now + inst.credit_hours / drain * 3600.0
         self._push(eta, CREDIT_EXHAUST, (inst.iid, inst.credit_seq))
 
-    def _pressure_signal(self, notify, ids: Sequence[int]) -> None:
+    def _pressure_signal(self, kind: str, ids: Sequence[int]) -> None:
         """Shared forced-reaction wiring for every scheduler-visible
         pressure event — spot revocation notices, credit exhaustion and
-        deferral latest-start deadlines: deliver the callback, then fire an
-        immediate extra round (unless one is already queued at this
-        instant) so the scheduler can react within the event."""
-        notify(ids, self.now)
-        if self._round_scheduled_at != self.now:
+        deferral latest-start deadlines: publish one ``PressureSignal`` on
+        the bus (delivered to the scheduler exactly once), then fire an
+        immediate extra round — unless one is already queued at this
+        instant, so coincident signals (e.g. two deferral deadlines at the
+        same latest-start time) react in a single round instead of
+        double-firing the forced partial."""
+        self.pressure_bus.publish(PressureSignal(kind, tuple(ids), self.now))
+        if (self._round_scheduled_at != self.now
+                and self._pressure_round_at != self.now):
+            self._pressure_round_at = self.now
             self._push(self.now, ROUND, ())
 
     def _on_credit_exhausted(self, inst: _Instance) -> None:
         """An instance just throttled: surface the credit-pressure signal."""
         self.metrics.credit_exhaustions += 1
-        self._pressure_signal(self.scheduler.on_credit_pressure, [inst.iid])
+        self._pressure_signal(CREDIT, [inst.iid])
 
     def _on_credit_exhaust_event(self, iid: int, seq: int) -> None:
         inst = self.instances.get(iid)
@@ -812,6 +834,13 @@ class Simulator:
             deadline = {j: float(self.jobs[j].job.deadline_s) for j in jids
                         if self.jobs[j].job.deadline_s is not None}
             pending_jobs = {j for j in jids if self._job_pending(j)}
+            # queue-stability accounting: deferrable jobs whose tasks no
+            # config has admitted yet (the pending queue a stability-aware
+            # policy bounds)
+            queued = sum(1 for j in deferrable
+                         if self.jobs[j].admitted_t is None)
+            if queued > self.metrics.max_pending_jobs:
+                self.metrics.max_pending_jobs = queued
         view = SchedulerView(
             time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
             task_workload={t: self.tasks[t].workload for t in tids},
@@ -977,8 +1006,7 @@ class Simulator:
         if noticed:
             # immediate reaction so the scheduler can evacuate within the
             # notice window
-            self._pressure_signal(self.scheduler.on_preemption_notice,
-                                  noticed)
+            self._pressure_signal(SPOT, noticed)
         # only the periodic chain self-perpetuates; breakpoint events are
         # one-shots scheduled up-front
         if periodic and self._jobs_outstanding > 0:
@@ -1008,7 +1036,7 @@ class Simulator:
             return
         if not self._job_pending(jid):
             return  # already admitted and under way
-        self._pressure_signal(self.scheduler.on_deadline_pressure, [jid])
+        self._pressure_signal(DEADLINE, [jid])
 
     def _withdraw_deferred(self, config: ClusterConfig) -> None:
         """Release reserved-but-unstarted placements of re-deferred jobs:

@@ -8,49 +8,46 @@ Public API (docs/ARCHITECTURE.md diagrams the round-by-round data flow):
   (deferral scenarios) deferrable job ids, per-job deadlines and the
   still-pending job set.
 * ``SchedulerBase`` — ``schedule(view) -> ClusterConfig`` plus the monitor
-  hooks (``on_event``, ``on_preemption_notice``, ``on_credit_pressure``,
-  ``on_deadline_pressure``, ``observe_single/job``).
+  hooks (``on_event``, ``on_pressure`` — which fans out to the legacy
+  per-kind hooks ``on_preemption_notice`` / ``on_credit_pressure`` /
+  ``on_deadline_pressure`` — and ``observe_single/job``).
 * ``EvaScheduler`` — the paper's ensemble of Full and Partial
   Reconfiguration over TNRP, with the ablation knobs
-  (``interference_aware``, ``multi_task_aware``, ``mode``) and the
-  beyond-paper scenario flags: ``spot_aware`` (re-price each round against
-  the spot snapshot, evacuate revoked instances), ``multi_region``
-  (spot behaviour + per-region-pair arbitrage on a
-  ``core.catalog.multi_region_catalog``: re-home instances to the cheapest
-  region copy whenever the amortized price saving beats the cross-region
-  migration penalty) and ``credit_aware`` (burstable catalogs: price every
-  round against ``catalog.credit_priced(D̂)``, decay the keep-test slack
-  with each instance's live credit balance, and answer credit-pressure
-  signals with a forced partial that drains throttled instances onto
-  steady types) and ``autoscale`` (price-pressure admission control: a
-  ``repro.autoscale.AdmissionController`` holds deferrable jobs pending
-  while forecast prices sit above their strike, bounded by per-job
-  deadlines).  ``region="name"`` pins a scheduler to a single
-  region of a multi-region catalog (the single-market baseline).
+  (``interference_aware``, ``multi_task_aware``, ``mode``).  Beyond-paper
+  scenario axes compose as a **policy stack** (``repro.policies``): pass
+  ``policies=[SpotLayer(), MultiRegionLayer(), CreditLayer(),
+  AutoscaleLayer(strike=0.9)]`` (any subset, in the documented order) and
+  the scheduler folds their hooks — catalog snapshot transforms, admission
+  edits, keep-test slack, pack masks/budgets, forced evacuations and
+  config refinements — around the unchanged Algorithm-1 ensemble.  The
+  legacy boolean kwargs (``spot_aware`` / ``multi_region`` /
+  ``credit_aware`` / ``autoscale`` + ``region=`` / ``strike=`` /
+  ``admission=``) remain as a deprecation shim that builds the equivalent
+  stack, bit-identical by test.
 * ``NoPackingScheduler`` — one task per reservation-price instance (§6.1).
 
 The simulator (and the local-cloud physical harness) call ``schedule(view)``
 each scheduling round and execute the returned abstract configuration via
 ``core.plan.diff_configs``.  Throughput observations flow back through
-``observe_*`` callbacks, and arrival/completion events through ``on_event``.
+``observe_*`` callbacks, arrival/completion events through ``on_event``,
+and pressure signals (spot revocations, credit exhaustion, deferral
+deadlines) through one ``PressureBus`` (``repro.policies.pressure``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Set, Tuple
-
-import numpy as np
+import warnings
+from typing import Dict, List, Optional, Sequence, Set
 
 from .catalog import Catalog
 from .cluster_types import ClusterConfig, TaskSet
 from .ensemble import EnsembleDecision, EventRateEstimator, choose, instantaneous_saving
 from .full_reconfig import evaluate_assignments, full_reconfiguration
 from .partial_reconfig import partial_reconfiguration
-from .plan import LiveInstance, diff_configs, migration_cost, task_move_cost
+from .plan import LiveInstance, diff_configs, migration_cost
 from .reservation_price import cheapest_type
 from .throughput_table import ThroughputTable
-from .workloads import (INSTANCE_ACQUISITION_S, INSTANCE_SETUP_S,
-                        NUM_WORKLOADS)
+from .workloads import NUM_WORKLOADS
 
 
 @dataclasses.dataclass
@@ -95,6 +92,17 @@ class SchedulerBase:
     def on_event(self, time_s: float) -> None:  # job arrival/completion
         pass
 
+    def on_pressure(self, signal) -> None:
+        """One ``repro.policies.pressure.PressureSignal`` per pressure
+        event.  The base implementation fans out to the legacy per-kind
+        hooks so flag-era subclasses (and the baselines) keep working."""
+        if signal.kind == "spot":
+            self.on_preemption_notice(signal.ids, signal.time)
+        elif signal.kind == "credit":
+            self.on_credit_pressure(signal.ids, signal.time)
+        elif signal.kind == "deadline":
+            self.on_deadline_pressure(signal.ids, signal.time)
+
     def on_preemption_notice(self, instance_ids: Sequence[int],
                              time_s: float) -> None:  # spot revocation notice
         pass
@@ -127,80 +135,32 @@ class EvaScheduler(SchedulerBase):
       * multi_task_aware=False    -> Eva-Single (Table 6 / Fig. 7)
       * mode="full-only" / "partial-only"  (Fig. 5b / Fig. 6)
 
-    Beyond the paper, ``spot_aware=True`` targets a spot-market catalog
-    (dynamic ``PriceModel``): every round re-evaluates reservation prices
-    against the catalog snapshot at the current time, and a revocation notice
-    forces a partial reconfiguration that evacuates the revoked instances
-    (their tasks re-enter the repack set; the instances are dropped from the
-    live view so nothing new lands on them).
+    Beyond the paper, scenario axes attach as a **policy stack**
+    (``repro.policies``): the scheduler itself is Algorithm 1 + the
+    ensemble criterion, and every axis-specific behaviour — spot
+    re-pricing and revocation evacuation (``SpotLayer``), multi-region
+    capacity budgets / keep slack / arbitrage (``MultiRegionLayer``),
+    credit-aware planning and drains (``CreditLayer``), admission control
+    (``AutoscaleLayer``, ``StabilityLayer``) — enters through the stack's
+    hook points:
 
-    ``multi_region=True`` targets a region-expanded catalog
-    (``core.catalog.multi_region_catalog``): it implies the spot behaviour
-    and adds (a) capacity awareness — Algorithm-1 packs carry per-region
-    instance-count budgets (``region_caps``), so a capped-but-cheap region
-    fills to its cap and the overflow lands in the next-cheapest region
-    instead of starving — and (b) a per-region-pair *arbitrage refinement*:
-    each slot of the chosen configuration is re-homed to the cheapest
-    same-hardware region copy whenever the hourly saving, amortized over the
-    estimated time to the next Full Reconfiguration (D̂, §4.5), exceeds the
-    migration-cost delta of the move (checkpoint transfer time + egress fee,
-    priced by ``core.plan.migration_cost``).  ``region="name"`` instead pins
-    all packing to one region of the catalog (single-market baseline).
+    * ``pre_round``      — admission layers strip held jobs' tasks from
+      the round's view before anything is priced;
+    * ``plan``           — the catalog pipeline (snapshot transforms, then
+      planning transforms: ``at → credit_priced``) yields the round's
+      billing-accurate ``raw`` and planning ``cat`` catalogs;
+    * ``keep_bonus``     — summed per-instance keep-test slack;
+    * ``mask`` / ``caps``— standing type restrictions and per-region pack
+      budgets threaded into RP / Full / Partial;
+    * ``evacuate`` + ``drain_mask`` — pressure reactions, answered by one
+      shared forced partial reconfiguration;
+    * ``refine``         — post-pass config rewrites (region arbitrage).
 
-    ``credit_aware=True`` targets a burstable catalog (types carrying a
-    ``core.catalog.CreditModel``, e.g. ``burstable_demo_catalog``).  Three
-    mechanisms, all riding the D̂ horizon the ensemble already estimates:
-
-    * *credit-adjusted pricing* — every round plans against
-      ``catalog.credit_priced(D̂)``: each burstable type's cost is divided
-      by the forecast mean speed of a *fresh* instance over the next D̂
-      seconds, so reservation prices, Algorithm 1's order/cost-efficiency
-      bar, savings S and migration costs M all see effective $/throughput.
-      A burstable type is cheap exactly while its launch credits outlast
-      the horizon.
-    * *balance-decayed keep test* — each live burstable instance gets a
-      ``keep_bonus`` equal to the planning cost of a fresh instance minus
-      its own effective cost at its *live* balance
-      (``SchedulerView.instance_credits``).  The slack is ~0 while the
-      balance is healthy, decays as it drains, and at exhaustion the keep
-      test effectively compares TNRP against ``cost/baseline_fraction`` —
-      collapsing exactly when throughput does, so the instance's tasks are
-      evicted into the repack set and the S·D̂ > ΔM economics decide the
-      move.
-    * *credit-pressure reaction* — exhaustion signals
-      (``on_credit_pressure`` + ``SchedulerView.throttled``) force a
-      partial reconfiguration, the same wiring spot revocation notices
-      use: throttled instances are dropped from the live view, their tasks
-      join the repack set, and — because anonymous slots of the same
-      burstable type would simply re-match the exhausted instance — the
-      drain repack is masked to *steady* (non-burstable) types.  Fresh
-      arrivals in later rounds burst again on new instances with launch
-      credits.
-
-    On a catalog without burstable types ``credit_aware=True`` is inert
-    (``credit_priced`` is the identity, no bonuses, no forced drains):
-    decisions are bit-for-bit those of the PR-2 scheduler.
-
-    ``autoscale=True`` adds price-pressure admission control over the job
-    population (``repro.autoscale``): each round, *before* Algorithm 1 sees
-    the task set, an ``AdmissionController`` reviews every deferrable
-    not-yet-started job (``SchedulerView.deferrable`` / ``pending`` /
-    ``deadline_s``) and holds it out of the round while the forecast
-    effective $/throughput of running it over its estimated duration
-    (``PriceForecaster`` + ``credit_priced`` — all three price axes priced
-    in) sits above its reservation-price-derived strike.  A held job's
-    tasks are simply absent from the packed task set, so nothing is
-    provisioned for them (zero billing while pending).  Each job is
-    admitted when the market dips below its strike, or unconditionally
-    once its latest-start time (deadline − margin·D̂_j − overhead)
-    arrives — deadline-forced admissions are routed through the same
-    forced-partial path spot notices and credit drains use, so they are
-    placed in the very round the ``DEFER_DEADLINE`` signal fires.
-    Admitted-but-unstarted jobs are re-deferred (with hysteresis) when
-    prices spike; the simulator withdraws their not-yet-launched
-    placements.  On a trace with no deferrable jobs the controller never
-    holds anything: decisions are bit-for-bit those of ``autoscale=False``
-    (the PR-3 scheduler).
+    The legacy boolean kwargs (``spot_aware=True`` etc.) are a
+    deprecation shim: they emit a ``DeprecationWarning`` and build the
+    equivalent stack via ``repro.policies.stack_from_flags``, with
+    decisions bit-identical to the flag-era scheduler
+    (``tests/test_policies.py`` pins this on every bundled demo catalog).
     """
 
     name = "eva"
@@ -209,6 +169,7 @@ class EvaScheduler(SchedulerBase):
                  multi_task_aware: bool = True, mode: str = "ensemble",
                  default_t: float = 0.95, engine: str = "numpy",
                  migration_delay_scale: float = 1.0,
+                 policies: Optional[object] = None,
                  spot_aware: bool = False, multi_region: bool = False,
                  credit_aware: bool = False, autoscale: bool = False,
                  admission: Optional[object] = None, strike: float = 1.0,
@@ -220,57 +181,91 @@ class EvaScheduler(SchedulerBase):
         self.mode = mode
         self.engine = engine
         self.migration_delay_scale = migration_delay_scale
-        self.spot_aware = spot_aware
-        self.multi_region = multi_region
-        self.credit_aware = credit_aware
-        self.autoscale = autoscale
-        if multi_region:
-            assert catalog.is_multi_region, \
-                "multi_region=True needs a multi_region_catalog"
-        self._region_mask: Optional[np.ndarray] = None
-        if region is not None:
-            assert catalog.is_multi_region, "region= needs a multi_region_catalog"
-            self._region_mask = catalog.region_type_mask(
-                catalog.region_index(region))
-        self.admission = None
-        if autoscale:
-            # deferred import: repro.autoscale itself imports core submodules
-            from ..autoscale.admission import AdmissionController
-            # a region pin restricts the strike test too: the controller may
-            # only price a job against types the packer can actually use
-            self.admission = admission if admission is not None \
-                else AdmissionController(catalog, strike=strike,
-                                         type_mask=self._region_mask)
-            # latest-start bounds need per-job duration estimates
-            self.needs_runtime_estimates = True
-        # per-region instance-count budgets for the Algorithm-1 packs
-        self._region_caps = None
-        if multi_region and any(r.max_instances is not None
-                                for r in catalog.regions):
-            self._region_caps = tuple(r.max_instances
-                                      for r in catalog.regions)
+        # deferred import: repro.policies imports core submodules
+        from ..policies import PolicyStack, stack_from_flags
+        flags_used = spot_aware or multi_region or credit_aware or autoscale
+        legacy_used = (flags_used or region is not None
+                       or admission is not None or strike != 1.0)
+        if policies is not None and legacy_used:
+            raise ValueError(
+                "pass either policies=[...] or the legacy flag kwargs "
+                "(spot_aware/multi_region/credit_aware/autoscale/region/"
+                "admission/strike), not both")
+        if legacy_used:
+            if flags_used:
+                warnings.warn(
+                    "EvaScheduler's boolean scenario flags (spot_aware/"
+                    "multi_region/credit_aware/autoscale) are deprecated; "
+                    "pass the equivalent policy stack, e.g. "
+                    "policies=[SpotLayer(), ...] (repro.policies)",
+                    DeprecationWarning, stacklevel=2)
+            policies = stack_from_flags(
+                spot_aware=spot_aware, multi_region=multi_region,
+                credit_aware=credit_aware, autoscale=autoscale,
+                region=region, admission=admission, strike=strike)
+        if policies is None:
+            policies = PolicyStack()
+        elif not isinstance(policies, PolicyStack):
+            policies = PolicyStack(policies)
+        self.stack = policies
+        self.stack.bind(self)
+        self.needs_runtime_estimates = self.stack.needs_runtime_estimates
         self.forced_partials = 0
-        self.arbitrage_moves = 0
-        self.credit_signals = 0  # exhausted instances signalled to us
-        self.credit_drains = 0  # forced partials that drained throttled insts
-        self.deadline_signals = 0  # latest-start deadlines signalled to us
         self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
         self.estimator = EventRateEstimator()
         self.decisions: List[EnsembleDecision] = []
         self.full_adoptions = 0
         self.rounds = 0
 
+    # -- legacy introspection (flag-era attribute surface) -------------------
+    @property
+    def spot_aware(self) -> bool:
+        return self.stack.has("spot")
+
+    @property
+    def multi_region(self) -> bool:
+        return self.stack.has("multi-region")
+
+    @property
+    def credit_aware(self) -> bool:
+        return self.stack.has("credit")
+
+    @property
+    def autoscale(self) -> bool:
+        return self.stack.has("autoscale")
+
+    @property
+    def admission(self) -> Optional[object]:
+        """Controller of the first admission layer (autoscale/stability),
+        if any — the simulator reads its margin/overhead for the
+        DEFER_DEADLINE backstop."""
+        from ..policies import AdmissionLayerBase
+        layer = self.stack.get(AdmissionLayerBase)
+        return None if layer is None else layer.controller
+
+    @property
+    def arbitrage_moves(self) -> int:
+        return sum(getattr(la, "arbitrage_moves", 0) for la in self.stack)
+
+    @property
+    def credit_signals(self) -> int:
+        return sum(getattr(la, "credit_signals", 0) for la in self.stack)
+
+    @property
+    def credit_drains(self) -> int:
+        return sum(getattr(la, "credit_drains", 0) for la in self.stack)
+
+    @property
+    def deadline_signals(self) -> int:
+        return sum(getattr(la, "deadline_signals", 0) for la in self.stack)
+
     # -- monitor ------------------------------------------------------------
     def on_event(self, time_s: float) -> None:
         self.estimator.on_event(time_s)
 
-    def on_credit_pressure(self, instance_ids, time_s: float) -> None:
-        self.credit_signals += len(instance_ids)
-
-    def on_deadline_pressure(self, job_ids, time_s: float) -> None:
-        self.deadline_signals += len(job_ids)
-        if self.admission is not None:
-            self.admission.note_deadline(job_ids)
+    def on_pressure(self, signal) -> None:
+        super().on_pressure(signal)  # legacy per-kind hooks (subclasses)
+        self.stack.on_pressure(signal)
 
     def observe_single(self, workload, colocated, value) -> None:
         if self.interference_aware:
@@ -286,56 +281,47 @@ class EvaScheduler(SchedulerBase):
         table = self.table if self.interference_aware else None
         kw = dict(interference_aware=self.interference_aware,
                   multi_task_aware=self.multi_task_aware, engine=self.engine)
-        # Admission control first: deferrable jobs the controller holds are
-        # removed from the round's task set before anything is priced, so
-        # Algorithm 1 never provisions for them.
-        resumed: Set[int] = set()
-        if self.admission is not None and view.deferrable:
-            view, resumed = self._apply_admission(view)
-        track = self.spot_aware or self.multi_region or self.credit_aware
-        # Spot awareness: all prices this round come from the catalog
-        # snapshot at the current time (identity for static catalogs).
-        raw = self.catalog.at(view.time) if track else self.catalog
-        credits_on = self.credit_aware and raw.is_burstable
-        # Credit awareness: plan against effective $/throughput over the D̂
-        # horizon (identity for non-burstable catalogs) — billing still
-        # happens at the raw prices; this is purely the planning view.
-        cat = raw.credit_priced(self.estimator.d_hat()) if credits_on else raw
-        keep_bonus = self._keep_bonus_fn(raw, cat, view, credits_on)
+        d_hat = self.estimator.d_hat()
+        # Admission layers first: jobs a controller holds are removed from
+        # the round's task set before anything is priced, so Algorithm 1
+        # never provisions for them.
+        view, resumed = self.stack.pre_round(view, d_hat)
+        # Catalog pipeline: snapshot transforms (spot re-pricing at the
+        # current time), then planning transforms (credit-effective
+        # $/throughput) — `raw` bills, `cat` plans.
+        raw, cat = self.stack.plan(self.catalog, view, d_hat)
+        keep_bonus = self.stack.keep_bonus(raw, cat, view)
+        mask, caps = self.stack.mask, self.stack.caps
 
-        evac: Set[int] = set(view.revoked) if (track and view.revoked) else set()
-        throttled: Set[int] = set()
-        if credits_on and view.throttled:
-            throttled = set(view.throttled)
-            evac |= throttled
+        evac = self.stack.evacuate(raw, view)
         if evac or resumed:
-            return self._forced_partial(view, raw, cat, table, kw, keep_bonus,
-                                        evac, throttled)
+            return self._forced_partial(view, raw, cat, table, kw,
+                                        keep_bonus, evac)
 
         live_assignments = [(i.type_index, i.task_ids) for i in view.live]
         if self.mode == "full-only":
             cfg = full_reconfiguration(view.tasks, cat, table,
-                                       type_mask=self._region_mask,
-                                       region_caps=self._region_caps, **kw)
+                                       type_mask=mask,
+                                       region_caps=caps, **kw)
             self.full_adoptions += 1
             return self._finish(cfg, view, cat)
         partial = partial_reconfiguration(view.tasks, live_assignments,
                                           view.pending_ids, cat,
-                                          table, type_mask=self._region_mask,
-                                          region_caps=self._region_caps,
+                                          table, type_mask=mask,
+                                          region_caps=caps,
                                           keep_bonus=keep_bonus, **kw)
         if self.mode == "partial-only":
             return self._finish(partial, view, cat)
         full = full_reconfiguration(view.tasks, cat, table,
-                                    type_mask=self._region_mask,
-                                    region_caps=self._region_caps, **kw)
+                                    type_mask=mask,
+                                    region_caps=caps, **kw)
 
         s_f = instantaneous_saving(*evaluate_assignments(
             full.assignments, view.tasks, cat, table,
-            self.multi_task_aware, type_mask=self._region_mask))
+            self.multi_task_aware, type_mask=mask))
         s_p = instantaneous_saving(*evaluate_assignments(
             partial.assignments, view.tasks, cat, table,
-            self.multi_task_aware, type_mask=self._region_mask))
+            self.multi_task_aware, type_mask=mask))
         m_f = migration_cost(diff_configs(view.live, full), view.live,
                              cat, view.task_workload,
                              self.migration_delay_scale,
@@ -353,25 +339,9 @@ class EvaScheduler(SchedulerBase):
         return self._finish(partial, view, cat)
 
     # -- pressure reactions (spot / credit / deferral), one shared path ------
-    def _apply_admission(self, view: SchedulerView
-                         ) -> Tuple[SchedulerView, Set[int]]:
-        """Run the admission controller and strip held jobs' tasks from the
-        round's view.  Returns the (possibly filtered) view plus the jobs
-        force-admitted by their latest-start bound this round."""
-        held, resumed = self.admission.review(view, self.estimator.d_hat())
-        if held:
-            ids = view.tasks.ids.tolist()
-            jids = view.tasks.job_ids.tolist()
-            held_t = {t for t, j in zip(ids, jids) if j in held}
-            view = dataclasses.replace(
-                view, tasks=view.tasks.subset(
-                    [t for t in ids if t not in held_t]),
-                pending_ids=set(view.pending_ids) - held_t)
-        return view, resumed
-
     def _forced_partial(self, view: SchedulerView, raw: Catalog, cat: Catalog,
-                        table, kw, keep_bonus, evac: Set[int],
-                        throttled: Set[int]) -> ClusterConfig:
+                        table, kw, keep_bonus,
+                        evac: Set[int]) -> ClusterConfig:
         """Shared forced-partial wiring for every pressure signal: spot
         revocation notices *evacuate* the doomed instances, credit
         exhaustion *drains* throttled ones onto steady types, and a
@@ -379,168 +349,25 @@ class EvaScheduler(SchedulerBase):
         job's tasks — all via one partial reconfiguration whose repack set
         holds the triggering tasks.  Evacuated/drained instances are
         dropped from the live view so nothing is kept (or placed) on them;
-        resumed jobs' tasks are already in ``pending_ids``."""
+        resumed jobs' tasks are already in ``pending_ids``.  The type mask
+        is the stack's drain mask (standing mask AND any drain
+        restrictions, e.g. steady-types-only for credit drains)."""
         live = [i for i in view.live if i.instance_id not in evac]
         pending = set(view.pending_ids)
         for inst in view.live:
             if inst.instance_id in evac:
                 pending |= set(inst.task_ids)
-        mask = self._region_mask
-        if throttled:
-            # Drain onto steady (non-burstable) types: an anonymous slot
-            # of the same burstable type would simply re-match the
-            # exhausted instance, so the escape must change type.  Fresh
-            # arrivals burst again in later (unmasked) rounds.
-            steady = np.array([cm is None for cm in raw.credit_models])
-            if mask is not None:
-                steady = steady & mask
-            if steady.any():  # burstable-only catalogs cannot drain
-                mask = steady
-            self.credit_drains += 1
+        mask = self.stack.drain_mask(raw, view)
         self.forced_partials += 1
         cfg = partial_reconfiguration(
             view.tasks, [(i.type_index, i.task_ids) for i in live],
             pending, cat, table, type_mask=mask,
-            region_caps=self._region_caps, keep_bonus=keep_bonus, **kw)
+            region_caps=self.stack.caps, keep_bonus=keep_bonus, **kw)
         return self._finish(cfg, view, cat)
-
-    # -- keep-test slack (multi-region + credit) -----------------------------
-    def _keep_bonus_fn(self, raw: Catalog, cat: Catalog, view: SchedulerView,
-                       credits_on: bool):
-        """Composite per-instance keep-test slack.
-
-        Multi-region part (``multi_region=True``): the amortized ($/h over
-        D̂) cost of re-homing an instance's task set to the cheapest
-        same-hardware region copy — relaunch idle time, per-task
-        checkpoint+launch delay, checkpoint transfer time, and the egress
-        fee.  Zero when the instance already sits in the cheapest region,
-        so intra-region evictions are untouched.
-
-        Known trade-off: the slack assumes an eviction from a dear region
-        re-homes cross-region (true when the price gap is what made the set
-        inefficient, since RP anchors to the cheapest region).  An instance
-        that turned inefficient for other reasons (e.g. a completed sibling
-        shrank the set) gets the same slack and may be held up to one D̂
-        window before intra-region consolidation — bounded by the slack
-        being the one-off move cost spread over D̂.
-
-        Credit part (``credit_aware=True`` on a burstable catalog): the
-        planning cost of a *fresh* instance of the type (``cat.costs[k]``,
-        launch-credit priced over D̂) minus the effective cost of *this*
-        instance at its live balance.  ~0 while the balance matches a fresh
-        launch, decaying below zero as credits drain; at exhaustion the
-        keep test effectively demands TNRP ≥ cost/baseline_fraction, which
-        collapses with the throughput and evicts the set into the repack."""
-        fns = []
-        task_workload = view.task_workload
-        if self.multi_region:
-            d_hr = max(self.estimator.d_hat() / 3600.0, 1e-9)
-
-            def region_bonus(k: int, tids) -> float:
-                k2 = cat.cheapest_copy(k, self._region_mask)
-                if cat.region_of(k2) == cat.region_of(k):
-                    return 0.0
-                pen = ((INSTANCE_ACQUISITION_S + INSTANCE_SETUP_S) / 3600.0
-                       * cat.costs[k2])
-                for t in tids:
-                    pen += task_move_cost(cat, task_workload[t], k, k2,
-                                          self.migration_delay_scale)
-                return pen / d_hr
-
-            fns.append(region_bonus)
-        if credits_on and view.instance_credits:
-            balances = view.instance_credits
-            task_iid = {t: i.instance_id for i in view.live
-                        for t in i.task_ids}
-            horizon_h = self.estimator.d_hat() / 3600.0
-
-            def credit_bonus(k: int, tids) -> float:
-                cm = raw.credit_models[k]
-                if cm is None or not tids:
-                    return 0.0
-                bal = balances.get(task_iid.get(tids[0], -1))
-                if bal is None:
-                    return 0.0
-                eff = raw.costs[k] / cm.avg_speed_over(bal, horizon_h)
-                return float(cat.costs[k] - eff)
-
-            fns.append(credit_bonus)
-        if not fns:
-            return None
-        if len(fns) == 1:
-            return fns[0]
-        return lambda k, tids: sum(f(k, tids) for f in fns)
 
     def _finish(self, config: ClusterConfig, view: SchedulerView,
                 cat: Catalog) -> ClusterConfig:
-        if self.multi_region:
-            config = self._region_arbitrage(config, view, cat)
-        return config
-
-    def _region_arbitrage(self, config: ClusterConfig, view: SchedulerView,
-                          cat: Catalog) -> ClusterConfig:
-        """Per-region-pair reconfiguration trade-off (the paper's S·D̂ > M
-        criterion applied to region moves): re-home each slot to the cheapest
-        same-hardware copy in another region iff the hourly price saving,
-        amortized over D̂ (the estimated time to the next Full
-        Reconfiguration), exceeds the migration-cost *delta* of the rewrite —
-        which prices the checkpoint transfer, egress fee, and fresh-instance
-        launch via ``migration_cost`` on the diffed plans.  Each adopted
-        rewrite re-diffs the whole plan (exact, O(slots·live) per candidate
-        — slot-local deltas would miss greedy-matching interactions between
-        same-type slots); rounds here are tens of slots, so this is cheap.
-
-        Capacity headroom is tracked against the *configuration being
-        refined* (slots per region, updated as rewrites are adopted), since
-        the config is what the executor will instantiate; the simulator's
-        per-region denial remains the hard backstop."""
-        if len(cat.regions) < 2:
-            return config
-        assignments = list(config.assignments)
-        d_hr = self.estimator.d_hat() / 3600.0
-        caps = [r.max_instances for r in cat.regions]
-        counts = np.zeros(len(cat.regions), dtype=np.int64)
-        for k, _ in assignments:
-            counts[cat.region_of(k)] += 1
-        cur_m: Optional[float] = None
-        changed = False
-        for slot, (k, tids) in enumerate(assignments):
-            base = int(cat.base_index[k])
-            cand = cat.base_index == base
-            if self._region_mask is not None:  # honour a region pin
-                cand = cand & self._region_mask
-            # cheapest same-hardware region copy with capacity headroom
-            best_k = int(k)
-            for k2 in np.nonzero(cand)[0].tolist():
-                r2 = cat.region_of(k2)
-                if (r2 != cat.region_of(k) and caps[r2] is not None
-                        and counts[r2] >= caps[r2]):
-                    continue
-                if cat.costs[k2] < cat.costs[best_k] - 1e-12:
-                    best_k = int(k2)
-            if best_k == k:
-                continue
-            if cur_m is None:
-                cur_m = migration_cost(
-                    diff_configs(view.live, ClusterConfig(assignments)),
-                    view.live, cat, view.task_workload,
-                    self.migration_delay_scale,
-                    task_ckpt_region=view.task_ckpt_region)
-            trial = list(assignments)
-            trial[slot] = (best_k, tids)
-            trial_m = migration_cost(
-                diff_configs(view.live, ClusterConfig(trial)), view.live,
-                cat, view.task_workload, self.migration_delay_scale,
-                task_ckpt_region=view.task_ckpt_region)
-            saving = float(cat.costs[k] - cat.costs[best_k]) * d_hr
-            if saving > trial_m - cur_m:
-                assignments = trial
-                cur_m = trial_m
-                counts[cat.region_of(best_k)] += 1
-                counts[cat.region_of(k)] -= 1  # slot vacated its old region
-                self.arbitrage_moves += 1
-                changed = True
-        return ClusterConfig(assignments) if changed else config
+        return self.stack.refine(config, view, cat)
 
     @property
     def full_adoption_rate(self) -> float:

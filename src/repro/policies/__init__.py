@@ -1,0 +1,18 @@
+# Composable policy-layer stack: one scenario axis = one PolicyLayer, a
+# PolicyStack owns ordering/composition, and a PressureBus replaces the
+# three parallel spot/credit/deadline pressure wirings.
+from .base import PLANNING, SNAPSHOT, PolicyLayer, PolicyStack
+from .layers import (AdmissionLayerBase, AutoscaleLayer, CreditLayer,
+                     MultiRegionLayer, RegionPinLayer, SpotLayer,
+                     stack_from_flags)
+from .pressure import (CREDIT, DEADLINE, KINDS, SPOT, PressureBus,
+                       PressureSignal)
+from .stability import StabilityController, StabilityLayer
+
+__all__ = [
+    "PLANNING", "SNAPSHOT", "PolicyLayer", "PolicyStack",
+    "AdmissionLayerBase", "AutoscaleLayer", "CreditLayer",
+    "MultiRegionLayer", "RegionPinLayer", "SpotLayer", "stack_from_flags",
+    "CREDIT", "DEADLINE", "KINDS", "SPOT", "PressureBus", "PressureSignal",
+    "StabilityController", "StabilityLayer",
+]

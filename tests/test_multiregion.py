@@ -279,7 +279,7 @@ def test_region_arbitrage_rehomes_when_saving_beats_penalty():
     view = SchedulerView(time=0.0, tasks=tasks, pending_ids=set(),
                          live=[LiveInstance(0, k_dear, (tid,))],
                          task_workload={tid: 3})
-    cfg = sched._region_arbitrage(ClusterConfig([(k_dear, (tid,))]), view, cat)
+    cfg = sched.stack.refine(ClusterConfig([(k_dear, (tid,))]), view, cat)
     assert cfg.assignments == [(k_cheap, (tid,))]
     assert sched.arbitrage_moves == 1
 
@@ -289,7 +289,7 @@ def test_region_arbitrage_rehomes_when_saving_beats_penalty():
                           live=[LiveInstance(0, cat2.index_of("dear/p3.8xlarge"),
                                              (tid,))],
                           task_workload={tid: 3})
-    cfg2 = sched2._region_arbitrage(
+    cfg2 = sched2.stack.refine(
         ClusterConfig([(cat2.index_of("dear/p3.8xlarge"), (tid,))]), view2, cat2)
     assert cfg2.assignments == [(cat2.index_of("dear/p3.8xlarge"), (tid,))]
     assert sched2.arbitrage_moves == 0

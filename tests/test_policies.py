@@ -1,0 +1,335 @@
+"""Policy-layer stack: composition rules, flag-API bit-identity, and the
+pressure bus.
+
+Contract tests anchoring the refactor:
+* the legacy boolean-flag API emits ``DeprecationWarning`` but builds a
+  stack whose *decisions* are bit-identical to the explicit
+  ``PolicyStack`` on every bundled demo catalog (spot, multi-region,
+  burstable, deferrable);
+* catalog-snapshot transforms keep the documented order — ``at`` (and any
+  forecast) re-price from base costs and must precede ``credit_priced``;
+  the stack validates this at construction and its pipeline equals the
+  hand-composed chain;
+* keep-test bonuses sum, so keep-bonus layers commute;
+* the ``PressureBus`` delivers each signal to each subscriber exactly
+  once, and coincident pressure signals fire exactly one immediate extra
+  round (no double forced-partial).
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import (SimConfig, Simulator, burstable_trace,
+                           deferrable_trace, physical_trace)
+from repro.core import (EvaScheduler, PriceModel, aws_catalog,
+                        burstable_demo_catalog, dispersed_demo_regions,
+                        make_job, multi_region_catalog)
+from repro.core.plan import LiveInstance
+from repro.core.scheduler import SchedulerView
+from repro.core.cluster_types import TaskSet
+from repro.policies import (AutoscaleLayer, CreditLayer, MultiRegionLayer,
+                            PolicyStack, PressureBus, PressureSignal,
+                            RegionPinLayer, SpotLayer, stack_from_flags)
+
+
+# ------------------------------------------------------------- construction
+def test_flag_api_emits_deprecation_warning():
+    cat = aws_catalog()
+    with pytest.warns(DeprecationWarning, match="policy stack"):
+        sched = EvaScheduler(cat, spot_aware=True)
+    assert sched.stack.has("spot") and sched.spot_aware
+
+
+def test_flags_and_policies_are_mutually_exclusive():
+    cat = aws_catalog()
+    with pytest.raises(ValueError, match="not both"):
+        EvaScheduler(cat, spot_aware=True, policies=[SpotLayer()])
+    # knob-style legacy kwargs are rejected too, not silently ignored
+    with pytest.raises(ValueError, match="not both"):
+        EvaScheduler(cat, policies=[SpotLayer()], strike=0.7)
+    with pytest.raises(ValueError, match="not both"):
+        EvaScheduler(cat, policies=[SpotLayer()], region="region-0")
+
+
+def test_two_admission_layers_stack():
+    """An autoscale layer ahead of a stability layer strips its held jobs'
+    tasks from the view; the second review must judge only the jobs still
+    present instead of crashing on the stripped ones."""
+    from repro.policies import StabilityLayer
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    cat = aws_catalog(price_model=pm)
+    sched = EvaScheduler(cat, policies=[
+        SpotLayer(), AutoscaleLayer(strike=1e-6), StabilityLayer()])
+    jobs = deferrable_trace(n_jobs=6, seed=13)
+    m = Simulator(cat, jobs, sched, SimConfig(seed=5)).run()
+    assert all(j.completion_time is not None for j in jobs)
+    assert m.deadline_misses == 0  # the deadline backstop still holds
+
+
+def test_explicit_stack_emits_no_warning(recwarn):
+    sched = EvaScheduler(aws_catalog(), policies=[SpotLayer()])
+    assert not [w for w in recwarn.list
+                if issubclass(w.category, DeprecationWarning)]
+    assert sched.stack.describe() == "spot"
+
+
+def test_stack_introspection():
+    cat = multi_region_catalog(dispersed_demo_regions(3))
+    sched = EvaScheduler(cat, policies=[SpotLayer(), MultiRegionLayer(),
+                                        CreditLayer(),
+                                        AutoscaleLayer(strike=0.9)])
+    stack = sched.stack
+    assert [la.name for la in stack] == ["spot", "multi-region", "credit",
+                                         "autoscale"]
+    assert stack.get("credit") is stack.get(CreditLayer)
+    assert stack.get("nope") is None and not stack.has("nope")
+    # legacy attribute surface still answers from the stack
+    assert sched.spot_aware and sched.multi_region and sched.credit_aware
+    assert sched.autoscale and sched.admission is not None
+    assert sched.needs_runtime_estimates  # admission layers need D̂_j
+
+
+def test_region_pin_layer_masks_and_asserts():
+    cat = multi_region_catalog(dispersed_demo_regions(3))
+    sched = EvaScheduler(cat, policies=[RegionPinLayer("region-1")])
+    np.testing.assert_array_equal(sched.stack.mask, cat.region_type_mask(1))
+    with pytest.raises(AssertionError):
+        EvaScheduler(aws_catalog(), policies=[RegionPinLayer("region-1")])
+
+
+# ------------------------------------------------------- composition order
+def test_snapshot_before_planning_is_enforced():
+    """``credit_priced`` derives effective prices from the *snapshot*;
+    re-pricing from base costs afterwards would silently discard the
+    credit adjustment — so the stack refuses the reversed order."""
+    PolicyStack([SpotLayer(), CreditLayer()])  # documented order: fine
+    with pytest.raises(ValueError, match="snapshot"):
+        PolicyStack([CreditLayer(), SpotLayer()])
+
+
+def test_catalog_pipeline_equals_manual_chain():
+    pm = PriceModel.mean_reverting(discount=0.5, seed=9)
+    cat = burstable_demo_catalog(price_model=pm)
+    sched = EvaScheduler(cat, policies=[SpotLayer(), CreditLayer()])
+    t, d_hat = 7200.0, 4 * 3600.0
+    view = SchedulerView(time=t, tasks=TaskSet([]), pending_ids=set(),
+                         live=[], task_workload={})
+    raw, plan = sched.stack.plan(cat, view, d_hat)
+    manual_raw = cat.at(t)
+    np.testing.assert_array_equal(raw.costs, manual_raw.costs)
+    np.testing.assert_array_equal(plan.costs,
+                                  manual_raw.credit_priced(d_hat).costs)
+
+
+def test_catalog_transforms_commute_where_documented():
+    """Both transforms are per-type scalings, so on a *fresh* catalog the
+    documented chain commutes: at→credit_priced == credit_priced→at.  The
+    reason the stack still enforces snapshot-before-planning: once a
+    snapshot pinned ``base_costs``, any later snapshot transform re-prices
+    from base and silently discards the planning adjustment."""
+    pm = PriceModel.mean_reverting(discount=0.5, seed=9)
+    cat = burstable_demo_catalog(price_model=pm)
+    t, h = 7200.0, 4 * 3600.0
+    documented = cat.at(t).credit_priced(h)
+    np.testing.assert_allclose(documented.costs,
+                               cat.credit_priced(h).at(t).costs)
+    # a snapshot applied *after* the documented chain reverts the credit
+    # adjustment — exactly the misordering PolicyStack rejects
+    clobbered = documented.at(t)
+    np.testing.assert_allclose(clobbered.costs, cat.at(t).costs)
+    assert not np.allclose(clobbered.costs, documented.costs)
+
+
+def test_keep_bonus_layers_commute():
+    """Keep-test slack sums across layers, so keep-bonus layers may appear
+    in any order: region + credit bonuses agree either way."""
+    base = list(burstable_demo_catalog().types)
+    from repro.core import Region
+    cat = multi_region_catalog((Region("a"), Region("b", cost_scale=0.5)),
+                               base_types=base)
+    job = make_job(job_id=1, workload=8, arrival_time=0.0, duration_s=3600.0,
+                   n_tasks=1)
+    tid = job.tasks[0].task_id
+    k = cat.index_of("a/t7i.2xlarge")
+    view = SchedulerView(
+        time=0.0, tasks=TaskSet(job.tasks), pending_ids=set(),
+        live=[LiveInstance(0, k, (tid,))], task_workload={tid: 8},
+        instance_credits={0: 0.1}, throttled=None)
+    vals = []
+    for layers in ([MultiRegionLayer(), CreditLayer()],
+                   [CreditLayer(), MultiRegionLayer()]):
+        sched = EvaScheduler(cat, policies=layers)
+        raw, plan = sched.stack.plan(cat, view, 3600.0)
+        fn = sched.stack.keep_bonus(raw, plan, view)
+        vals.append(fn(k, (tid,)))
+    assert vals[0] == pytest.approx(vals[1])
+    assert vals[0] != 0.0  # both parts contribute
+
+
+# --------------------------------------------------- flag/stack bit-identity
+class _Probe(EvaScheduler):
+    """Records every round's decision (the returned config)."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.trace = []
+
+    def schedule(self, view):
+        cfg = super().schedule(view)
+        self.trace.append((view.time, tuple(cfg.assignments)))
+        return cfg
+
+
+def _decisions(catalog_fn, trace_fn, cfg_kw, flag_kw, stack_fn):
+    """Run the flag API and the explicit stack side by side; return both
+    (decision trace, metrics summary) pairs.  Task/job ids come from
+    global trace counters, so decisions are normalized to id *ranks*
+    before comparison."""
+    out = []
+    for use_stack in (False, True):
+        cat = catalog_fn()
+        jobs = trace_fn()
+        rank = {t.task_id: i for i, t in enumerate(
+            sorted((t for j in jobs for t in j.tasks),
+                   key=lambda t: t.task_id))}
+        if use_stack:
+            sched = _Probe(cat, policies=stack_fn())
+        else:
+            with pytest.warns(DeprecationWarning):
+                sched = _Probe(cat, **flag_kw)
+        m = Simulator(cat, jobs, sched, SimConfig(**cfg_kw)).run()
+        trace = [(t, tuple((k, tuple(rank[tid] for tid in tids))
+                           for k, tids in assignments))
+                 for t, assignments in sched.trace]
+        out.append((trace, m.summary(), m.total_cost))
+    return out
+
+
+def _assert_bit_identical(runs):
+    (tr_a, sum_a, cost_a), (tr_b, sum_b, cost_b) = runs
+    assert tr_a == tr_b  # decision-level: every round's config matches
+    assert sum_a == sum_b
+    assert cost_a == cost_b  # bit-for-bit, not rounded
+
+
+def test_bit_identity_spot_demo():
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    _assert_bit_identical(_decisions(
+        lambda: aws_catalog(price_model=pm),
+        lambda: physical_trace(n_jobs=8, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(seed=5, preemption_hazard_per_hour=0.5),
+        dict(spot_aware=True),
+        lambda: [SpotLayer()]))
+
+
+def test_bit_identity_multiregion_demo():
+    _assert_bit_identical(_decisions(
+        lambda: multi_region_catalog(dispersed_demo_regions(3)),
+        lambda: physical_trace(n_jobs=6, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(seed=5, preemption_hazard_per_hour=0.3),
+        dict(multi_region=True),
+        lambda: [SpotLayer(), MultiRegionLayer()]))
+
+
+def test_bit_identity_burstable_demo():
+    _assert_bit_identical(_decisions(
+        burstable_demo_catalog,
+        lambda: burstable_trace(n_jobs=8, seed=11),
+        dict(seed=5),
+        dict(credit_aware=True),
+        lambda: [SpotLayer(), CreditLayer()]))
+
+
+def test_bit_identity_deferrable_demo():
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    _assert_bit_identical(_decisions(
+        lambda: aws_catalog(price_model=pm),
+        lambda: deferrable_trace(n_jobs=10, seed=13),
+        dict(seed=5, preemption_hazard_per_hour=0.3),
+        dict(spot_aware=True, autoscale=True, strike=0.9),
+        lambda: [SpotLayer(), AutoscaleLayer(strike=0.9)]))
+
+
+def test_stack_from_flags_matches_flag_shim():
+    """The factory translation (`stack_from_flags`) builds the same layer
+    sequence the deprecation shim does."""
+    stack = stack_from_flags(multi_region=True, credit_aware=True,
+                             autoscale=True, strike=0.8)
+    assert [la.name for la in stack] == ["spot", "multi-region", "credit",
+                                         "autoscale"]
+    cat = multi_region_catalog(dispersed_demo_regions(3),
+                               base_types=burstable_demo_catalog().types)
+    with pytest.warns(DeprecationWarning):
+        shim = EvaScheduler(cat, multi_region=True, credit_aware=True,
+                            autoscale=True, strike=0.8)
+    assert [la.name for la in shim.stack] == [la.name for la in stack]
+    assert shim.stack.get("autoscale").controller.strike == 0.8
+
+
+# -------------------------------------------------------------- pressure bus
+def test_pressure_bus_exactly_once_per_subscriber():
+    bus = PressureBus()
+    got_a, got_b = [], []
+    bus.subscribe(got_a.append)
+    bus.subscribe(got_b.append)
+    sig = PressureSignal("credit", (3,), 100.0)
+    bus.publish(sig)
+    assert got_a == [sig] and got_b == [sig]
+    assert bus.published == 1 and bus.delivered == 2
+
+
+def test_bus_carries_all_three_kinds_to_legacy_hooks():
+    cat = aws_catalog()
+
+    class _Recorder(EvaScheduler):
+        def __init__(self, catalog):
+            super().__init__(catalog)
+            self.kinds = []
+
+        def on_preemption_notice(self, ids, t):
+            self.kinds.append("spot")
+
+        def on_credit_pressure(self, ids, t):
+            self.kinds.append("credit")
+
+        def on_deadline_pressure(self, ids, t):
+            self.kinds.append("deadline")
+
+    sched = _Recorder(cat)
+    for kind in ("spot", "credit", "deadline"):
+        sched.on_pressure(PressureSignal(kind, (1,), 0.0))
+    assert sched.kinds == ["spot", "credit", "deadline"]
+
+
+def test_coincident_deadline_signals_fire_one_round():
+    """Two deferrable jobs with the same latest-start time raise two
+    DEFER_DEADLINE signals at the same instant; the simulator must react
+    with exactly one extra round (one forced partial), not one per
+    signal."""
+    pm = PriceModel.mean_reverting(discount=0.35, volatility=0.02, seed=7)
+    cat = aws_catalog(price_model=pm)
+    dur = 0.4 * 3600.0
+    from repro.autoscale import ADMIT_OVERHEAD_S, RUNTIME_MARGIN
+    dl = RUNTIME_MARGIN * dur + ADMIT_OVERHEAD_S + 2 * 3600.0 + 77.0
+    jobs = [make_job(job_id=i + 1, workload=8, arrival_time=0.0,
+                     duration_s=dur, n_tasks=1, deadline_s=dl,
+                     deferrable=True) for i in range(2)]
+    times = []
+
+    class _Count(EvaScheduler):
+        def schedule(self, view):
+            times.append(view.time)
+            return super().schedule(view)
+
+    sched = _Count(cat, policies=[SpotLayer(),
+                                  AutoscaleLayer(strike=1e-6)])
+    sim = Simulator(cat, jobs, sched, SimConfig(seed=5))
+    m = sim.run()
+    from repro.autoscale import latest_start_s
+    ls = latest_start_s(dl, dur)
+    assert ls % 300.0 != 0.0  # genuinely off the round grid
+    assert times.count(ls) == 1, "coincident signals double-fired the round"
+    assert sim.pressure_bus.published == 2  # both signals still delivered
+    assert sched.deadline_signals == 2
+    assert m.deadline_misses == 0

@@ -1,0 +1,168 @@
+"""Stability-vs-cost admission (drift-plus-penalty, arXiv 2201.09050).
+
+Contract tests anchoring the axis:
+* the drift-plus-penalty trade-off: a job facing a standing premium is
+  held while its backlog is small and admitted once ``q·rp_a >
+  V·premium`` — long before its latest-start deadline backstop;
+* ``V`` is the patience dial: larger V holds longer, V=0 admits after a
+  single held round, and the deadline bound still forces admission;
+* warm-keep pricing: keep-test slack appears exactly while jobs are
+  queued, scaled by queue pressure;
+* eva-stability bounds the pending queue below the deep-strike chaser at
+  comparable cost with zero deadline misses (the benchmark/CI
+  invariant), and a stack with a StabilityLayer is bit-identical to the
+  plain spot scheduler on traces with no deferrable jobs.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig, Simulator, deferrable_trace, physical_trace
+from repro.core import (EvaScheduler, PriceModel, TaskSet, aws_catalog,
+                        make_job)
+from repro.core.plan import LiveInstance
+from repro.core.scheduler import SchedulerView
+from repro.policies import (AutoscaleLayer, SpotLayer, StabilityController,
+                            StabilityLayer)
+
+
+def _dear_market_catalog():
+    """Cheap history, then permanently dear: the strike chaser would hold
+    until its deadline backstop; stability must not."""
+    times = np.arange(0.0, 48 * 3600.0, 600.0)
+    mult = np.where(times < 2 * 3600.0, 0.3, 0.9)
+    return aws_catalog(price_model=PriceModel.trace(times, mult))
+
+
+def _one_job_view(time, deadline, remaining=1800.0):
+    job = make_job(job_id=1, workload=8, arrival_time=0.0,
+                   duration_s=remaining, n_tasks=1,
+                   deadline_s=deadline, deferrable=True)
+    tid = job.tasks[0].task_id
+    return SchedulerView(
+        time=time, tasks=TaskSet(job.tasks), pending_ids={tid}, live=[],
+        task_workload={tid: 8}, remaining_s={tid: remaining},
+        deferrable={1}, deadline_s={1: deadline}, pending={1})
+
+
+# ------------------------------------------------------------ the controller
+def test_drift_dominates_after_bounded_backlog():
+    """On a permanently dear market the pure chaser holds forever (until
+    the deadline bound); the stability controller admits once the
+    held-round backlog outweighs the premium — and the patience scales
+    with V."""
+    cat = _dear_market_catalog()
+    dl = 40 * 3600.0  # deadline far enough that the backstop never fires
+    admitted_at = {}
+    for v in (4.0, 16.0):
+        ctl = StabilityController(cat, v=v, strike=0.9)
+        for r in range(200):
+            t = 3 * 3600.0 + r * 300.0  # review every round, market dear
+            held, forced = ctl.review(_one_job_view(t, dl), d_hat_s=600.0)
+            if not held:
+                admitted_at[v] = r
+                break
+        assert not forced, "must admit by drift, not the deadline backstop"
+        assert v in admitted_at, "drift term never dominated"
+        assert ctl.admissions == 1 and ctl.forced_admissions == 0
+    assert 0 < admitted_at[4.0] < admitted_at[16.0] < 200  # V = patience
+
+
+def test_v_zero_admits_after_one_held_round():
+    cat = _dear_market_catalog()
+    ctl = StabilityController(cat, v=0.0, strike=0.9)
+    held, _ = ctl.review(_one_job_view(3 * 3600.0, 40 * 3600.0), 600.0)
+    assert held == {1}  # backlog 0: q·rp_a > 0 is false, hold once
+    held, _ = ctl.review(_one_job_view(3 * 3600.0 + 300.0, 40 * 3600.0),
+                         600.0)
+    assert not held and ctl.held_job_rounds == 1
+
+
+def test_queue_pressure_vetoes_re_deferral():
+    """A spike never bounces a job back to the queue once its backlog
+    would immediately re-admit it."""
+    cat = _dear_market_catalog()
+    ctl = StabilityController(cat, v=8.0, strike=0.9)
+    ctl._admitted.add(1)
+    ctl._held_rounds[1] = 100  # deep backlog: drift dominates any premium
+    held, _ = ctl.review(_one_job_view(3 * 3600.0, 40 * 3600.0), 600.0)
+    assert not held and ctl.re_deferrals == 0
+
+
+def test_deadline_backstop_still_forces():
+    cat = _dear_market_catalog()
+    ctl = StabilityController(cat, v=1e9, strike=0.9)  # infinite patience
+    from repro.autoscale import latest_start_s
+    dl = 10 * 3600.0
+    late = latest_start_s(dl, 1800.0) + 1.0
+    held, forced = ctl.review(_one_job_view(late, dl), 600.0)
+    assert not held and forced == {1} and ctl.forced_admissions == 1
+
+
+# --------------------------------------------------------------- warm keep
+def test_warm_keep_slack_appears_with_queue():
+    cat = aws_catalog()
+    layer = StabilityLayer()
+    sched = EvaScheduler(cat, policies=[layer])
+    job = make_job(job_id=1, workload=8, arrival_time=0.0,
+                   duration_s=3600.0, n_tasks=1)
+    tid = job.tasks[0].task_id
+    k = cat.index_of("c7i.2xlarge")
+    view = SchedulerView(time=0.0, tasks=TaskSet(job.tasks),
+                         pending_ids=set(),
+                         live=[LiveInstance(0, k, (tid,))],
+                         task_workload={tid: 8})
+    assert layer.keep_bonus(cat, cat, view) is None  # empty queue: no slack
+    layer.last_held = {7}
+    fn = layer.keep_bonus(cat, cat, view)
+    assert fn is not None and fn(k, (tid,)) > 0.0
+    # slack scales with queue pressure up to the warm_ref saturation
+    layer.last_held = {7, 8, 9, 10}
+    fn4 = layer.keep_bonus(cat, cat, view)
+    assert fn4(k, (tid,)) == pytest.approx(4.0 * fn(k, (tid,)))
+    # ... and can be disabled
+    off = StabilityLayer(warm_keep=False)
+    off.bind(sched)
+    off.last_held = {7}
+    assert off.keep_bonus(cat, cat, view) is None
+
+
+# ------------------------------------------------- strictly additive (PR 5)
+def test_stability_bit_identical_without_deferrable_jobs():
+    """On a trace with no deferrable jobs the StabilityLayer never runs a
+    review and adds no keep slack: decisions are bit-for-bit the plain
+    spot scheduler's."""
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    m = []
+    for layers in ([SpotLayer()], [SpotLayer(), StabilityLayer()]):
+        cat = aws_catalog(price_model=pm)
+        sim = Simulator(cat,
+                        physical_trace(n_jobs=8, seed=11,
+                                       duration_range_h=(0.3, 0.6)),
+                        EvaScheduler(cat, policies=layers),
+                        SimConfig(seed=5, preemption_hazard_per_hour=0.5))
+        m.append(sim.run())
+    assert m[0].summary() == m[1].summary()
+    assert m[0].total_cost == m[1].total_cost  # bit-for-bit
+
+
+# ------------------------------------------------------------ the acceptance
+def test_stability_bounds_queue_at_comparable_cost():
+    """Acceptance (benchmark/CI invariant): on the bundled OU market,
+    eva-stability holds the max pending-queue length below the
+    always-defer chaser at a total cost within 5%, with zero deadline
+    misses."""
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    results = {}
+    for name, layers in (
+            ("stability", [SpotLayer(), StabilityLayer()]),
+            ("chaser", [SpotLayer(), AutoscaleLayer(strike=0.7)])):
+        cat = aws_catalog(price_model=pm)
+        jobs = deferrable_trace(n_jobs=24, seed=13)
+        m = Simulator(cat, jobs, EvaScheduler(cat, policies=layers),
+                      SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()
+        assert all(j.completion_time is not None for j in jobs)
+        results[name] = m
+    stab, chase = results["stability"], results["chaser"]
+    assert stab.deadline_misses == 0
+    assert stab.max_pending_jobs < chase.max_pending_jobs
+    assert stab.total_cost <= 1.05 * chase.total_cost
