@@ -1,16 +1,19 @@
 """Tables 4 & 5: provisioning-cost micro-benchmark (No-Packing vs Full
-Reconfiguration vs ILP) and Full-Reconfiguration runtime scaling (plus the
-beyond-paper jitted JAX engine)."""
+Reconfiguration vs ILP), Full-Reconfiguration runtime scaling (plus the
+beyond-paper jitted JAX engine), and the fleet-scale planning curve
+(10³→10⁶ tasks: numpy vs single-pass jit vs incremental repack)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import (TaskSet, aws_catalog, cheapest_type,
-                        full_reconfiguration, make_task, reservation_prices)
+from repro.core import (LiveInstance, TaskSet, aws_catalog, cheapest_type,
+                        full_reconfiguration, incremental_reconfiguration,
+                        make_task, reservation_prices)
+from repro.core.catalog import FAMILIES, NUM_RESOURCES
 from repro.core.ilp import cost_lower_bound, solve_ilp
-from repro.core.workloads import NUM_WORKLOADS
+from repro.core.workloads import NUM_WORKLOADS, WORKLOADS
 
 from .common import print_table, save_results
 
@@ -18,6 +21,18 @@ from .common import print_table, save_results
 def _random_tasks(n, rng):
     return TaskSet([make_task(job_id=i, workload=int(rng.integers(NUM_WORKLOADS)))
                     for i in range(n)])
+
+
+def _fleet(n, rng):
+    """Array-built fleet (single-task jobs): the (W, F, R) profile matrix is
+    gathered per task, so construction stays O(n) with no Python loop."""
+    prof = np.zeros((NUM_WORKLOADS, len(FAMILIES), NUM_RESOURCES))
+    for wi, w in enumerate(WORKLOADS):
+        for fi, fam in enumerate(FAMILIES):
+            prof[wi, fi] = w.demand_for_family(fam)
+    wl = rng.integers(NUM_WORKLOADS, size=n).astype(np.int64)
+    ids = np.arange(n, dtype=np.int64)
+    return TaskSet.from_arrays(ids, ids, wl, prof[wl])
 
 
 def table4(trials=5, n_tasks=200, ilp_time_limit=30.0, quick=False):
@@ -101,8 +116,66 @@ def table5(sizes=(1000, 2000, 4000, 8000), quick=False):
     return rows
 
 
+#: numpy engine is O(T·K·fills) in Python-visible work; past this it takes
+#: minutes per row, so larger rows report the jit/incremental columns only.
+NUMPY_CAP = 10_000
+
+
+def scaling_curve(sizes=(1000, 10_000, 100_000, 1_000_000), quick=False):
+    """Fleet-scale planning curve: single-pass jitted engine vs numpy, plus
+    incremental repack latency for a single-instance disturbance.
+
+    Columns: ``numpy_s`` (capped at NUMPY_CAP tasks), ``jax_s`` (warm jitted
+    full re-plan), ``incremental_s`` (one evacuated instance, dirty-set
+    repack), and the two speedup ratios the CI gate pins.
+    """
+    if quick:
+        sizes = (1000, 10_000, 100_000)
+    cat = aws_catalog()
+    kw = dict(interference_aware=False, multi_task_aware=True)
+    rows = []
+    for n in sizes:
+        tasks = _fleet(n, np.random.default_rng(n))
+        dt_np = None
+        if n <= NUMPY_CAP:
+            t0 = time.time()
+            full_reconfiguration(tasks, cat, table=None, engine="numpy", **kw)
+            dt_np = time.time() - t0
+        # warm up (jit compile + shape-bucket retraces), then time
+        full_reconfiguration(tasks, cat, table=None, engine="jax", **kw)
+        t0 = time.time()
+        cfg = full_reconfiguration(tasks, cat, table=None, engine="jax", **kw)
+        dt_jx = time.time() - t0
+        # single-instance disturbance: evacuate the first instance and repack
+        # only its tasks (the dirty set) instead of re-planning the fleet.
+        live = [LiveInstance(i, k, tuple(tids))
+                for i, (k, tids) in enumerate(cfg.assignments)]
+        evac = [live[0].instance_id]
+        incremental_reconfiguration(tasks, live, set(), set(), cat, None,
+                                    evacuate=evac, engine="jax", **kw)
+        t0 = time.time()
+        _, fb = incremental_reconfiguration(tasks, live, set(), set(), cat,
+                                            None, evacuate=evac, engine="jax",
+                                            **kw)
+        dt_inc = time.time() - t0
+        rows.append({"n_tasks": n,
+                     "numpy_s": round(dt_np, 3) if dt_np is not None else "",
+                     "jax_s": round(dt_jx, 4),
+                     "incremental_s": round(dt_inc, 4),
+                     "jit_speedup": (round(dt_np / dt_jx, 1)
+                                     if dt_np is not None else ""),
+                     "incr_speedup": round(dt_jx / max(dt_inc, 1e-9), 1),
+                     "instances": len(cfg.assignments),
+                     "fallback": fb or ""})
+    print_table("Fleet-scale planning curve", rows,
+                ["n_tasks", "numpy_s", "jax_s", "incremental_s",
+                 "jit_speedup", "incr_speedup", "instances", "fallback"])
+    return rows
+
+
 def run(quick=False):
-    out = {"table4": table4(quick=quick), "table5": table5(quick=quick)}
+    out = {"table4": table4(quick=quick), "table5": table5(quick=quick),
+           "scaling": scaling_curve(quick=quick)}
     save_results("bench_micro", out)
     return out
 

@@ -173,6 +173,11 @@ class _Instance:
     preempt_deadline: Optional[float] = None  # revocation notice received
     assigned: Set[int] = dataclasses.field(default_factory=set)
     residents: Set[int] = dataclasses.field(default_factory=set)  # outbound ckpt
+    # running total of assigned tasks' demand on this instance's family,
+    # maintained by Simulator._assign_task/_unassign_task so per-accrual
+    # allocation accounting is O(alive instances), not O(alive tasks).
+    # Demands are integer-valued, so the incremental updates are float-exact.
+    alloc: np.ndarray = dataclasses.field(default_factory=lambda: np.zeros(3))
     # burstable-credit state (types carrying a CreditModel only; the balance
     # is integrated lazily in _accrue, so it is current as of _last_accrue)
     credit_hours: float = 0.0  # balance in full-speed hours
@@ -299,9 +304,16 @@ class Simulator:
         self.jobs: Dict[int, _JobState] = {}
         self.tasks: Dict[int, _TaskState] = {}
         self.instances: Dict[int, _Instance] = {}
+        # fleet-scale indices: the alive (insertion-ordered, so sweeps stay
+        # bit-identical to filtering self.instances) and not-yet-done
+        # subsets, plus per-region alive counts — long traces accumulate
+        # dead instances/jobs and the per-event sweeps were O(history)
+        self._alive: Dict[int, _Instance] = {}
+        self._active_jobs: Dict[int, _JobState] = {}
         self._iid = itertools.count()
         self._seq = itertools.count()
         self._heap: List[Tuple[float, int, int, int, tuple]] = []
+        self._seeding = True  # __init__ batches pushes, then heapifies once
         self._round_scheduled_at: float = -1.0
         self._pressure_round_at: float = -1.0  # immediate-round de-dup
         # One bus for every pressure wiring (spot / credit / deadline); the
@@ -383,20 +395,37 @@ class Simulator:
             self._push(job.arrival_time, ARRIVAL, (job,))
         self.metrics.n_jobs = len(jobs)
         self.metrics.n_tasks = sum(j.n_tasks for j in jobs)
+        if self._regions is not None:
+            self._region_alive = [0] * len(self._regions)
+        # one heapify over the seeded events instead of per-event pushes;
+        # pop order is unchanged (the unique seq makes ordering total)
+        heapq.heapify(self._heap)
+        self._seeding = False
 
     # ------------------------------------------------------------------ util
     def _push(self, t: float, kind: int, payload: tuple):
-        heapq.heappush(self._heap, (t, kind, next(self._seq), payload))
+        entry = (t, kind, next(self._seq), payload)
+        if self._seeding:
+            self._heap.append(entry)
+        else:
+            heapq.heappush(self._heap, entry)
 
     def _live_instances(self) -> List[_Instance]:
-        return [i for i in self.instances.values() if i.alive and not i.draining]
+        return [i for i in self._alive.values() if not i.draining]
 
-    def _alloc_of(self, inst: _Instance) -> np.ndarray:
+    def _task_demand(self, inst: _Instance, tid: int) -> np.ndarray:
         fam = FAMILIES[self.catalog.types[inst.type_index].family_id]
-        a = np.zeros(3)
-        for tid in inst.assigned:
-            a += np.array(self.tasks[tid].task.demand_for_family(fam))
-        return a
+        return np.array(self.tasks[tid].task.demand_for_family(fam))
+
+    def _assign_task(self, inst: _Instance, tid: int) -> None:
+        if tid not in inst.assigned:
+            inst.assigned.add(tid)
+            inst.alloc += self._task_demand(inst, tid)
+
+    def _unassign_task(self, inst: _Instance, tid: int) -> None:
+        if tid in inst.assigned:
+            inst.assigned.discard(tid)
+            inst.alloc -= self._task_demand(inst, tid)
 
     # ------------------------------------------------------------ accounting
     def _accrue(self, now: float):
@@ -405,13 +434,11 @@ class Simulator:
             self._last_accrue = now
             return
         m = self.metrics
-        for inst in self.instances.values():
-            if not inst.alive:
-                continue
+        for inst in self._alive.values():
             m.ninst_integral += dt
             m.ntask_integral += len(inst.assigned) * dt
             m.cap_integral += self.catalog.capacities[inst.type_index] * dt
-            m.alloc_integral += self._alloc_of(inst) * dt
+            m.alloc_integral += inst.alloc * dt
             if self._credits:  # integrate the credit balance (billing is NOT
                 self._credit_integrate(inst, dt)  # touched: cost stays flat)
                 if inst.throttled:
@@ -422,9 +449,7 @@ class Simulator:
                 if self._regions is not None:
                     m.cost_by_region[
                         self._region_name_of_type[inst.type_index]] += amt
-        for js in self.jobs.values():
-            if not js.arrived or js.done_t is not None:
-                continue
+        for js in self._active_jobs.values():
             if js.rate > 0:
                 js.iters_done += js.rate * dt
                 js.running_s += dt
@@ -572,9 +597,7 @@ class Simulator:
         cap = self._regions[r].max_instances
         if cap is None:
             return True
-        n = sum(1 for i in self.instances.values()
-                if i.alive and int(self._region_ids[i.type_index]) == r)
-        return n < cap
+        return self._region_alive[r] < cap
 
     def _launch_or_deny(self, k: int) -> Optional[_Instance]:
         if self._region_has_capacity(k):
@@ -592,6 +615,9 @@ class Simulator:
             if cm is not None:
                 inst.credit_hours = cm.effective_launch_hours
         self.instances[iid] = inst
+        self._alive[iid] = inst
+        if self._regions is not None:
+            self._region_alive[int(self._region_ids[k])] += 1
         self.metrics.instances_launched += 1
         self._push(inst.ready_t, INSTANCE_READY, (iid,))
         if self.cfg.failure_mtbf_hours > 0:
@@ -603,6 +629,9 @@ class Simulator:
         if not inst.alive:
             return
         inst.terminated_t = self.now
+        self._alive.pop(inst.iid, None)
+        if self._regions is not None:
+            self._region_alive[int(self._region_ids[inst.type_index])] -= 1
         if not self._spot:  # spot billing is integrated in _accrue instead
             amt = ((self.now - inst.request_t) / 3600.0
                    * self.catalog.costs[inst.type_index])
@@ -698,11 +727,11 @@ class Simulator:
             if ts.state == RUNNING:
                 # leave src: checkpoint first
                 src = self.instances[ts.src]
-                src.assigned.discard(mig.task_id)
+                self._unassign_task(src, mig.task_id)
                 ts.epoch += 1
                 ts.state = CKPT
                 ts.dst = dst.iid
-                dst.assigned.add(mig.task_id)
+                self._assign_task(dst, mig.task_id)
                 w = WORKLOADS[ts.workload]
                 delay = w.checkpoint_delay_s * self.cfg.migration_delay_scale
                 if self._regions is not None:
@@ -718,7 +747,7 @@ class Simulator:
             else:  # PENDING -> fresh placement
                 ts.epoch += 1
                 ts.dst = dst.iid
-                dst.assigned.add(mig.task_id)
+                self._assign_task(dst, mig.task_id)
                 if self._deferrals:  # PENDING -> ADMIT transition
                     js = self.jobs[ts.job_id]
                     if js.admitted_t is None:
@@ -750,7 +779,7 @@ class Simulator:
         # Evacuated revoked instances stop billing as soon as they are empty
         # (terminate during the notice window) instead of idling to reclaim.
         if self._spot:
-            for inst in self.instances.values():
+            for inst in list(self._alive.values()):
                 if (inst.alive and inst.preempt_deadline is not None
                         and not inst.assigned and not inst.draining):
                     inst.draining = True
@@ -758,9 +787,7 @@ class Simulator:
 
     # ----------------------------------------------------------- monitoring
     def _report_throughputs(self):
-        for jid, js in self.jobs.items():
-            if not js.arrived or js.done_t is not None:
-                continue
+        for jid, js in self._active_jobs.items():
             tasks = js.job.tasks
             states = [self.tasks[t.task_id] for t in tasks]
             if any(s.state != RUNNING for s in states):
@@ -789,9 +816,8 @@ class Simulator:
     # ------------------------------------------------------------ round
     def _live_task_ids(self) -> List[int]:
         out = []
-        for js in self.jobs.values():
-            if js.arrived and js.done_t is None:
-                out.extend(t.task_id for t in js.job.tasks)
+        for js in self._active_jobs.values():
+            out.extend(t.task_id for t in js.job.tasks)
         return sorted(out)
 
     def _run_round(self):
@@ -863,6 +889,7 @@ class Simulator:
     def _on_arrival(self, job: Job):
         js = _JobState(job=job, arrived=True)
         self.jobs[job.job_id] = js
+        self._active_jobs[job.job_id] = js
         for t in job.tasks:
             self.tasks[t.task_id] = _TaskState(task=t, job_id=job.job_id,
                                                workload=t.workload)
@@ -910,6 +937,7 @@ class Simulator:
             return  # stale projection
         js.done_t = self.now
         js.job.completion_time = self.now
+        self._active_jobs.pop(jid, None)
         self._jobs_outstanding -= 1
         if self._deferrals:
             if (js.job.deadline_s is not None
@@ -939,7 +967,7 @@ class Simulator:
             for ref in (ts.src, ts.dst):
                 if ref is not None and ref in self.instances:
                     inst = self.instances[ref]
-                    inst.assigned.discard(t.task_id)
+                    self._unassign_task(inst, t.task_id)
                     inst.residents.discard(t.task_id)
                     self._touch_instance_jobs(inst.iid)
                     self._maybe_finish_drain(inst)
@@ -970,7 +998,7 @@ class Simulator:
             js.iters_done = max(0.0, js.iters_done - loss)
             # clear any other reservation
             if ts.dst is not None and ts.dst in self.instances and ts.dst != iid:
-                self.instances[ts.dst].assigned.discard(tid)
+                self._unassign_task(self.instances[ts.dst], tid)
             self._make_pending(tid)
         for j in jids:
             self._touch_job(j)
@@ -992,9 +1020,9 @@ class Simulator:
         noticed: List[int] = []
         if self.cfg.preemption_hazard_per_hour > 0 and dt > 0:
             pressure = pm.pressure_at(len(self.catalog), self.now)
-            for iid in sorted(self.instances):
-                inst = self.instances[iid]
-                if not inst.alive or inst.preempt_deadline is not None:
+            for iid in sorted(self._alive):
+                inst = self._alive[iid]
+                if inst.preempt_deadline is not None:
                     continue
                 lam = (self.cfg.preemption_hazard_per_hour / 3600.0
                        * float(pressure[inst.type_index]))
@@ -1053,7 +1081,7 @@ class Simulator:
                 if (tid in cfg_tids or ts.state != WAITING
                         or not self.jobs[ts.job_id].job.deferrable):
                     continue
-                inst.assigned.discard(tid)
+                self._unassign_task(inst, tid)
                 self._make_pending(tid)
                 self.metrics.withdrawals += 1
                 if self._job_pending(ts.job_id):
@@ -1092,9 +1120,8 @@ class Simulator:
                 if self._live_task_ids():
                     self._schedule_next_round()
         # drain any leftover instances at the end
-        for inst in self.instances.values():
-            if inst.alive:
-                self._terminate(inst)
+        for inst in list(self._alive.values()):
+            self._terminate(inst)
         if self._deferrals:  # deadlines blown by never finishing count too
             for js in self.jobs.values():
                 if (js.done_t is None and js.job.deadline_s is not None

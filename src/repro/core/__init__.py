@@ -11,7 +11,8 @@ from .cluster_types import (Assignment, ClusterConfig, Job, Task, TaskSet,
                             make_job, make_task)
 from .ensemble import EventRateEstimator, choose, mean_time_to_full_reconfig
 from .full_reconfig import evaluate_assignments, full_reconfiguration
-from .partial_reconfig import partial_reconfiguration
+from .partial_reconfig import (incremental_reconfiguration,
+                               partial_reconfiguration)
 from .plan import (LiveInstance, Plan, diff_configs, migration_cost,
                    task_move_cost)
 from .reservation_price import (cheapest_type, feasibility_matrix, job_rp_sums,
@@ -31,7 +32,8 @@ __all__ = [
     "multi_region_catalog", "table3_catalog",
     "Assignment", "ClusterConfig", "Job", "Task", "TaskSet", "make_job",
     "make_task", "EventRateEstimator", "choose", "mean_time_to_full_reconfig",
-    "evaluate_assignments", "full_reconfiguration", "partial_reconfiguration",
+    "evaluate_assignments", "full_reconfiguration",
+    "incremental_reconfiguration", "partial_reconfiguration",
     "LiveInstance", "Plan", "diff_configs", "migration_cost",
     "task_move_cost", "cheapest_type",
     "feasibility_matrix", "job_rp_sums", "regional_reservation_prices",

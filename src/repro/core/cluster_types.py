@@ -93,7 +93,7 @@ class TaskSet:
     """
 
     def __init__(self, tasks: Sequence[Task]):
-        self.tasks = list(tasks)
+        self.tasks: Optional[List[Task]] = list(tasks)
         self.ids = np.array([t.task_id for t in self.tasks], dtype=np.int64)
         self.job_ids = np.array([t.job_id for t in self.tasks], dtype=np.int64)
         self.workloads = np.array([t.workload for t in self.tasks], dtype=np.int64)
@@ -104,16 +104,46 @@ class TaskSet:
                 d[i, fi] = t.demand_for_family(fam)
         self.demand_by_family = d
         self._index_of = {tid: i for i, tid in enumerate(self.ids.tolist())}
+        self._job_sizes: Optional[Dict[int, int]] = None
+
+    @classmethod
+    def from_arrays(cls, ids: np.ndarray, job_ids: np.ndarray,
+                    workloads: np.ndarray, demand_by_family: np.ndarray,
+                    tasks: Optional[Sequence[Task]] = None) -> "TaskSet":
+        """Build directly from the array view, skipping the per-task Python
+        loop — the fleet-scale constructor (``tasks`` objects optional; the
+        planning engines only consume the arrays)."""
+        self = cls.__new__(cls)
+        self.tasks = list(tasks) if tasks is not None else None
+        self.ids = np.asarray(ids, dtype=np.int64)
+        self.job_ids = np.asarray(job_ids, dtype=np.int64)
+        self.workloads = np.asarray(workloads, dtype=np.int64)
+        self.demand_by_family = np.asarray(demand_by_family, dtype=np.float64)
+        self._index_of = {tid: i for i, tid in enumerate(self.ids.tolist())}
+        self._job_sizes = None
+        return self
 
     def __len__(self) -> int:
-        return len(self.tasks)
+        return self.ids.shape[0]
 
     def row(self, task_id: int) -> int:
         return self._index_of[task_id]
 
+    def job_size(self, job_id: int) -> int:
+        """Number of tasks of ``job_id`` in this set (cached)."""
+        if self._job_sizes is None:
+            uniq, cnt = np.unique(self.job_ids, return_counts=True)
+            self._job_sizes = dict(zip(uniq.tolist(), cnt.tolist()))
+        return self._job_sizes.get(job_id, 0)
+
     def subset(self, task_ids: Sequence[int]) -> "TaskSet":
         rows = [self._index_of[t] for t in task_ids]
-        return TaskSet([self.tasks[r] for r in rows])
+        if self.tasks is not None:
+            return TaskSet([self.tasks[r] for r in rows])
+        rx = np.asarray(rows, dtype=np.int64)
+        return TaskSet.from_arrays(self.ids[rx], self.job_ids[rx],
+                                   self.workloads[rx],
+                                   self.demand_by_family[rx])
 
 
 _task_counter = itertools.count()

@@ -236,17 +236,13 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
     else:
         n = int(tasks.workloads.max()) + 1 if len(tasks) else 1
         pairwise = np.ones((max(n, 1), max(n, 1)))
-    packers = {"python": _pack_python, "numpy": _pack_numpy}
-    if engine == "jax" and type_mask is None and region_budget is None:
-        from . import engine_jax
-        packed = engine_jax.pack_jax(tasks.demand_by_family, tasks.workloads,
-                                     rp, job_rp, catalog, pairwise)
+    if engine == "jax":
+        from .engine_jax import pack_jax
+        packer = pack_jax
     else:
-        # the jax engine has no masking/budget support; such packs take the
-        # equivalent numpy path
-        packer = _pack_numpy if engine == "jax" else packers[engine]
-        packed = packer(tasks.demand_by_family, tasks.workloads, rp,
-                        job_rp, catalog, pairwise, type_mask, region_budget)
+        packer = {"python": _pack_python, "numpy": _pack_numpy}[engine]
+    packed = packer(tasks.demand_by_family, tasks.workloads, rp,
+                    job_rp, catalog, pairwise, type_mask, region_budget)
     assignments: List[Assignment] = [
         (k, tuple(int(tasks.ids[r]) for r in rows)) for k, rows in packed
     ]
@@ -258,7 +254,7 @@ def full_reconfiguration(tasks: TaskSet, catalog: Catalog,
         # the remainder (repeat until everyone is placed or nothing is
         # available — truly full markets leave tasks pending for the
         # simulator/next round to retry).
-        sub_packer = _pack_numpy if engine == "jax" else packers[engine]
+        sub_packer = packer
         placed = {t for _, ts in assignments for t in ts}
         left = [int(t) for t in tasks.ids.tolist() if t not in placed]
         while left:

@@ -39,13 +39,15 @@ as ``full_reconfiguration``.
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional, Sequence, Set, Tuple
+from typing import (Callable, Iterable, List, Optional, Sequence, Set,
+                    Tuple)
 
 import numpy as np
 
 from .catalog import Catalog
 from .cluster_types import Assignment, ClusterConfig, TaskSet
 from .full_reconfig import EPS, evaluate_assignments, full_reconfiguration
+from .plan import LiveInstance
 from .reservation_price import job_rp_sums, reservation_prices
 from .throughput_table import ThroughputTable
 
@@ -150,3 +152,114 @@ def partial_reconfiguration(tasks: TaskSet, live_assignments: Sequence[Assignmen
         job_rp=job_rp_all[rows] if job_rp_all is not None else None,
         type_mask=type_mask, region_caps=sub_caps)
     return ClusterConfig(keep + packed.assignments)
+
+
+def incremental_reconfiguration(tasks: TaskSet,
+                                live: Sequence[LiveInstance],
+                                dirty_ids: Iterable[int],
+                                pending_ids: Set[int], catalog: Catalog,
+                                table: Optional[ThroughputTable] = None, *,
+                                evacuate: Iterable[int] = (),
+                                interference_aware: bool = True,
+                                multi_task_aware: bool = True,
+                                engine: str = "numpy",
+                                time_s: Optional[float] = None,
+                                type_mask: Optional[np.ndarray] = None,
+                                region_caps: Optional[
+                                    Sequence[Optional[int]]] = None,
+                                keep_bonus: Optional[
+                                    Callable[[int, Tuple[int, ...]], float]
+                                ] = None,
+                                credit_horizon_s: Optional[float] = None,
+                                max_dirty_fraction: float = 0.5
+                                ) -> Tuple[ClusterConfig, Optional[str]]:
+    """Incremental partial reconfiguration: re-plan only the disturbance.
+
+    ``dirty_ids`` are the live instance ids a pressure signal touched (see
+    ``repro.policies.pressure.dirty_instance_ids``); ``evacuate`` is the
+    subset that must additionally be vacated (spot revocations, credit
+    drains).  Every *clean* live instance passes through verbatim, and one
+    ordinary ``partial_reconfiguration`` runs over just the affected
+    sub-problem — dirty instances keep/evict-tested as usual, evacuated
+    instances' tasks plus ``pending_ids`` as the repack set, region budgets
+    reduced by the clean fleet's footprint.  Per-round planning latency
+    therefore scales with the size of the disturbance, not the cluster.
+
+    Returns ``(config, fallback_reason)``.  ``fallback_reason`` is None when
+    the incremental path ran; otherwise the call transparently degraded to a
+    full ``partial_reconfiguration`` because locality would change the
+    answer:
+
+    * ``"dirty-fraction"`` — the disturbance touches more than
+      ``max_dirty_fraction`` of the live fleet (or there is no live fleet),
+      so a cluster-wide re-plan is at least as cheap as stitching;
+    * ``"job-straddle"`` — ``multi_task_aware`` and some affected task's job
+      also has tasks on clean instances: the §4.4 job-RP penalty must see
+      the whole job, so the sub-problem cannot be priced locally.
+
+    When no job straddles the cut, the affected sub-problem's reservation
+    prices and job-RP sums equal the system-wide ones (RP is per-task,
+    catalog-only), so the incremental plan is bit-identical to the clean
+    pass-through plus ``partial_reconfiguration`` on the affected subset —
+    pinned by ``tests/test_incremental.py``.
+
+    Caller contract (scheduler views satisfy it): ``live`` placements
+    reference only tasks present in ``tasks``.  Clean instances are NOT
+    trimmed of completed tasks here — that O(cluster) sweep is exactly what
+    this path avoids.
+    """
+    evac = set(evacuate)
+    dirty = set(dirty_ids) | evac
+    affected = [i for i in live if i.instance_id in dirty]
+    clean = [i for i in live if i.instance_id not in dirty]
+    kw = dict(interference_aware=interference_aware,
+              multi_task_aware=multi_task_aware, engine=engine,
+              time_s=time_s, type_mask=type_mask, keep_bonus=keep_bonus,
+              credit_horizon_s=credit_horizon_s)
+
+    def _fallback(reason: str) -> Tuple[ClusterConfig, str]:
+        kept_live = [(i.type_index, i.task_ids) for i in live
+                     if i.instance_id not in evac]
+        pend = set(pending_ids)
+        for i in live:
+            if i.instance_id in evac:
+                pend |= set(i.task_ids)
+        cfg = partial_reconfiguration(tasks, kept_live, pend, catalog,
+                                      table, region_caps=region_caps, **kw)
+        return cfg, reason
+
+    if not live or len(affected) > max_dirty_fraction * len(live):
+        return _fallback("dirty-fraction")
+
+    pending = set(pending_ids) & set(tasks.ids.tolist()) \
+        if pending_ids else set()
+    evac_tasks: Set[int] = set()
+    for i in affected:
+        if i.instance_id in evac:
+            evac_tasks |= set(i.task_ids)
+    sub_ids = sorted({t for i in affected for t in i.task_ids} | pending)
+    if not sub_ids:
+        return (ClusterConfig([(i.type_index, i.task_ids) for i in clean]),
+                None)
+    if multi_task_aware:
+        jobs, counts = np.unique(
+            tasks.job_ids[[tasks.row(t) for t in sub_ids]],
+            return_counts=True)
+        for j, n in zip(jobs.tolist(), counts.tolist()):
+            if tasks.job_size(j) != n:
+                return _fallback("job-straddle")
+    sub_caps = region_caps
+    if region_caps is not None and catalog.region_ids is not None:
+        clean_per_region = [0] * len(region_caps)
+        for i in clean:
+            clean_per_region[catalog.region_of(i.type_index)] += 1
+        sub_caps = [None if c is None
+                    else max(int(c) - clean_per_region[r], 0)
+                    for r, c in enumerate(region_caps)]
+    sub = tasks.subset(sub_ids)
+    sub_live = [(i.type_index, i.task_ids) for i in affected
+                if i.instance_id not in evac]
+    cfg = partial_reconfiguration(sub, sub_live, pending | evac_tasks,
+                                  catalog, table, region_caps=sub_caps, **kw)
+    out = [(i.type_index, i.task_ids) for i in clean] + cfg.assignments
+    return ClusterConfig(out), None

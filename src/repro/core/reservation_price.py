@@ -43,10 +43,16 @@ from .cluster_types import TaskSet
 
 def feasibility_matrix(tasks: TaskSet, catalog: Catalog) -> np.ndarray:
     """(T, K) bool: does task t fit alone on an empty instance of type k?"""
-    # demand of task t as seen by type k's family: (T, K, R)
+    # Grouped by family instead of gathering a (T, K, R) float tensor: at
+    # fleet scale (10⁵–10⁶ tasks × hundreds of region-qualified types) the
+    # gather dominated RP computation; the per-family slices are (T, R).
     fam = catalog.family_ids  # (K,)
-    d = tasks.demand_by_family[:, fam, :]  # (T, K, R)
-    return np.all(d <= catalog.capacities[None, :, :], axis=-1)
+    out = np.empty((len(tasks), fam.shape[0]), dtype=bool)
+    for fi in np.unique(fam):
+        ks = np.nonzero(fam == fi)[0]
+        d = tasks.demand_by_family[:, fi, None, :]  # (T, 1, R)
+        out[:, ks] = np.all(d <= catalog.capacities[None, ks, :], axis=-1)
+    return out
 
 
 def _masked_costs(tasks: TaskSet, catalog: Catalog,
@@ -109,13 +115,11 @@ def regional_reservation_prices(tasks: TaskSet, catalog: Catalog,
 
 def job_rp_sums(tasks: TaskSet, rp: np.ndarray) -> np.ndarray:
     """(T,) Σ_{τ'∈job(τ)} RP(τ') — the multi-task penalty base for each task."""
-    out = np.zeros_like(rp)
-    sums: dict = {}
-    for i, j in enumerate(tasks.job_ids.tolist()):
-        sums[j] = sums.get(j, 0.0) + rp[i]
-    for i, j in enumerate(tasks.job_ids.tolist()):
-        out[i] = sums[j]
-    return out
+    # bincount accumulates in input order, so this matches the former
+    # per-task dict loop bit for bit while staying O(T) vectorized.
+    _, inv = np.unique(tasks.job_ids, return_inverse=True)
+    sums = np.bincount(inv, weights=rp)
+    return sums[inv]
 
 
 def tnrp(rp: np.ndarray, tput: np.ndarray,

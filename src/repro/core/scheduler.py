@@ -43,7 +43,8 @@ from .catalog import Catalog
 from .cluster_types import ClusterConfig, TaskSet
 from .ensemble import EnsembleDecision, EventRateEstimator, choose, instantaneous_saving
 from .full_reconfig import evaluate_assignments, full_reconfiguration
-from .partial_reconfig import partial_reconfiguration
+from .partial_reconfig import (incremental_reconfiguration,
+                               partial_reconfiguration)
 from .plan import LiveInstance, diff_configs, migration_cost
 from .reservation_price import cheapest_type
 from .throughput_table import ThroughputTable
@@ -169,6 +170,7 @@ class EvaScheduler(SchedulerBase):
                  multi_task_aware: bool = True, mode: str = "ensemble",
                  default_t: float = 0.95, engine: str = "numpy",
                  migration_delay_scale: float = 1.0,
+                 incremental: bool = False,
                  policies: Optional[object] = None,
                  spot_aware: bool = False, multi_region: bool = False,
                  credit_aware: bool = False, autoscale: bool = False,
@@ -211,6 +213,12 @@ class EvaScheduler(SchedulerBase):
         self.stack.bind(self)
         self.needs_runtime_estimates = self.stack.needs_runtime_estimates
         self.forced_partials = 0
+        # incremental repack: buffer the round's pressure signals so the
+        # forced partial can re-plan only the instances they touched
+        self.incremental = incremental
+        self._pressure_buffer: List[object] = []
+        self.incremental_rounds = 0
+        self.incremental_fallbacks = 0
         self.table = ThroughputTable(NUM_WORKLOADS, default=default_t)
         self.estimator = EventRateEstimator()
         self.decisions: List[EnsembleDecision] = []
@@ -266,6 +274,8 @@ class EvaScheduler(SchedulerBase):
     def on_pressure(self, signal) -> None:
         super().on_pressure(signal)  # legacy per-kind hooks (subclasses)
         self.stack.on_pressure(signal)
+        if self.incremental:
+            self._pressure_buffer.append(signal)
 
     def observe_single(self, workload, colocated, value) -> None:
         if self.interference_aware:
@@ -297,6 +307,7 @@ class EvaScheduler(SchedulerBase):
         if evac or resumed:
             return self._forced_partial(view, raw, cat, table, kw,
                                         keep_bonus, evac)
+        self._pressure_buffer.clear()  # nothing forced a reaction round
 
         live_assignments = [(i.type_index, i.task_ids) for i in view.live]
         if self.mode == "full-only":
@@ -352,13 +363,25 @@ class EvaScheduler(SchedulerBase):
         resumed jobs' tasks are already in ``pending_ids``.  The type mask
         is the stack's drain mask (standing mask AND any drain
         restrictions, e.g. steady-types-only for credit drains)."""
+        mask = self.stack.drain_mask(raw, view)
+        self.forced_partials += 1
+        if self.incremental:
+            from ..policies.pressure import dirty_instance_ids
+            dirty = dirty_instance_ids(self._pressure_buffer) | evac
+            self._pressure_buffer.clear()
+            self.incremental_rounds += 1
+            cfg, fallback = incremental_reconfiguration(
+                view.tasks, view.live, dirty, view.pending_ids, cat, table,
+                evacuate=evac, type_mask=mask, region_caps=self.stack.caps,
+                keep_bonus=keep_bonus, **kw)
+            if fallback is not None:
+                self.incremental_fallbacks += 1
+            return self._finish(cfg, view, cat)
         live = [i for i in view.live if i.instance_id not in evac]
         pending = set(view.pending_ids)
         for inst in view.live:
             if inst.instance_id in evac:
                 pending |= set(inst.task_ids)
-        mask = self.stack.drain_mask(raw, view)
-        self.forced_partials += 1
         cfg = partial_reconfiguration(
             view.tasks, [(i.type_index, i.task_ids) for i in live],
             pending, cat, table, type_mask=mask,

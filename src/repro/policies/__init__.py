@@ -6,7 +6,7 @@ from .layers import (AdmissionLayerBase, AutoscaleLayer, CreditLayer,
                      MultiRegionLayer, RegionPinLayer, SpotLayer,
                      stack_from_flags)
 from .pressure import (CREDIT, DEADLINE, KINDS, SPOT, PressureBus,
-                       PressureSignal)
+                       PressureSignal, dirty_instance_ids)
 from .stability import StabilityController, StabilityLayer
 
 __all__ = [
@@ -14,5 +14,6 @@ __all__ = [
     "AdmissionLayerBase", "AutoscaleLayer", "CreditLayer",
     "MultiRegionLayer", "RegionPinLayer", "SpotLayer", "stack_from_flags",
     "CREDIT", "DEADLINE", "KINDS", "SPOT", "PressureBus", "PressureSignal",
+    "dirty_instance_ids",
     "StabilityController", "StabilityLayer",
 ]

@@ -17,7 +17,7 @@ round de-duplication, and is pinned by ``tests/test_policies.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Tuple
+from typing import Callable, Iterable, List, Set, Tuple
 
 # signal kinds (the former three parallel wirings)
 SPOT = "spot"          # revocation notice: instance ids about to be reclaimed
@@ -38,6 +38,20 @@ class PressureSignal:
     kind: str
     ids: Tuple[int, ...]
     time: float
+
+
+def dirty_instance_ids(signals: Iterable[PressureSignal]) -> Set[int]:
+    """Union of the *instance* ids the given signals touched — the dirty
+    set for incremental partial reconfiguration.  ``spot`` and ``credit``
+    signals carry instance ids; ``deadline`` signals carry job ids (their
+    tasks enter the re-plan through the pending set, not through a dirty
+    instance), so they contribute nothing here.
+    """
+    dirty: Set[int] = set()
+    for s in signals:
+        if s.kind in (SPOT, CREDIT):
+            dirty.update(s.ids)
+    return dirty
 
 
 class PressureBus:

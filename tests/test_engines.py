@@ -3,10 +3,19 @@ vectorized numpy, jitted JAX incremental formulation)."""
 import numpy as np
 import pytest
 
-from repro.core import (TaskSet, ThroughputTable, aws_catalog,
-                        full_reconfiguration, make_task, table3_catalog)
+from repro.core import (Catalog, InstanceType, TaskSet, ThroughputTable,
+                        aws_catalog, dispersed_demo_regions,
+                        full_reconfiguration, make_task,
+                        multi_region_catalog, table3_catalog)
+from repro.core.catalog import AWS_CATALOG, FAMILIES
 from repro.core.cluster_types import Task
 from repro.core.workloads import NUM_WORKLOADS
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
 
 
 def _random_tasks(n, seed):
@@ -70,6 +79,123 @@ def test_jax_matches_numpy(seed, interference):
     for c in (c_np, c_jx):
         tids = sorted(t for _, ts_ in c.assignments for t in ts_)
         assert tids == sorted(tasks.ids.tolist())
+
+
+def _canon(cfg):
+    """Partition-canonical view: the jax engine emits each instance's tasks
+    grouped by collapsed class, numpy in pick order."""
+    return sorted((k, tuple(sorted(t))) for k, t in cfg.assignments)
+
+
+def _random_catalog(seed):
+    """Random market: continuous costs (no reservation-price ties), random
+    sizes, anchored by the three largest AWS types so every workload stays
+    feasible on each family."""
+    rng = np.random.default_rng(seed)
+    types = [t for t in AWS_CATALOG
+             if t.name in ("p3.16xlarge", "c7i.24xlarge", "r7i.24xlarge")]
+    assert len(types) == 3
+    for i in range(int(rng.integers(6, 12))):
+        fam = FAMILIES[int(rng.integers(len(FAMILIES)))]
+        if fam == "p3":
+            gpu = float(rng.integers(1, 9))
+            cap = (gpu, 8.0 * gpu, 61.0 * gpu)
+        else:
+            cpu = float(2 ** rng.integers(1, 7))
+            cap = (0.0, cpu, cpu * (2.0 if fam == "c7i" else 8.0))
+        types.append(InstanceType(f"rnd-{seed}-{i}", fam, cap,
+                                  float(rng.uniform(0.05, 30.0))))
+    return Catalog.from_types(types)
+
+
+def _check_random_catalog(seed):
+    cat = _random_catalog(seed)
+    tasks = _random_tasks(45, seed)
+    kw = dict(interference_aware=False, multi_task_aware=True)
+    c_np = full_reconfiguration(tasks, cat, None, engine="numpy", **kw)
+    c_jx = full_reconfiguration(tasks, cat, None, engine="jax", **kw)
+    assert c_jx.total_hourly_cost(cat) == pytest.approx(
+        c_np.total_hourly_cost(cat), rel=1e-6)
+    for c in (c_np, c_jx):
+        tids = sorted(t for _, ts_ in c.assignments for t in ts_)
+        assert tids == sorted(tasks.ids.tolist())
+
+
+@pytest.mark.parametrize("seed", [10, 11, 12, 13, 14, 15])
+def test_jax_matches_numpy_random_catalog(seed):
+    _check_random_catalog(seed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=20)
+    @given(seed=st.integers(0, 100_000))
+    def test_jax_matches_numpy_random_catalog_property(seed):
+        _check_random_catalog(seed)
+
+
+def test_jax_x64_exact_partition_match():
+    """Under x64 the engine's accept/score tolerances collapse below EPS,
+    so the jitted plan is partition-identical to numpy, not just cost-equal."""
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    try:
+        kw = dict(interference_aware=False, multi_task_aware=True)
+        for seed, cat in ((0, aws_catalog()), (20, _random_catalog(20))):
+            tasks = _random_tasks(60, seed)
+            c_np = full_reconfiguration(tasks, cat, None, engine="numpy", **kw)
+            c_jx = full_reconfiguration(tasks, cat, None, engine="jax", **kw)
+            assert _canon(c_np) == _canon(c_jx)
+    finally:
+        jax.config.update("jax_enable_x64", False)
+
+
+def test_jax_type_mask_matches_numpy():
+    cat = aws_catalog()
+    # forbid the GPU family: CPU-feasible packing must agree across engines
+    mask = np.array([t.family != "p3" for t in cat.types])
+    rng = np.random.default_rng(5)
+    cpu_ok = [w for w in range(NUM_WORKLOADS) if _cpu_feasible(cat, mask, w)]
+    tasks = TaskSet([make_task(job_id=7000 + i,
+                               workload=int(rng.choice(cpu_ok)))
+                     for i in range(30)])
+    kw = dict(interference_aware=False, multi_task_aware=True,
+              type_mask=mask)
+    c_np = full_reconfiguration(tasks, cat, None, engine="numpy", **kw)
+    c_jx = full_reconfiguration(tasks, cat, None, engine="jax", **kw)
+    assert c_jx.total_hourly_cost(cat) == pytest.approx(
+        c_np.total_hourly_cost(cat), rel=1e-6)
+    for k, _ in c_jx.assignments:
+        assert mask[k]
+
+
+def _cpu_feasible(cat, mask, workload):
+    from repro.core import reservation_prices
+    ts = TaskSet([make_task(job_id=0, workload=workload, task_id=0)])
+    try:
+        return bool(np.isfinite(reservation_prices(ts, cat,
+                                                   type_mask=mask)[0]))
+    except ValueError:  # fits no unmasked type
+        return False
+
+
+def test_jax_region_caps_match_numpy():
+    cat = multi_region_catalog(dispersed_demo_regions(3)).at(3600.0)
+    rng = np.random.default_rng(9)
+    tasks = TaskSet([make_task(job_id=8000 + i,
+                               workload=int(rng.integers(NUM_WORKLOADS)))
+                     for i in range(35)])
+    kw = dict(interference_aware=False, multi_task_aware=True)
+    plans = {}
+    for eng in ("numpy", "jax"):
+        caps = [3, None, 4]
+        plans[eng] = full_reconfiguration(tasks, cat, None, engine=eng,
+                                          region_caps=caps, **kw)
+        per_region = np.bincount(
+            [cat.region_of(k) for k, _ in plans[eng].assignments],
+            minlength=3)
+        assert per_region[0] <= 3 and per_region[2] <= 4
+    assert plans["jax"].total_hourly_cost(cat) == pytest.approx(
+        plans["numpy"].total_hourly_cost(cat), rel=1e-6)
 
 
 def test_table3_walkthrough_jax_engine():

@@ -1,0 +1,190 @@
+"""Incremental partial reconfiguration: dirty-set locality.
+
+Pins the contract documented on ``incremental_reconfiguration``: for any
+random dirty/evacuate set that does not trip a fallback, the plan is
+bit-identical to clean-instance pass-through plus an ordinary
+``partial_reconfiguration`` over just the affected sub-problem, and the
+untouched assignments survive verbatim.  Skips cleanly when hypothesis is
+not installed (it is a ``test`` extra, not a runtime dep).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+from repro.core import (ClusterConfig, LiveInstance, TaskSet, aws_catalog,
+                        full_reconfiguration, incremental_reconfiguration,
+                        make_task, partial_reconfiguration)
+from repro.core.workloads import NUM_WORKLOADS
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+CAT = aws_catalog()
+KW = dict(interference_aware=False, multi_task_aware=True, engine="numpy")
+
+
+@functools.lru_cache(maxsize=None)
+def _fleet(n_tasks, seed, n_pending=0):
+    """Planned fleet of single-task jobs (+ optional unplaced pending tasks)."""
+    rng = np.random.default_rng(seed)
+    placed = [make_task(job_id=10_000 * seed + i,
+                        workload=int(rng.integers(NUM_WORKLOADS)),
+                        task_id=10_000 * seed + i)
+              for i in range(n_tasks)]
+    cfg = full_reconfiguration(TaskSet(placed), CAT, None,
+                               interference_aware=False,
+                               multi_task_aware=True)
+    live = tuple(LiveInstance(iid, k, tuple(tids))
+                 for iid, (k, tids) in enumerate(cfg.assignments))
+    pending = [make_task(job_id=10_000 * seed + n_tasks + i,
+                         workload=int(rng.integers(NUM_WORKLOADS)),
+                         task_id=10_000 * seed + n_tasks + i)
+               for i in range(n_pending)]
+    return TaskSet(placed + pending), live, frozenset(t.task_id for t in pending)
+
+
+def _reference(tasks, live, dirty, evac, pending):
+    """The documented decomposition, built from the public API."""
+    dirty = set(dirty) | set(evac)
+    affected = [i for i in live if i.instance_id in dirty]
+    clean = [(i.type_index, i.task_ids) for i in live
+             if i.instance_id not in dirty]
+    evac_tasks = {t for i in affected if i.instance_id in evac
+                  for t in i.task_ids}
+    sub_ids = sorted({t for i in affected for t in i.task_ids} | set(pending))
+    if not sub_ids:
+        return ClusterConfig(clean)
+    sub_live = [(i.type_index, i.task_ids) for i in affected
+                if i.instance_id not in evac]
+    cfg = partial_reconfiguration(tasks.subset(sub_ids), sub_live,
+                                  set(pending) | evac_tasks, CAT, None, **KW)
+    return ClusterConfig(clean + cfg.assignments)
+
+
+def _check_matches_subset_replan(tasks, live, pending, dirty, evac):
+    cfg, fb = incremental_reconfiguration(tasks, live, dirty, set(pending),
+                                          CAT, None, evacuate=evac, **KW)
+    assert fb is None
+    ref = _reference(tasks, live, dirty, evac, pending)
+    assert sorted(cfg.assignments) == sorted(ref.assignments)
+    # untouched instances survive verbatim
+    out = list(cfg.assignments)
+    for inst in live:
+        if inst.instance_id not in dirty | evac:
+            assert (inst.type_index, inst.task_ids) in out
+            out.remove((inst.type_index, inst.task_ids))
+    # every task placed exactly once
+    placed = sorted(t for _, tids in cfg.assignments for t in tids)
+    assert placed == sorted(tasks.ids.tolist())
+
+
+def test_incremental_matches_subset_replan_seeded():
+    """Always-on version of the property: random dirty/evac sets per seed."""
+    for seed in range(4):
+        tasks, live, pending = _fleet(40, seed, n_pending=3)
+        ids = sorted(i.instance_id for i in live)
+        rng = np.random.default_rng(100 + seed)
+        for _ in range(6):
+            k = int(rng.integers(0, max(len(ids) // 2, 1) + 1))
+            dirty = set(rng.choice(ids, size=k, replace=False).tolist())
+            evac = {i for i in dirty if rng.random() < 0.4}
+            _check_matches_subset_replan(tasks, live, pending, dirty, evac)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=30)
+    @given(seed=st.integers(0, 3), data=st.data())
+    def test_incremental_matches_subset_replan(seed, data):
+        tasks, live, pending = _fleet(40, seed, n_pending=3)
+        ids = sorted(i.instance_id for i in live)
+        # stay under max_dirty_fraction so the incremental path actually runs
+        dirty = data.draw(st.sets(st.sampled_from(ids),
+                                  max_size=len(ids) // 2))
+        evac = (data.draw(st.sets(st.sampled_from(sorted(dirty))))
+                if dirty else set())
+        _check_matches_subset_replan(tasks, live, pending, dirty, evac)
+
+
+def test_empty_dirty_set_is_pure_passthrough():
+    tasks, live, _ = _fleet(30, 7)
+    cfg, fb = incremental_reconfiguration(tasks, live, set(), set(), CAT,
+                                          None, **KW)
+    assert fb is None
+    assert cfg.assignments == [(i.type_index, i.task_ids) for i in live]
+
+
+def test_dirty_fraction_fallback_matches_full_partial():
+    tasks, live, _ = _fleet(30, 2)
+    dirty = {i.instance_id for i in live}  # whole fleet disturbed
+    evac = {live[0].instance_id}
+    cfg, fb = incremental_reconfiguration(tasks, live, dirty, set(), CAT,
+                                          None, evacuate=evac, **KW)
+    assert fb == "dirty-fraction"
+    ref = partial_reconfiguration(
+        tasks, [(i.type_index, i.task_ids) for i in live[1:]],
+        set(live[0].task_ids), CAT, None, **KW)
+    assert sorted(cfg.assignments) == sorted(ref.assignments)
+
+
+def test_job_straddle_falls_back():
+    # job 0 = {t0, t1} split across two instances: dirtying only one of them
+    # cannot be priced locally under the job-RP penalty (§4.4).
+    t = [make_task(job_id=50_000 + i // 2, workload=0, task_id=50_000 + i)
+         for i in range(4)]
+    tasks = TaskSet(t)
+    live = (LiveInstance(0, 0, (t[0].task_id, t[2].task_id)),
+            LiveInstance(1, 0, (t[1].task_id, t[3].task_id)))
+    cfg, fb = incremental_reconfiguration(tasks, live, {0}, set(), CAT,
+                                          None, **KW)
+    assert fb == "job-straddle"
+    placed = sorted(tid for _, tids in cfg.assignments for tid in tids)
+    assert placed == sorted(tasks.ids.tolist())
+    # with multi-task awareness off there is no job penalty, so the same
+    # disturbance stays local
+    kw1 = dict(KW, multi_task_aware=False)
+    cfg1, fb1 = incremental_reconfiguration(tasks, live, {0}, set(), CAT,
+                                            None, **kw1)
+    assert fb1 is None
+    assert (live[1].type_index, live[1].task_ids) in cfg1.assignments
+
+
+def test_scheduler_incremental_rounds_end_to_end():
+    """Spot notices drive incremental reaction rounds through the scheduler;
+    every job still completes and fallbacks are counted, not raised."""
+    from repro.cluster import SimConfig, Simulator, physical_trace
+    from repro.core import EvaScheduler, PriceModel, aws_catalog
+    from repro.policies import SpotLayer
+
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    cat = aws_catalog(price_model=pm)
+    jobs = physical_trace(n_jobs=10, seed=11, duration_range_h=(0.3, 0.6))
+    sched = EvaScheduler(cat, policies=[SpotLayer()], incremental=True)
+    m = Simulator(cat, jobs, sched,
+                  SimConfig(seed=3, preemption_hazard_per_hour=4.0)).run()
+    assert m.preemption_notices > 0
+    assert sched.incremental_rounds > 0
+    assert sched.incremental_fallbacks <= sched.incremental_rounds
+    assert all(j.completion_time is not None for j in jobs)
+
+
+def test_incremental_jax_engine_matches_numpy():
+    tasks, live, _ = _fleet(40, 3)
+    dirty = {live[0].instance_id, live[1].instance_id}
+    evac = {live[0].instance_id}
+    kw_jx = dict(KW, engine="jax")
+    cfg_np, fb_np = incremental_reconfiguration(tasks, live, dirty, set(),
+                                                CAT, None, evacuate=evac,
+                                                **KW)
+    cfg_jx, fb_jx = incremental_reconfiguration(tasks, live, dirty, set(),
+                                                CAT, None, evacuate=evac,
+                                                **kw_jx)
+    assert fb_np is None and fb_jx is None
+    # same partition; the jax engine emits each instance's tasks grouped by
+    # collapsed class, so canonicalize intra-instance order before comparing
+    def canon(cfg):
+        return sorted((k, tuple(sorted(t))) for k, t in cfg.assignments)
+    assert canon(cfg_np) == canon(cfg_jx)

@@ -1,0 +1,160 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate: compare a fresh ``results/bench_micro.json``
+against the committed baseline in ``benchmarks/baselines/``.
+
+    python tools/bench_compare.py [--results PATH] [--baseline PATH]
+    python tools/bench_compare.py --update-baseline
+
+Timing cells are matched row-by-row on ``n_tasks`` (table5 and the scaling
+curve).  A cell passes when
+
+    fresh <= max(RATIO * base, base + FLOOR_S)
+
+RATIO defaults to 1.5: CI runners are shared and noisy, so anything under
+1.5x is indistinguishable from scheduling jitter, while a real regression
+(losing the jit path, reintroducing a Python loop) costs 10-100x and trips
+the gate immediately.  FLOOR_S (0.2 s) keeps millisecond-scale cells — the
+incremental-repack column in particular — from failing on absolute noise
+that is irrelevant at that magnitude.
+
+Speedup ratios (jit_speedup / incr_speedup) are gated against *absolute*
+floors, not the baseline: a ratio divides two noisy timings, so a
+baseline-relative bound would trip on jitter the per-cell floors forgive.
+The floors are the repo's acceptance criteria — jit >= 5x numpy at 10^4
+tasks, incremental >= 10x a full re-plan at 10^5 — so the curve's shape
+stays pinned even if a baseline update shifts the absolute numbers.
+
+A row or timing cell present in the baseline but missing from the fresh
+results fails the gate (a silently dropped benchmark is a regression).
+Extra fresh rows (e.g. a locally run --full curve) are ignored.
+
+``--update-baseline`` copies the fresh results over the baseline; commit
+the result when a deliberate perf change shifts the curve.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+RESULTS = ROOT / "results" / "bench_micro.json"
+BASELINE = ROOT / "benchmarks" / "baselines" / "bench_micro.json"
+
+#: sections gated, and which of their columns are timings (lower is better)
+#: vs speedups (higher is better).  table4 is cost-accuracy, not perf: its
+#: assertions live in the test suite, so it is not gated here.
+TIMING_COLS = {
+    "table5": ["numpy_s", "jax_jit_s"],
+    "scaling": ["numpy_s", "jax_s", "incremental_s"],
+}
+#: absolute floors for speedup ratios (section -> n_tasks -> col -> min).
+#: These restate the repo's acceptance criteria for the jitted engine and
+#: the incremental repack path; see module docstring for why they are not
+#: baseline-relative.
+SPEEDUP_FLOORS = {
+    "scaling": {
+        10_000: {"jit_speedup": 5.0},
+        100_000: {"incr_speedup": 10.0},
+    },
+}
+
+
+def _rows_by_n(section):
+    return {r["n_tasks"]: r for r in section}
+
+
+def _num(cell):
+    """Benchmark cells use '' for 'not measured at this size'."""
+    if cell in ("", None):
+        return None
+    return float(cell)
+
+
+def compare(base: dict, fresh: dict, ratio: float, floor_s: float):
+    failures, checked = [], 0
+    for sec, cols in TIMING_COLS.items():
+        base_rows = _rows_by_n(base.get(sec, []))
+        fresh_rows = _rows_by_n(fresh.get(sec, []))
+        for n, brow in sorted(base_rows.items()):
+            frow = fresh_rows.get(n)
+            if frow is None:
+                failures.append(f"{sec}[n_tasks={n}]: row missing from fresh results")
+                continue
+            for col in cols:
+                b = _num(brow.get(col))
+                if b is None:
+                    continue  # baseline didn't measure this cell (e.g. numpy cap)
+                f = _num(frow.get(col))
+                if f is None:
+                    failures.append(f"{sec}[{n}].{col}: cell missing from fresh results")
+                    continue
+                checked += 1
+                limit = max(ratio * b, b + floor_s)
+                status = "ok" if f <= limit else "FAIL"
+                print(f"  {sec}[{n}].{col}: base={b:.4f}s fresh={f:.4f}s "
+                      f"limit={limit:.4f}s {status}")
+                if f > limit:
+                    failures.append(f"{sec}[{n}].{col}: {f:.4f}s > limit {limit:.4f}s "
+                                    f"(base {b:.4f}s)")
+            for col, limit in SPEEDUP_FLOORS.get(sec, {}).get(n, {}).items():
+                f = _num(frow.get(col))
+                if f is None:
+                    failures.append(f"{sec}[{n}].{col}: cell missing from fresh results")
+                    continue
+                checked += 1
+                status = "ok" if f >= limit else "FAIL"
+                print(f"  {sec}[{n}].{col}: fresh={f:.1f}x floor={limit:.1f}x {status}")
+                if f < limit:
+                    failures.append(f"{sec}[{n}].{col}: speedup {f:.1f}x < floor "
+                                    f"{limit:.1f}x")
+    return failures, checked
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--results", type=Path, default=RESULTS,
+                    help="fresh results JSON (default: results/bench_micro.json)")
+    ap.add_argument("--baseline", type=Path, default=BASELINE,
+                    help="committed baseline JSON")
+    ap.add_argument("--ratio", type=float, default=1.5,
+                    help="relative tolerance per cell (default 1.5x)")
+    ap.add_argument("--floor", type=float, default=0.2,
+                    help="absolute slack in seconds for sub-second cells")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="overwrite the baseline with the fresh results")
+    args = ap.parse_args(argv)
+
+    if not args.results.exists():
+        print(f"bench_compare: no fresh results at {args.results} "
+              f"(run: python -m benchmarks.run --quick --only micro)")
+        return 1
+    if args.update_baseline:
+        args.baseline.parent.mkdir(parents=True, exist_ok=True)
+        shutil.copyfile(args.results, args.baseline)
+        print(f"bench_compare: baseline updated from {args.results}")
+        return 0
+    if not args.baseline.exists():
+        print(f"bench_compare: no baseline at {args.baseline} "
+              f"(seed one with --update-baseline)")
+        return 1
+
+    base = json.loads(args.baseline.read_text())
+    fresh = json.loads(args.results.read_text())
+    print(f"bench_compare: {args.results} vs {args.baseline} "
+          f"(ratio {args.ratio}x, floor {args.floor}s)")
+    failures, checked = compare(base, fresh, args.ratio, args.floor)
+    if failures:
+        print(f"\nbench_compare: {len(failures)}/{checked} cells FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"bench_compare: all {checked} cells within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
