@@ -19,7 +19,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 # axes by these names; the factory translates them into an explicit policy
 # stack so no deprecated boolean-flag path is exercised)
 _AXIS_KW = ("spot_aware", "multi_region", "credit_aware", "autoscale",
-            "stability", "region", "admission", "strike", "v")
+            "stability", "slo", "region", "admission", "strike", "v")
 
 
 def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
@@ -58,6 +58,9 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
         if name == "eva-stability":
             axes.setdefault("spot_aware", True)
             axes["stability"] = True
+        if name == "eva-slo":
+            axes.setdefault("spot_aware", True)
+            axes["slo"] = True
         opts.update(kw)
         if axes and "policies" not in opts:
             opts["policies"] = stack_from_flags(**axes)

@@ -1,0 +1,83 @@
+"""Online-serving walkthrough: latency-utility curves, SLO risk, and the
+headroom-holding policy layer next to batch work (arXiv 2201.09050).
+
+    PYTHONPATH=src python examples/serving_cluster.py [--batch 8] [--headroom 1.3]
+
+1. The serving model on one fleet: M/M/1-coarse p99 vs utilization, the
+   closed-form SLO-feasible ceiling, and where the utility-risk edge sits.
+2. Compose a scheduler with `SLOLayer` (the same policy-stack API every
+   axis uses) and show the stack.
+3. Run the diurnal serving trace (two inference fleets + batch filler)
+   on the OU spot market under eva-slo vs the headroom-blind stack vs a
+   batch-only anchor, and compare attainment / cost / replica churn.
+"""
+import argparse
+
+from repro.cluster import SimConfig, Simulator, serving_trace
+from repro.core import (EvaScheduler, PriceModel, aws_catalog,
+                        p99_latency_ms)
+from repro.policies import SLOLayer, SpotLayer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--batch", type=int, default=8,
+                help="batch filler jobs next to the two serving fleets")
+ap.add_argument("--headroom", type=float, default=1.3,
+                help="planning-demand inflation for replicas (1.0 = off)")
+args = ap.parse_args()
+
+pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+jobs = serving_trace(n_batch=args.batch, horizon_h=6.0, seed=17)
+fleets = [j for j in jobs if j.is_service]
+
+# -- 1. the serving model: latency is a closed-form map of headroom ----------
+print("serving fleets (utility = 1.0 at/below target p99, decay beyond):")
+for j in fleets:
+    s = j.service
+    ceiling = s.max_utilization()
+    print(f"  job {j.job_id}: {j.n_tasks} replicas x "
+          f"{s.per_replica_rps:g} rps, base p99 {s.base_latency_ms:g} ms, "
+          f"target {s.utility.target_p99_ms:g} ms")
+    print(f"    p99 = base/(1-rho): rho<= {ceiling:.2f} meets target; "
+          f"risk edge at rho = {s.risk_fraction * ceiling:.2f}; "
+          f"p99({ceiling:.2f}) = "
+          f"{p99_latency_ms(s.base_latency_ms, ceiling):.0f} ms")
+
+# -- 2. a scheduler is Algorithm 1 + a stack of policy layers ----------------
+cat = aws_catalog(price_model=pm)
+layer = SLOLayer(headroom=args.headroom)
+sched = EvaScheduler(cat, policies=[SpotLayer(), layer])
+print(f"\npolicy stack: {sched.stack.describe()}")
+print(f"SLOLayer: headroom={layer.headroom:g} (planning-view CPU/RAM "
+      "inflation), warm-keep exemption while at risk, risk-damped "
+      "repacking, capacity-aware move veto")
+
+# -- 3. schedulers head to head ----------------------------------------------
+print(f"\ntwo fleets + {args.batch} batch jobs, 6h diurnal window with "
+      "surges, OU spot market")
+runs = (
+    ("eva-slo", [SpotLayer(), SLOLayer(headroom=args.headroom)]),
+    ("eva-blind", [SpotLayer()]),
+    ("batch-only", [SpotLayer()]),
+)
+results = {}
+for name, layers in runs:
+    c = aws_catalog(price_model=pm)
+    s = EvaScheduler(c, policies=layers)
+    fresh = serving_trace(n_batch=args.batch, horizon_h=6.0, seed=17)
+    if name == "batch-only":
+        fresh = [j for j in fresh if not j.is_service]
+    m = Simulator(c, fresh, s,
+                  SimConfig(seed=5, preemption_hazard_per_hour=0.25)).run()
+    results[name] = m
+    serving = (f"  attainment={m.slo_attainment:.4f} "
+               f"utility={m.service_utility:.4f} "
+               f"signals={m.slo_pressure_signals}" if m.has_service else "")
+    print(f"  {name:10s} ${m.total_cost:7.2f}{serving}")
+
+slo, blind = results["eva-slo"], results["eva-blind"]
+anchor = results["batch-only"]
+print(f"\neva-slo holds p99-SLO attainment at {slo.slo_attainment:.1%} vs "
+      f"the blind stack's {blind.slo_attainment:.1%}, at "
+      f"{slo.total_cost / blind.total_cost - 1.0:+.1%} cost "
+      f"({slo.total_cost / anchor.total_cost - 1.0:+.1%} over the "
+      "batch-only anchor) - headroom is bought, not hoped for")

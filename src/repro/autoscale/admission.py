@@ -161,8 +161,11 @@ class AdmissionController:
         live_jobs = set(view.tasks.job_ids.tolist())
         # intersect with the jobs actually present in the view: an earlier
         # admission layer in a policy stack may already have stripped some
-        # held jobs' tasks, and those are no longer this review's to judge
-        candidates = set(view.deferrable) & pending & live_jobs
+        # held jobs' tasks, and those are no longer this review's to judge.
+        # Service jobs are never deferral candidates — holding a latency
+        # job for a price dip forfeits utility it can never earn back.
+        candidates = (set(view.deferrable) & pending & live_jobs
+                      - set(view.service or ()))
         self._admitted &= live_jobs & pending  # started/done jobs drop out
         self._force &= live_jobs
         self._held_rounds = {j: r for j, r in self._held_rounds.items()

@@ -69,19 +69,38 @@ scheduling-round data flow).  The simulated cloud models:
   ``Metrics.deadline_misses`` / ``deferred_jobs`` / ``deferred_wait_s`` /
   ``withdrawals`` account for the axis.
 
-Every scheduler-visible pressure event — spot revocation notices, credit
-exhaustion, deferral latest-start deadlines — travels one shared wiring:
-a ``PressureSignal`` published on the simulator's ``PressureBus``
-(``repro.policies.pressure``; delivered to ``scheduler.on_pressure``
-exactly once) followed by an immediate extra scheduling round,
-de-duplicated so coincident signals react in a single round.
+* optional service jobs (``Job.service`` carrying a
+  ``core.serving.ServiceSpec``, the online-serving axis): a service job is
+  a fleet of interchangeable inference replicas running a fixed wall-clock
+  window.  Its request load is a piecewise-constant profile (a
+  deterministic ``RATE_UPDATE`` event fires at every breakpoint, so accrual
+  segments never span a rate change); effective capacity is
+  ``per_replica_rps`` × Σ replica throughputs (interference and credit
+  throttling degrade serving exactly like batch iteration rates); each
+  constant-rate segment bills ``λ·dt`` requests at the M/M/1-style p99
+  ``base/(1 − λ/capacity)`` against the job's utility curve
+  (``Metrics.slo_attainment`` / ``service_utility``).  When a job crosses
+  into *utility risk* — load within the risk margin of its SLO-feasible
+  utilization ceiling, or capacity short of load — an ``slo`` pressure
+  signal fires on the rising edge through the shared wiring, and the view
+  surfaces ``service`` / ``service_rps`` / ``service_capacity`` /
+  ``slo_risk`` each round.
 
-The spot, multi-region, credit and deferral layers are strictly additive:
-with a static (or absent) price model, a single-region catalog, no
-burstable types and no deferrable/deadlined jobs no extra events are
-scheduled and no extra RNG draws occur, so on-demand runs are bit-for-bit
-identical to the seed simulator.  (The credit and deferral layers draw no
-randomness at all — both are pure functions of the event trajectory.)
+Every scheduler-visible pressure event — spot revocation notices, credit
+exhaustion, deferral latest-start deadlines, serving utility risk —
+travels one shared wiring: a ``PressureSignal`` published on the
+simulator's ``PressureBus`` (``repro.policies.pressure``; delivered to
+``scheduler.on_pressure`` exactly once) followed by an immediate extra
+scheduling round, de-duplicated so coincident signals react in a single
+round.
+
+The spot, multi-region, credit, deferral and serving layers are strictly
+additive: with a static (or absent) price model, a single-region catalog,
+no burstable types, no deferrable/deadlined jobs and no service jobs no
+extra events are scheduled and no extra RNG draws occur, so on-demand runs
+are bit-for-bit identical to the seed simulator.  (The credit, deferral
+and serving layers draw no randomness at all — each is a pure function of
+the event trajectory.)
 
 Progress accounting is lazy: every state change accrues Δt into cost /
 allocation / idle-time integrals and re-projects job-completion events
@@ -103,7 +122,7 @@ from ..core.cluster_types import ClusterConfig, Job, TaskSet
 from ..core.plan import LiveInstance, diff_configs
 from ..core.scheduler import SchedulerBase, SchedulerView
 from ..core.workloads import M_TRUE, WORKLOADS, checkpoint_size_gb
-from ..policies.pressure import (CREDIT, DEADLINE, SPOT, PressureBus,
+from ..policies.pressure import (CREDIT, DEADLINE, SLO, SPOT, PressureBus,
                                  PressureSignal)
 
 # task states
@@ -159,6 +178,14 @@ class _JobState:
     # deferral scenarios: instant a config first assigned this job's tasks
     # (the PENDING→ADMIT transition); reset to None if fully withdrawn
     admitted_t: Optional[float] = None
+    # serving scenarios (jobs carrying a ServiceSpec): current effective
+    # fleet capacity in rps, utility-risk latch (SLO pressure fires on its
+    # rising edge) and the served-request integrals
+    svc_capacity: float = 0.0
+    svc_risk: bool = False
+    req_total: float = 0.0
+    req_ok: float = 0.0
+    util_integral: float = 0.0  # ∫ utility(p99) · λ dt
 
 
 @dataclasses.dataclass
@@ -227,6 +254,23 @@ class Metrics:
     deferred_wait_s: float = 0.0  # Σ arrival→admission wait, deferrable jobs
     withdrawals: int = 0  # re-deferred placements released before launch
     max_pending_jobs: int = 0  # peak not-yet-admitted deferrable queue length
+    # serving accounting (populated only when some job carries a ServiceSpec)
+    has_service: bool = False
+    slo_requests_total: float = 0.0  # ∫ λ dt over service jobs
+    slo_requests_ok: float = 0.0  # requests served with p99 ≤ target
+    service_utility_sum: float = 0.0  # ∫ utility(p99) · λ dt
+    slo_pressure_signals: int = 0  # utility-risk rising edges
+
+    @property
+    def slo_attainment(self) -> float:
+        """Request-weighted fraction served with p99 at/below target."""
+        return self.slo_requests_ok / max(self.slo_requests_total, 1e-9)
+
+    @property
+    def service_utility(self) -> float:
+        """Request-weighted mean utility (1.0 = every request at full
+        utility)."""
+        return self.service_utility_sum / max(self.slo_requests_total, 1e-9)
 
     @property
     def avg_jct_hours(self) -> float:
@@ -281,17 +325,22 @@ class Metrics:
             d["deferred_wait_hours"] = round(self.deferred_wait_s / 3600.0, 2)
             d["withdrawals"] = self.withdrawals
             d["max_pending_jobs"] = self.max_pending_jobs
+        if self.has_service:  # serving runs only
+            d["slo_attainment"] = round(self.slo_attainment, 4)
+            d["service_utility"] = round(self.service_utility, 4)
+            d["served_requests"] = round(self.slo_requests_total)
+            d["slo_signals"] = self.slo_pressure_signals
         return d
 
 
 # event kinds (ordering within same timestamp: arrivals & completions before
 # rounds so the round sees fresh state; price updates, preemption reclaims,
-# credit exhaustions and deferral deadlines also precede rounds so the
-# scheduler reacts to current prices, notices, throttle state and
-# latest-start signals)
+# credit exhaustions, deferral deadlines and serving rate updates also
+# precede rounds so the scheduler reacts to current prices, notices,
+# throttle state, latest-start signals and request load)
 (ARRIVAL, INSTANCE_READY, CKPT_DONE, LAUNCH_DONE, JOB_DONE, FAILURE,
- PRICE_UPDATE, PREEMPT_FIRE, CREDIT_EXHAUST, DEFER_DEADLINE,
- ROUND) = range(11)
+ PRICE_UPDATE, PREEMPT_FIRE, CREDIT_EXHAUST, DEFER_DEADLINE, RATE_UPDATE,
+ ROUND) = range(12)
 
 
 class Simulator:
@@ -375,6 +424,23 @@ class Simulator:
                             job.arrival_time)
                     if t <= self.cfg.max_time_s:
                         self._push(t, DEFER_DEADLINE, (job.job_id,))
+        # Serving axis: active only when some job carries a ServiceSpec.
+        # Deterministic (no RNG); all paths gated on self._serving so batch
+        # traces are bit-for-bit untouched.  Each service job gets a
+        # RATE_UPDATE event at every request-profile breakpoint inside its
+        # window, so accrual segments never span a rate change and utility
+        # risk is re-evaluated the instant load shifts.
+        self._serving = any(j.service is not None for j in jobs)
+        if self._serving:
+            self.metrics.has_service = True
+            for job in jobs:
+                if job.service is None:
+                    continue
+                end = min(job.arrival_time + job.duration_s,
+                          self.cfg.max_time_s)
+                for t in job.service.requests.breakpoints_between(
+                        job.arrival_time, end):
+                    self._push(float(t), RATE_UPDATE, (job.job_id,))
         if self._spot:
             self._spot_rng = np.random.default_rng(self.cfg.seed + 0x5B07)
             self._cur_costs = pm.prices_at(catalog.costs, 0.0)
@@ -430,6 +496,7 @@ class Simulator:
     # ------------------------------------------------------------ accounting
     def _accrue(self, now: float):
         dt = now - self._last_accrue
+        t0 = self._last_accrue
         if dt <= 0:
             self._last_accrue = now
             return
@@ -456,7 +523,30 @@ class Simulator:
                 js.tput_weighted += js.rate * dt
             else:
                 js.idle_s += dt
+            if self._serving and js.job.service is not None:
+                # rate is constant on the segment (RATE_UPDATE events sit on
+                # every profile breakpoint), so λ at the segment start holds
+                self._svc_accrue(js, t0, dt)
         self._last_accrue = now
+
+    def _svc_accrue(self, js: _JobState, t0: float, dt: float) -> None:
+        """Bill a constant-rate segment of served requests against the
+        job's utility curve at the current capacity headroom."""
+        spec = js.job.service
+        lam = spec.requests.rate_at(t0)
+        if lam <= 0.0:
+            return
+        lat = spec.p99_ms(lam, js.svc_capacity)
+        req = lam * dt
+        m = self.metrics
+        js.req_total += req
+        m.slo_requests_total += req
+        if lat <= spec.utility.target_p99_ms + 1e-9:
+            js.req_ok += req
+            m.slo_requests_ok += req
+        u = spec.utility.utility(lat)
+        js.util_integral += u * req
+        m.service_utility_sum += u * req
 
     # ----------------------------------------------------------- throughputs
     def _colocated_running(self, tid: int) -> List[int]:
@@ -568,12 +658,40 @@ class Simulator:
         js = self.jobs.get(jid)
         if js is None or not js.arrived or js.done_t is not None:
             return
+        if js.job.service is not None:
+            # service jobs end at a fixed wall-clock instant (pushed at
+            # arrival), never by progress projection
+            self._touch_service(js)
+            return
         js.rate = self._job_rate(jid)
         js.version += 1
         if js.rate > 0:
             remaining = js.job.total_iters - js.iters_done
             eta = self.now + max(remaining, 0.0) / js.rate
             self._push(eta, JOB_DONE, (jid, js.version))
+
+    def _touch_service(self, js: _JobState) -> None:
+        """Recompute a service job's effective capacity and utility-risk
+        state.  SLO pressure fires on the *rising edge* of risk — load
+        within the risk margin of the SLO-feasible utilization ceiling, or
+        capacity short of load — through the shared pressure wiring."""
+        spec = js.job.service
+        cap = 0.0
+        for task in js.job.tasks:
+            cap += self._task_tput(task.task_id)
+        cap *= spec.per_replica_rps
+        js.svc_capacity = cap
+        # normalized fleet capacity stands in for the batch rate, so the
+        # shared running/idle/tput accounting stays meaningful for services
+        js.rate = cap / max(spec.per_replica_rps * js.job.n_tasks, 1e-9)
+        lam = spec.requests.rate_at(self.now)
+        risk = spec.at_risk(lam, cap)
+        if risk and not js.svc_risk:
+            js.svc_risk = True
+            self.metrics.slo_pressure_signals += 1
+            self._pressure_signal(SLO, (js.job.job_id,))
+        elif not risk:
+            js.svc_risk = False
 
     def _touch_instance_jobs(self, iid: int):
         inst = self.instances.get(iid)
@@ -789,6 +907,22 @@ class Simulator:
     def _report_throughputs(self):
         for jid, js in self._active_jobs.items():
             tasks = js.job.tasks
+            if self._serving and js.job.service is not None:
+                # replicas serve independently, so each running replica is
+                # its own single-task interference observation rather than
+                # the data-parallel min over the fleet
+                for t in tasks:
+                    ts = self.tasks[t.task_id]
+                    if ts.state != RUNNING:
+                        continue
+                    if self._credits and self.instances[ts.src].throttled:
+                        continue  # throttle-confounded: withhold
+                    colo = self._colocated_running(t.task_id)
+                    if colo:
+                        self.scheduler.observe_single(
+                            ts.workload, tuple(sorted(colo)),
+                            self._task_tput(t.task_id))
+                continue
             states = [self.tasks[t.task_id] for t in tasks]
             if any(s.state != RUNNING for s in states):
                 continue
@@ -867,6 +1001,20 @@ class Simulator:
                          if self.jobs[j].admitted_t is None)
             if queued > self.metrics.max_pending_jobs:
                 self.metrics.max_pending_jobs = queued
+        service = service_rps = service_cap = slo_risk = specs = None
+        if self._serving:
+            service, service_rps, service_cap = set(), {}, {}
+            slo_risk, specs = set(), {}
+            for jid, js in self._active_jobs.items():
+                spec = js.job.service
+                if spec is None:
+                    continue
+                service.add(jid)
+                service_rps[jid] = spec.requests.rate_at(self.now)
+                service_cap[jid] = js.svc_capacity
+                specs[jid] = spec
+                if js.svc_risk:
+                    slo_risk.add(jid)
         view = SchedulerView(
             time=self.now, tasks=taskset, pending_ids=pending, live=live_view,
             task_workload={t: self.tasks[t].workload for t in tids},
@@ -874,7 +1022,10 @@ class Simulator:
             task_ckpt_region=ckpt_region or None,
             instance_credits=instance_credits or None,
             throttled=throttled or None, deferrable=deferrable or None,
-            deadline_s=deadline or None, pending=pending_jobs or None)
+            deadline_s=deadline or None, pending=pending_jobs or None,
+            service=service or None, service_rps=service_rps or None,
+            service_capacity=service_cap or None, slo_risk=slo_risk or None,
+            service_specs=specs or None)
         config = self.scheduler.schedule(view)
         self._execute_config(config)
 
@@ -893,6 +1044,14 @@ class Simulator:
         for t in job.tasks:
             self.tasks[t.task_id] = _TaskState(task=t, job_id=job.job_id,
                                                workload=t.workload)
+        if self._serving and job.service is not None:
+            # fixed wall-clock serving window: the end event is pushed once
+            # at arrival (version -1 marks it as the non-projected end), and
+            # the initial risk check fires SLO pressure immediately if load
+            # is already nonzero — latency traffic cannot wait for the next
+            # grid round
+            self._push(self.now + job.duration_s, JOB_DONE, (job.job_id, -1))
+            self._touch_service(js)
         self.scheduler.on_event(self.now)
         self._schedule_next_round()
 
@@ -931,10 +1090,16 @@ class Simulator:
 
     def _on_job_done(self, jid: int, version: int):
         js = self.jobs[jid]
-        if js.version != version or js.done_t is not None:
+        if js.done_t is not None:
             return
-        if js.iters_done < js.job.total_iters - 1e-6:
-            return  # stale projection
+        if js.job.service is not None:
+            if version != -1:
+                return  # progress projections never complete a service job
+        else:
+            if js.version != version:
+                return
+            if js.iters_done < js.job.total_iters - 1e-6:
+                return  # stale projection
         js.done_t = self.now
         js.job.completion_time = self.now
         self._active_jobs.pop(jid, None)
@@ -948,15 +1113,15 @@ class Simulator:
                 self.metrics.deferred_wait_s += wait
                 if wait > self.cfg.round_interval_s:  # held past round 1
                     self.metrics.deferred_jobs += 1
-        if (self._spot or self._credits or self._deferrals) \
+        if (self._spot or self._credits or self._deferrals or self._serving) \
                 and self._jobs_outstanding == 0:
             # drop remaining one-shot breakpoint / credit-exhaustion /
-            # latest-start events (a long price trace or a far-out
-            # projection would otherwise no-op through the heap and inflate
-            # end_time)
+            # latest-start / rate-update events (a long price trace or a
+            # far-out projection would otherwise no-op through the heap and
+            # inflate end_time)
             self._heap = [e for e in self._heap
                           if e[1] not in (PRICE_UPDATE, CREDIT_EXHAUST,
-                                          DEFER_DEADLINE)]
+                                          DEFER_DEADLINE, RATE_UPDATE)]
             heapq.heapify(self._heap)
         self.metrics.jct_sum += self.now - js.job.arrival_time
         self.metrics.idle_sum += js.idle_s
@@ -1066,6 +1231,17 @@ class Simulator:
             return  # already admitted and under way
         self._pressure_signal(DEADLINE, [jid])
 
+    # ------------------------------------------------------ serving handlers
+    def _on_rate_update(self, jid: int) -> None:
+        """A service job's request rate just stepped to a new level
+        (profile breakpoint): re-evaluate utility risk against the already
+        up-to-date capacity (the accrual up to this instant used the old
+        rate)."""
+        js = self.jobs.get(jid)
+        if js is None or not js.arrived or js.done_t is not None:
+            return
+        self._touch_service(js)
+
     def _withdraw_deferred(self, config: ClusterConfig) -> None:
         """Release reserved-but-unstarted placements of re-deferred jobs:
         the config omits their tasks, so any WAITING task (assigned to an
@@ -1115,6 +1291,8 @@ class Simulator:
                 self._on_credit_exhaust_event(*payload)
             elif kind == DEFER_DEADLINE:
                 self._on_defer_deadline(*payload)
+            elif kind == RATE_UPDATE:
+                self._on_rate_update(*payload)
             elif kind == ROUND:
                 self._run_round()
                 if self._live_task_ids():

@@ -23,10 +23,15 @@
   deadline-*loose* ones (hours of slack to wait out dear markets); the
   bundled trace for ``benchmarks/bench_autoscale.py`` and the autoscale
   tests.
+* ``serving_trace`` — the online-serving axis: diurnal million-user request
+  load with surge windows split across two inference fleets (GPU llm-serve,
+  CPU embed-serve) that run for the whole horizon, plus batch filler jobs;
+  the bundled trace for ``benchmarks/bench_serving.py`` and the SLO tests.
 """
 from __future__ import annotations
 
 import itertools
+import math
 from typing import List, Optional
 
 import numpy as np
@@ -34,10 +39,16 @@ import numpy as np
 from ..autoscale.admission import ADMIT_OVERHEAD_S, RUNTIME_MARGIN
 from ..core.catalog import FAMILIES
 from ..core.cluster_types import Job, Task
-from ..core.workloads import NUM_WORKLOADS, WORKLOADS
+from ..core.serving import RequestProfile, ServiceSpec, UtilityCurve
+from ..core.workloads import (NUM_BATCH_WORKLOADS, WORKLOAD_INDEX, WORKLOADS)
 
-_GPU_WORKLOADS = [i for i, w in enumerate(WORKLOADS) if w.demands["p3"][0] > 0]
-_CPU_WORKLOADS = [i for i, w in enumerate(WORKLOADS) if w.demands["p3"][0] == 0]
+# Batch samplers draw from the Table-7 block only (service workloads are
+# placed explicitly by serving_trace), keeping pre-serving traces
+# bit-identical to the 10-workload table.
+_GPU_WORKLOADS = [i for i, w in enumerate(WORKLOADS[:NUM_BATCH_WORKLOADS])
+                  if w.demands["p3"][0] > 0]
+_CPU_WORKLOADS = [i for i, w in enumerate(WORKLOADS[:NUM_BATCH_WORKLOADS])
+                  if w.demands["p3"][0] == 0]
 
 _job_ids = itertools.count(1)
 _task_ids = itertools.count(1_000_000)
@@ -78,7 +89,7 @@ def physical_trace(n_jobs: int = 120, seed: int = 0,
     jobs = []
     for _ in range(n_jobs):
         t += rng.exponential(mean_interarrival_s)
-        w = int(rng.integers(NUM_WORKLOADS))
+        w = int(rng.integers(NUM_BATCH_WORKLOADS))
         dur = rng.uniform(*duration_range_h) * 3600.0
         jobs.append(_table7_job(rng, w, t, dur))
     return jobs
@@ -127,7 +138,7 @@ def deferrable_trace(n_jobs: int = 24, seed: int = 13,
     for _ in range(n_jobs):
         t += rng.exponential(mean_interarrival_s)
         w = int(rng.choice(_CPU_WORKLOADS)) if cpu_only \
-            else int(rng.integers(NUM_WORKLOADS))
+            else int(rng.integers(NUM_BATCH_WORKLOADS))
         dur = rng.uniform(*duration_range_h) * 3600.0
         job = _table7_job(rng, w, t, dur)
         window_h = loose_window_h if rng.uniform() < loose_fraction \
@@ -230,4 +241,71 @@ def alibaba_like_trace(n_jobs: int = 6274, seed: int = 0,
             n_tasks = int(rng.choice([2, 4]))
         jobs.append(_custom_job(w, t, float(durations[i]), (g, cpu, ram),
                                 n_tasks))
+    return jobs
+
+
+def _service_job(workload: int, arrival: float, duration: float,
+                 n_replicas: int, spec: ServiceSpec) -> Job:
+    prof = WORKLOADS[workload]
+    job_id = next(_job_ids)
+    job = Job(job_id=job_id, workload=workload, arrival_time=arrival,
+              duration_s=duration, n_tasks=n_replicas, service=spec)
+    for _ in range(n_replicas):
+        demands = {f: prof.demand_for_family(f) for f in FAMILIES}
+        job.tasks.append(Task(next(_task_ids), job_id, workload, demands))
+    return job
+
+
+def serving_trace(n_batch: int = 10, seed: int = 17, horizon_h: float = 8.0,
+                  users: float = 1_000_000, req_per_user_day: float = 20.0,
+                  llm_share: float = 0.25, peak_hour: float = 5.0,
+                  trough: float = 0.35, surge_mult: float = 1.7,
+                  surge_windows=((0.35, 0.45), (0.70, 0.80)),
+                  util_target: float = 0.6, step_s: float = 900.0,
+                  batch_duration_h=(0.4, 1.2)) -> List[Job]:
+    """Diurnal serving trace with surge windows, next to batch filler.
+
+    Two service fleets (a GPU ``llm-serve`` and a CPU ``embed-serve``, see
+    ``core.workloads.SERVICE_WORKLOADS``) arrive at t=0 and run for the whole
+    ``horizon_h`` window.  The request load is a ``users``-population diurnal
+    curve (``req_per_user_day`` requests per user per day, split
+    ``llm_share`` / ``1 - llm_share`` between the fleets) on a ``step_s``
+    grid, climbing toward ``peak_hour``, with multiplicative surge windows
+    given as horizon fractions and snapped to the grid.  Each fleet is sized
+    so the *surge* peak sits at ``util_target`` utilization when every
+    replica runs undegraded — i.e. the SLO is comfortably feasible at full
+    capacity, and misses can only come from lost or interference-degraded
+    replicas.  ``n_batch`` Table-7 batch jobs arrive throughout for
+    co-location pressure.
+    """
+    rng = np.random.default_rng(seed)
+    horizon_s = horizon_h * 3600.0
+    snap = lambda f: round(f * horizon_s / step_s) * step_s  # noqa: E731
+    surges = tuple((snap(f0), snap(f1), surge_mult) for f0, f1 in surge_windows)
+    avg_rps = users * req_per_user_day / 86400.0
+    jobs: List[Job] = []
+    for name, share in (("llm-serve", llm_share),
+                        ("embed-serve", 1.0 - llm_share)):
+        w = WORKLOAD_INDEX[name]
+        prof = WORKLOADS[w]
+        # diurnal peak ≈ 1.6x the population's mean rate (surges on top)
+        profile = RequestProfile.diurnal(
+            share * avg_rps * 1.6, start_s=0.0, duration_s=horizon_s,
+            step_s=step_s, trough=trough, peak_hour=peak_hour, surges=surges)
+        n_replicas = max(2, math.ceil(
+            profile.peak_rps() / (prof.per_replica_rps * util_target)))
+        spec = ServiceSpec(
+            requests=profile,
+            utility=UtilityCurve(prof.target_p99_ms,
+                                 softness_ms=prof.target_p99_ms / 3.0),
+            per_replica_rps=prof.per_replica_rps,
+            base_latency_ms=prof.base_latency_ms)
+        jobs.append(_service_job(w, 0.0, horizon_s, n_replicas, spec))
+    t = 0.0
+    mean_gap = horizon_s * 0.7 / max(n_batch, 1)
+    for _ in range(n_batch):
+        t += rng.exponential(mean_gap)
+        w = int(rng.integers(NUM_BATCH_WORKLOADS))
+        dur = rng.uniform(*batch_duration_h) * 3600.0
+        jobs.append(_table7_job(rng, w, t, dur))
     return jobs

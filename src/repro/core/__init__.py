@@ -19,9 +19,11 @@ from .reservation_price import (cheapest_type, feasibility_matrix, job_rp_sums,
                                 regional_reservation_prices,
                                 reservation_prices, tnrp)
 from .scheduler import EvaScheduler, NoPackingScheduler, SchedulerBase, SchedulerView
+from .serving import (RequestProfile, ServiceSpec, UtilityCurve,
+                      p99_latency_ms)
 from .throughput_table import ThroughputTable
-from .workloads import (M_TRUE, NUM_WORKLOADS, WORKLOADS, checkpoint_size_gb,
-                        true_throughput)
+from .workloads import (M_TRUE, NUM_BATCH_WORKLOADS, NUM_WORKLOADS, WORKLOADS,
+                        checkpoint_size_gb, true_throughput)
 
 __all__ = [
     "AWS_CATALOG", "Catalog", "CreditModel", "InstanceType",
@@ -39,6 +41,7 @@ __all__ = [
     "feasibility_matrix", "job_rp_sums", "regional_reservation_prices",
     "reservation_prices", "tnrp",
     "EvaScheduler", "NoPackingScheduler", "SchedulerBase", "SchedulerView",
-    "ThroughputTable", "M_TRUE", "NUM_WORKLOADS", "WORKLOADS",
-    "checkpoint_size_gb", "true_throughput",
+    "RequestProfile", "ServiceSpec", "UtilityCurve", "p99_latency_ms",
+    "ThroughputTable", "M_TRUE", "NUM_BATCH_WORKLOADS", "NUM_WORKLOADS",
+    "WORKLOADS", "checkpoint_size_gb", "true_throughput",
 ]

@@ -8,12 +8,15 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .catalog import FAMILIES, NUM_RESOURCES, Catalog
 from .workloads import WORKLOADS
+
+if TYPE_CHECKING:  # pragma: no cover - annotation-only import
+    from .serving import ServiceSpec
 
 
 @dataclasses.dataclass
@@ -43,8 +46,17 @@ class Job:
     # existing trace on the admit-immediately path.
     deadline_s: Optional[float] = None
     deferrable: bool = False
+    # serving axis: a job carrying a ServiceSpec is a fleet of inference
+    # replicas — it runs for a fixed wall-clock window (duration_s) and is
+    # billed by served-request latency against its utility curve instead of
+    # by iteration progress.  Service jobs are never deferrable batch.
+    service: Optional["ServiceSpec"] = None
     # runtime bookkeeping (filled by the simulator)
     completion_time: Optional[float] = None
+
+    @property
+    def is_service(self) -> bool:
+        return self.service is not None
 
     @property
     def total_iters(self) -> float:
@@ -158,11 +170,12 @@ def make_task(job_id: int, workload: int, task_id: Optional[int] = None) -> Task
 
 def make_job(job_id: int, workload: int, arrival_time: float, duration_s: float,
              n_tasks: Optional[int] = None, deadline_s: Optional[float] = None,
-             deferrable: bool = False) -> Job:
+             deferrable: bool = False,
+             service: Optional["ServiceSpec"] = None) -> Job:
     prof = WORKLOADS[workload]
     n = prof.n_tasks if n_tasks is None else n_tasks
     job = Job(job_id=job_id, workload=workload, arrival_time=arrival_time,
               duration_s=duration_s, n_tasks=n, deadline_s=deadline_s,
-              deferrable=deferrable)
+              deferrable=deferrable, service=service)
     job.tasks = [make_task(job_id, workload) for _ in range(n)]
     return job

@@ -79,6 +79,19 @@ class SchedulerView:
     deferrable: Optional[Set[int]] = None
     deadline_s: Optional[Dict[int, float]] = None
     pending: Optional[Set[int]] = None
+    # serving scenarios only (some job carries a ServiceSpec; None
+    # otherwise): live service job ids, job id -> current request rate
+    # (rps), job id -> current effective serving capacity (rps at observed
+    # replica throughput), and the subset at utility risk — utilization
+    # within the risk margin of the job's SLO-feasible ceiling, or capacity
+    # short of load entirely.
+    service: Optional[Set[int]] = None
+    service_rps: Optional[Dict[int, float]] = None
+    service_capacity: Optional[Dict[int, float]] = None
+    slo_risk: Optional[Set[int]] = None
+    # job id -> its ServiceSpec (latency model + utility curve), so serving
+    # layers can evaluate `at_risk` against hypothetical capacities
+    service_specs: Optional[Dict[int, object]] = None
 
 
 class SchedulerBase:
@@ -103,6 +116,8 @@ class SchedulerBase:
             self.on_credit_pressure(signal.ids, signal.time)
         elif signal.kind == "deadline":
             self.on_deadline_pressure(signal.ids, signal.time)
+        elif signal.kind == "slo":
+            self.on_slo_pressure(signal.ids, signal.time)
 
     def on_preemption_notice(self, instance_ids: Sequence[int],
                              time_s: float) -> None:  # spot revocation notice
@@ -114,6 +129,10 @@ class SchedulerBase:
 
     def on_deadline_pressure(self, job_ids: Sequence[int],
                              time_s: float) -> None:  # latest start reached
+        pass
+
+    def on_slo_pressure(self, job_ids: Sequence[int],
+                        time_s: float) -> None:  # service utility at risk
         pass
 
     def observe_single(self, workload: int, colocated: Sequence[int],

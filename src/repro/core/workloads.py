@@ -43,6 +43,20 @@ class WorkloadProfile:
     # non-deferrable defaults, so existing traces are untouched.
     deferrable: bool = False
     deadline_s: Optional[float] = None
+    # Serving axis: ``kind`` is "batch" (Table-7 iteration workloads) or
+    # "service" (latency-SLO inference replicas).  For service workloads the
+    # three fields below are the per-replica serving defaults that trace
+    # generators fold into each job's ``ServiceSpec``; the simulator and
+    # scheduler only ever read the spec on the ``Job``, so these are inert
+    # for batch workloads and for any code path that predates the axis.
+    kind: str = "batch"
+    per_replica_rps: float = 0.0
+    base_latency_ms: float = 0.0
+    target_p99_ms: Optional[float] = None
+
+    @property
+    def is_service(self) -> bool:
+        return self.kind == "service"
 
     def demand_for_family(self, family: str) -> tuple:
         return self.demands.get(family, self.demands["p3"])
@@ -63,7 +77,7 @@ def _w(name, gpu, cpu_p3, ram, ckpt, launch, cpu_c=None, n_tasks=1,
 # with learner updates and openfoam interleaves I/O-bound write phases, so
 # neither saturates a burstable instance's CPU the way the dense-compute
 # workloads do (duty 1.0).
-WORKLOADS: tuple = (
+BATCH_WORKLOADS: tuple = (
     _w("resnet18-2", 1, 4, 24, 2, 80, n_tasks=2),
     _w("resnet18-4", 1, 4, 24, 2, 80, n_tasks=4),
     _w("vit", 2, 8, 60, 3, 143),
@@ -76,6 +90,31 @@ WORKLOADS: tuple = (
     _w("openfoam", 0, 8, 8, 21, 1, cpu_c=6, duty=0.85),
 )
 
+
+def _sw(name, gpu, cpu_p3, ram, ckpt, launch, rps, base_ms, target_ms,
+        cpu_c=None):
+    base = _w(name, gpu, cpu_p3, ram, ckpt, launch, cpu_c=cpu_c)
+    return dataclasses.replace(base, kind="service",
+                               per_replica_rps=float(rps),
+                               base_latency_ms=float(base_ms),
+                               target_p99_ms=float(target_ms))
+
+
+# Serving replicas (beyond-paper; mirrors the repo's launch/serve.py stack).
+# llm-serve is a single-GPU decoder replica (qwen-class model: ~40 s weight
+# load, small state snapshot); embed-serve is a CPU embedding/rerank replica.
+# Demands sit in Table-7 units so replicas pack into the same market.
+SERVICE_WORKLOADS: tuple = (
+    _sw("llm-serve", 1, 4, 24, 3, 40, rps=120, base_ms=60, target_ms=240),
+    _sw("embed-serve", 0, 8, 16, 2, 20, rps=400, base_ms=25, target_ms=100,
+        cpu_c=6),
+)
+
+WORKLOADS: tuple = BATCH_WORKLOADS + SERVICE_WORKLOADS
+
+# Batch trace generators sample workload indices below NUM_BATCH_WORKLOADS,
+# so pre-serving traces stay bit-identical with the extended table.
+NUM_BATCH_WORKLOADS = len(BATCH_WORKLOADS)
 NUM_WORKLOADS = len(WORKLOADS)
 WORKLOAD_INDEX = {w.name: i for i, w in enumerate(WORKLOADS)}
 
@@ -109,13 +148,25 @@ def _build_interference_matrix() -> np.ndarray:
     # (graph embedding × bioinformatics) lose up to 36 %.
     #            rn2   rn4   vit   cgan  gpt2  sage  gcn   a3c   diam  foam
     pressure = [0.35, 0.35, 0.45, 0.20, 0.25, 0.75, 0.60, 0.30, 1.00, 0.55]
+    # Serving replicas: memory-bandwidth pressure from KV-cache / embedding
+    # reads, and high sensitivity — tail latency degrades before batch
+    # throughput does.  Appended past the Table-7 block.
+    pressure += [0.45, 0.55]                      # llm-serve  embed-serve
     sensitive = [0.40, 0.40, 0.35, 0.20, 0.15, 0.95, 0.70, 0.30, 0.85, 0.60]
-    n = NUM_WORKLOADS
+    sensitive += [0.90, 0.80]
+    # The Table-7 10x10 block must stay bit-identical to the pre-serving
+    # matrix (traces and benchmarks pin decisions against it), so the base
+    # block consumes the original seeded draw sequence row-major over the
+    # batch workloads, and cells involving a service workload draw from a
+    # separate stream.
+    nb, n = NUM_BATCH_WORKLOADS, NUM_WORKLOADS
     m = np.ones((n, n))
+    rng_svc = np.random.default_rng(20260807)
     for i in range(n):
         for j in range(n):
             base = 0.36 * (sensitive[i] * pressure[j]) ** 1.5
-            noise = rng.uniform(-0.02, 0.02)
+            r = rng if (i < nb and j < nb) else rng_svc
+            noise = r.uniform(-0.02, 0.02)
             m[i, j] = float(np.clip(1.0 - base + noise, 0.64, 1.0))
     return m
 

@@ -5,15 +5,17 @@ from .base import PLANNING, SNAPSHOT, PolicyLayer, PolicyStack
 from .layers import (AdmissionLayerBase, AutoscaleLayer, CreditLayer,
                      MultiRegionLayer, RegionPinLayer, SpotLayer,
                      stack_from_flags)
-from .pressure import (CREDIT, DEADLINE, KINDS, SPOT, PressureBus,
+from .pressure import (CREDIT, DEADLINE, KINDS, SLO, SPOT, PressureBus,
                        PressureSignal, dirty_instance_ids)
+from .slo import SLOLayer
 from .stability import StabilityController, StabilityLayer
 
 __all__ = [
     "PLANNING", "SNAPSHOT", "PolicyLayer", "PolicyStack",
     "AdmissionLayerBase", "AutoscaleLayer", "CreditLayer",
     "MultiRegionLayer", "RegionPinLayer", "SpotLayer", "stack_from_flags",
-    "CREDIT", "DEADLINE", "KINDS", "SPOT", "PressureBus", "PressureSignal",
-    "dirty_instance_ids",
+    "CREDIT", "DEADLINE", "KINDS", "SLO", "SPOT", "PressureBus",
+    "PressureSignal", "dirty_instance_ids",
+    "SLOLayer",
     "StabilityController", "StabilityLayer",
 ]

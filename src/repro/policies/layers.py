@@ -372,7 +372,8 @@ class AutoscaleLayer(AdmissionLayerBase):
 
 def stack_from_flags(*, spot_aware: bool = False, multi_region: bool = False,
                      credit_aware: bool = False, autoscale: bool = False,
-                     stability: bool = False, region: Optional[str] = None,
+                     stability: bool = False, slo: bool = False,
+                     region: Optional[str] = None,
                      admission=None, strike: Optional[float] = None,
                      v: Optional[float] = None,
                      extra: Sequence[PolicyLayer] = ()):
@@ -403,5 +404,8 @@ def stack_from_flags(*, spot_aware: bool = False, multi_region: bool = False,
     if stability:
         from .stability import StabilityLayer
         layers.append(StabilityLayer(admission, **knobs))
+    if slo:
+        from .slo import SLOLayer
+        layers.append(SLOLayer())
     layers.extend(extra)
     return PolicyStack(layers)

@@ -19,11 +19,12 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Iterable, List, Set, Tuple
 
-# signal kinds (the former three parallel wirings)
+# signal kinds (the former three parallel wirings, plus the serving axis)
 SPOT = "spot"          # revocation notice: instance ids about to be reclaimed
 CREDIT = "credit"      # burstable credits exhausted: instance ids throttled
 DEADLINE = "deadline"  # deferral latest-start reached: job ids to force-admit
-KINDS = (SPOT, CREDIT, DEADLINE)
+SLO = "slo"            # service job entered utility risk: job ids at risk
+KINDS = (SPOT, CREDIT, DEADLINE, SLO)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,8 +32,8 @@ class PressureSignal:
     """One scheduler-visible pressure event.
 
     ``ids`` are instance ids for ``spot``/``credit`` signals and job ids
-    for ``deadline`` signals — the same payloads the three legacy hooks
-    carried.
+    for ``deadline``/``slo`` signals — the same payloads the three legacy
+    hooks carried, plus the serving axis.
     """
 
     kind: str
@@ -43,9 +44,9 @@ class PressureSignal:
 def dirty_instance_ids(signals: Iterable[PressureSignal]) -> Set[int]:
     """Union of the *instance* ids the given signals touched — the dirty
     set for incremental partial reconfiguration.  ``spot`` and ``credit``
-    signals carry instance ids; ``deadline`` signals carry job ids (their
-    tasks enter the re-plan through the pending set, not through a dirty
-    instance), so they contribute nothing here.
+    signals carry instance ids; ``deadline`` and ``slo`` signals carry job
+    ids (their tasks enter the re-plan through the pending set, not through
+    a dirty instance), so they contribute nothing here.
     """
     dirty: Set[int] = set()
     for s in signals:

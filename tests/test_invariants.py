@@ -1,0 +1,229 @@
+"""Property-test harness pinning the simulator's conservation laws across
+randomly *composed* scenarios (spot × multi-region × burstable ×
+deferrable × service).
+
+Every billing and signalling pathway in the simulator must balance no
+matter which scenario axes are stacked:
+
+* **billing conservation** — on static catalogs the total cost equals the
+  per-instance recompute (lifetime × hourly price, summed over every
+  instance ever launched) plus egress; on multi-region catalogs the
+  per-region ledger sums to the total either way;
+* **egress exactly once** — each cross-region checkpoint move bills the
+  egress fee exactly once (the instrumented charge log matches both the
+  egress total and the migration counter);
+* **no billing while pending** — a job held by an admission controller
+  has no instances, so nothing accrues before its first admission;
+* **bus exactly-once** — every pressure signal reaches every subscriber
+  exactly once, including a second independent subscriber;
+* **serving accounting** — served requests integrate the request profile
+  exactly over the job's active window, and the SLO counters never exceed
+  it.
+
+The hypothesis sweep (bounded profile: few examples, no deadline — CI
+installs the ``test`` extra) drives random axis combinations through the
+laws; seeded fallback tests run the same checker without hypothesis so the
+laws stay pinned even in a bare environment.
+"""
+import pytest
+
+from repro.autoscale import latest_start_s
+from repro.cluster import (SimConfig, Simulator, burstable_trace,
+                           deferrable_trace, physical_trace)
+from repro.core import (EvaScheduler, PriceModel, RequestProfile, ServiceSpec,
+                        UtilityCurve, aws_catalog, burstable_demo_catalog,
+                        dispersed_demo_regions, make_job,
+                        multi_region_catalog)
+from repro.core.workloads import WORKLOAD_INDEX, checkpoint_size_gb
+from repro.policies import (AutoscaleLayer, CreditLayer, MultiRegionLayer,
+                            SLOLayer, SpotLayer)
+
+EMBED = WORKLOAD_INDEX["embed-serve"]
+
+
+class _Instrumented(Simulator):
+    """Logs every cross-region egress charge and adds a second pressure-bus
+    subscriber, so the conservation checker can audit both."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.egress_calls = []
+        self.bus_copy = []
+        self.pressure_bus.subscribe(self.bus_copy.append)
+
+    def _cross_region_charge(self, workload, r_s, r_d):
+        if r_s != r_d:
+            self.egress_calls.append((workload, r_s, r_d))
+        return super()._cross_region_charge(workload, r_s, r_d)
+
+
+def _service_job(job_id, duration_s=2700.0):
+    """Small embed-serve fleet with a stepped request profile (a breakpoint
+    inside the window keeps the integral law non-trivial)."""
+    spec = ServiceSpec(
+        requests=RequestProfile((0.0, 600.0, 1500.0), (0.0, 80.0, 40.0)),
+        utility=UtilityCurve(100.0), per_replica_rps=400.0,
+        base_latency_ms=25.0)
+    return make_job(job_id=job_id, workload=EMBED, arrival_time=0.0,
+                    duration_s=duration_s, n_tasks=2, service=spec)
+
+
+def _lambda_integral(prof, a, b):
+    ts = (a,) + prof.breakpoints_between(a, b) + (b,)
+    return sum(prof.rate_at(t0) * (t1 - t0) for t0, t1 in zip(ts, ts[1:]))
+
+
+def _compose(catalog_kind, spot, deferrable, service, hazard, n_jobs, seed):
+    """Build one composed scenario: catalog, jobs, stack, sim config."""
+    pm = PriceModel.mean_reverting(discount=0.4, seed=seed + 1) if spot \
+        else None
+    if catalog_kind == "multiregion":
+        cat = multi_region_catalog(dispersed_demo_regions(2))
+        layers = [SpotLayer(), MultiRegionLayer()]
+    elif catalog_kind == "burstable":
+        cat = burstable_demo_catalog(price_model=pm)
+        layers = [SpotLayer(), CreditLayer()]
+    else:
+        cat = aws_catalog(price_model=pm)
+        layers = [SpotLayer()]
+    if deferrable:
+        jobs = deferrable_trace(n_jobs=n_jobs, seed=seed)
+        layers.append(AutoscaleLayer(strike=0.9))
+    elif catalog_kind == "burstable":
+        jobs = burstable_trace(n_jobs=n_jobs, seed=seed)
+    else:
+        jobs = physical_trace(n_jobs=n_jobs, seed=seed,
+                              duration_range_h=(0.2, 0.5))
+    layers.append(SLOLayer())
+    if service:
+        jobs = jobs + [_service_job(job_id=10_000 + seed)]
+    cfg = SimConfig(seed=seed,
+                    preemption_hazard_per_hour=hazard if spot else 0.0)
+    return cat, jobs, layers, cfg
+
+
+def _run_composed(catalog_kind, spot, deferrable, service, hazard, n_jobs,
+                  seed):
+    cat, jobs, layers, cfg = _compose(catalog_kind, spot, deferrable,
+                                      service, hazard, n_jobs, seed)
+    sched = EvaScheduler(cat, policies=layers)
+    sim = _Instrumented(cat, jobs, sched, cfg)
+    m = sim.run()
+    return sim, m, cat, jobs
+
+
+def _check_conservation(sim, m, cat, jobs):
+    # --- billing: every instance ever launched, lifetime × hourly price
+    assert m.total_cost >= 0.0
+    if not sim._spot:
+        recomputed = sum(
+            (inst.terminated_t - inst.request_t) / 3600.0
+            * cat.costs[inst.type_index]
+            for inst in sim.instances.values())
+        assert m.total_cost == pytest.approx(recomputed + m.egress_cost,
+                                             rel=1e-9, abs=1e-9)
+    for inst in sim.instances.values():  # nothing left accruing
+        assert inst.terminated_t is not None
+    # --- multi-region: the per-region ledger sums to the total
+    if m.cost_by_region:
+        assert m.total_cost == pytest.approx(
+            sum(m.cost_by_region.values()), rel=1e-9, abs=1e-9)
+    # --- egress: exactly once per cross-region move, fee re-derived
+    assert len(sim.egress_calls) == m.cross_region_migrations
+    if cat.transfer is not None:
+        fees = sum(cat.transfer.egress_usd(r_s, r_d, checkpoint_size_gb(w))
+                   for w, r_s, r_d in sim.egress_calls)
+        assert m.egress_cost == pytest.approx(fees, rel=1e-9, abs=1e-9)
+    else:
+        assert m.egress_cost == 0.0
+    # --- pressure bus: exactly once per subscriber, audited by the copy
+    bus = sim.pressure_bus
+    n_subs = len(bus._subscribers)
+    assert n_subs >= 2  # scheduler + instrumented copy
+    assert bus.delivered == bus.published * n_subs
+    assert len(sim.bus_copy) == bus.published
+    # --- serving: request accounting integrates the profile exactly
+    service_jobs = [j for j in jobs if j.service is not None]
+    assert m.has_service == bool(service_jobs)
+    if service_jobs:
+        expect = sum(
+            _lambda_integral(j.service.requests, j.arrival_time,
+                             j.arrival_time + j.duration_s)
+            for j in service_jobs)
+        assert m.slo_requests_total == pytest.approx(expect, rel=1e-9)
+        assert m.slo_requests_ok <= m.slo_requests_total + 1e-9
+        assert m.service_utility_sum <= m.slo_requests_total + 1e-9
+        for j in service_jobs:  # wall-clock window, not iterations
+            assert j.completion_time == pytest.approx(
+                j.arrival_time + j.duration_s)
+    # --- every job completes (deadline backstops, service windows, batch)
+    for j in jobs:
+        assert j.completion_time is not None
+
+
+# --------------------------------------------------------- seeded fallback
+SEEDED = [
+    ("aws", True, False, True, 0.4, 4, 2),
+    ("multiregion", False, False, True, 0.0, 3, 5),
+    ("burstable", True, True, False, 0.3, 4, 8),
+]
+
+
+@pytest.mark.parametrize("kind,spot,defer,service,hazard,n,seed", SEEDED)
+def test_conservation_seeded(kind, spot, defer, service, hazard, n, seed):
+    _check_conservation(*_run_composed(kind, spot, defer, service, hazard,
+                                       n, seed))
+
+
+def test_no_billing_while_pending():
+    """A never-admit strike controller holds every deferrable job until
+    its latest-start deadline: no instance may even be *requested* (let
+    alone billed) before the earliest latest-start in the trace."""
+    cat = aws_catalog()  # static: billing is exactly instance lifetimes
+    jobs = deferrable_trace(n_jobs=5, seed=3)
+    assert all(j.deferrable for j in jobs)
+    sched = EvaScheduler(cat, policies=[SpotLayer(),
+                                        AutoscaleLayer(strike=1e-9),
+                                        SLOLayer()])
+    sim = _Instrumented(cat, jobs, sched, SimConfig(seed=5))
+    m = sim.run()
+    first_ls = min(latest_start_s(j.deadline_s, j.duration_s) for j in jobs)
+    assert m.instances_launched > 0
+    for inst in sim.instances.values():
+        assert inst.request_t >= first_ls - 1e-6
+    assert m.deadline_misses == 0
+    _check_conservation(sim, m, cat, jobs)
+
+
+# ------------------------------------------------------- hypothesis sweep
+@pytest.fixture(scope="module")
+def _hyp():
+    return pytest.importorskip("hypothesis")
+
+
+def test_conservation_random_compositions(_hyp):
+    """Random axis compositions through the same conservation checker.
+
+    Bounded profile (few examples, no deadline): each example is a full
+    simulator run, so the sweep stays CI-sized; the seeded tests above
+    keep the laws pinned when hypothesis is absent.
+    """
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=8, deadline=None, derandomize=True,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(
+        kind=st.sampled_from(["aws", "multiregion", "burstable"]),
+        spot=st.booleans(),
+        deferrable=st.booleans(),
+        service=st.booleans(),
+        hazard=st.sampled_from([0.0, 0.3, 0.6]),
+        n_jobs=st.integers(2, 5),
+        seed=st.integers(0, 50),
+    )
+    def inner(kind, spot, deferrable, service, hazard, n_jobs, seed):
+        _check_conservation(*_run_composed(kind, spot, deferrable, service,
+                                           hazard, n_jobs, seed))
+
+    inner()

@@ -251,6 +251,48 @@ def test_bit_identity_deferrable_demo():
         lambda: [SpotLayer(), AutoscaleLayer(strike=0.9)]))
 
 
+def _stack_decisions(catalog_fn, trace_fn, cfg_kw, stack_fns):
+    """Run each explicit stack on a fresh catalog/trace; return normalized
+    (decision trace, summary, exact cost) triples."""
+    out = []
+    for stack_fn in stack_fns:
+        cat = catalog_fn()
+        jobs = trace_fn()
+        rank = {t.task_id: i for i, t in enumerate(
+            sorted((t for j in jobs for t in j.tasks),
+                   key=lambda t: t.task_id))}
+        sched = _Probe(cat, policies=stack_fn())
+        m = Simulator(cat, jobs, sched, SimConfig(**cfg_kw)).run()
+        trace = [(t, tuple((k, tuple(rank[tid] for tid in tids))
+                           for k, tids in assignments))
+                 for t, assignments in sched.trace]
+        out.append((trace, m.summary(), m.total_cost))
+    return out
+
+
+def test_slo_layer_is_bit_identical_on_batch_traces():
+    """PR 7 contract: ``SLOLayer`` present in the stack leaves every
+    decision on a *service-free* trace bit-identical — every hook is the
+    identity when the view carries no service jobs, so pre-serving runs
+    replay exactly."""
+    from repro.policies import SLOLayer
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    _assert_bit_identical(_stack_decisions(
+        lambda: aws_catalog(price_model=pm),
+        lambda: physical_trace(n_jobs=8, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(seed=5, preemption_hazard_per_hour=0.5),
+        (lambda: [SpotLayer()],
+         lambda: [SpotLayer(), SLOLayer()])))
+    # composed with an admission layer on a deferrable trace too
+    _assert_bit_identical(_stack_decisions(
+        lambda: aws_catalog(price_model=pm),
+        lambda: deferrable_trace(n_jobs=8, seed=13),
+        dict(seed=5, preemption_hazard_per_hour=0.3),
+        (lambda: [SpotLayer(), AutoscaleLayer(strike=0.9)],
+         lambda: [SpotLayer(), AutoscaleLayer(strike=0.9), SLOLayer()])))
+
+
 def test_stack_from_flags_matches_flag_shim():
     """The factory translation (`stack_from_flags`) builds the same layer
     sequence the deprecation shim does."""
