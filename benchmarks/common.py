@@ -19,7 +19,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 # axes by these names; the factory translates them into an explicit policy
 # stack so no deprecated boolean-flag path is exercised)
 _AXIS_KW = ("spot_aware", "multi_region", "credit_aware", "autoscale",
-            "stability", "slo", "region", "admission", "strike", "v")
+            "stability", "slo", "portfolio", "region", "admission", "strike",
+            "v")
 
 
 def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
@@ -61,6 +62,10 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
         if name == "eva-slo":
             axes.setdefault("spot_aware", True)
             axes["slo"] = True
+        if name == "eva-portfolio":
+            axes.setdefault("spot_aware", True)
+            axes.setdefault("multi_region", True)
+            axes["portfolio"] = True
         opts.update(kw)
         if axes and "policies" not in opts:
             opts["policies"] = stack_from_flags(**axes)

@@ -20,14 +20,14 @@ def main():
                     help="run a single bench: micro|endtoend|multitask|"
                          "interference|migration|composition|arrival|"
                          "roofline|spot|multiregion|credits|autoscale|"
-                         "stability|serving")
+                         "stability|serving|portfolio")
     args = ap.parse_args()
 
     from . import (bench_arrival, bench_autoscale, bench_composition,
                    bench_credits, bench_endtoend, bench_interference,
                    bench_micro, bench_migration, bench_multiregion,
-                   bench_multitask, bench_roofline, bench_serving,
-                   bench_spot, bench_stability)
+                   bench_multitask, bench_portfolio, bench_roofline,
+                   bench_serving, bench_spot, bench_stability)
     benches = {
         "micro": lambda: bench_micro.run(quick=args.quick),
         "endtoend": lambda: bench_endtoend.run(quick=args.quick,
@@ -49,6 +49,8 @@ def main():
                                                  full=args.full),
         "serving": lambda: bench_serving.run(quick=args.quick,
                                              full=args.full),
+        "portfolio": lambda: bench_portfolio.run(quick=args.quick,
+                                                 full=args.full),
     }
     todo = [args.only] if args.only else list(benches)
     t0 = time.time()

@@ -1,0 +1,108 @@
+"""Commitment-portfolio walkthrough: reserved pools next to spot markets,
+provider-qualified prices, and the portfolio Eva scheduler.
+
+    PYTHONPATH=src python examples/portfolio_cluster.py [--pool 6] [--hazard 0.25]
+
+1. Build a two-provider market (aws with a 1yr commitment pool on
+   c7i.2xlarge, gcp with its own spot process) and look at the price
+   ladder: committed rate < spot mean < on-demand.
+2. Price a cross-provider move: egress out of the source cloud + the thin
+   inter-cloud link, vs the free market -> pool move inside a provider.
+3. Run the bundled steady+bursty trace under the portfolio stack, pure
+   spot, and a peak-sized pure commitment, and compare total cost /
+   pool utilization / idle waste / per-provider spend.
+"""
+import argparse
+import math
+
+from repro.cluster import SimConfig, Simulator, portfolio_trace
+from repro.core import (CommitmentModel, EvaScheduler, PriceModel, Provider,
+                        checkpoint_size_gb, multi_provider_catalog)
+from repro.policies import MultiRegionLayer, PortfolioLayer, SpotLayer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--pool", type=int, default=6,
+                help="committed c7i.2xlarge slots (the steady base)")
+ap.add_argument("--hazard", type=float, default=0.25,
+                help="baseline preemptions per instance-hour at mean price")
+args = ap.parse_args()
+
+COMMIT = "c7i.2xlarge"
+RATE_FRACTION = 0.4  # 1yr committed rate as a fraction of on-demand
+
+
+def build_catalog(pool_size, seed=7):
+    commitments = (CommitmentModel(instance_type=COMMIT, pool_size=pool_size,
+                                   rate_fraction=RATE_FRACTION),) \
+        if pool_size else ()
+    return multi_provider_catalog((
+        Provider(name="aws",
+                 price_model=PriceModel.mean_reverting(discount=0.6,
+                                                       seed=seed),
+                 commitments=commitments),
+        Provider(name="gcp", cost_scale=1.04,
+                 price_model=PriceModel.mean_reverting(discount=0.62,
+                                                       seed=seed + 1))))
+
+
+# -- 1. the price ladder -----------------------------------------------------
+cat = build_catalog(args.pool)
+k_od = cat.index_of(f"aws/{COMMIT}")
+k_pool = cat.index_of(f"aws/commit-{COMMIT}/{COMMIT}")
+od = cat.costs[k_od]
+print(f"{COMMIT} price ladder on the aws side:")
+print(f"  on-demand        ${od:.4f}/h")
+print(f"  spot (mean)      ${od * 0.6:.4f}/h  (OU process around 0.60x)")
+print(f"  1yr committed    ${cat.costs[k_pool]:.4f}/h  "
+      f"({RATE_FRACTION:.0%} of on-demand, billed used-or-idle)")
+
+# -- 2. what moves cost across the portfolio ---------------------------------
+w = 3  # cyclegan: 7 GB checkpoint
+gb = checkpoint_size_gb(w)
+r_aws, r_pool = cat.region_of(k_od), cat.region_of(k_pool)
+r_gcp = cat.region_of(cat.index_of(f"gcp/{COMMIT}"))
+print(f"\nmoving a {gb:.0f} GB checkpoint:")
+print(f"  aws market -> aws pool   "
+      f"${cat.transfer.egress_usd(r_aws, r_pool, gb):.2f} egress, "
+      f"{cat.transfer.transfer_time_s(r_aws, r_pool, gb):.1f}s "
+      "(intra-provider: free, fat link)")
+print(f"  aws market -> gcp market "
+      f"${cat.transfer.egress_usd(r_aws, r_gcp, gb):.2f} egress, "
+      f"{cat.transfer.transfer_time_s(r_aws, r_gcp, gb):.1f}s "
+      "(cross-provider: source cloud bills data out)")
+
+# -- 3. portfolio vs the pure regimes ----------------------------------------
+n_steady, n_burst = args.pool, 10
+peak = n_steady + math.ceil(n_burst / 2)
+print(f"\n{n_steady} steady horizon-long jobs + {n_burst} bursty jobs, "
+      f"hazard {args.hazard}/instance-hour")
+results = {}
+for label, pool in (("eva-portfolio", args.pool),
+                    ("pure-spot", 0),
+                    ("pure-commit", peak)):
+    c = build_catalog(pool)
+    layers = [SpotLayer(), MultiRegionLayer()]
+    if pool:
+        layers.append(PortfolioLayer())
+    jobs = portfolio_trace(n_steady=n_steady, n_burst=n_burst, seed=23)
+    sched = EvaScheduler(c, policies=layers)
+    cfg = SimConfig(seed=5, preemption_hazard_per_hour=args.hazard)
+    m = Simulator(c, jobs, sched, cfg).run()
+    results[label] = m
+    extra = ""
+    if pool:
+        util = next(iter(m.commitment_utilization.values()))
+        extra = (f"  commit=${m.commitment_cost:.2f}"
+                 f" idle=${m.commitment_idle_cost:.2f}"
+                 f" util={util:.0%}")
+    spend = ", ".join(f"{p}=${v:.2f}"
+                      for p, v in sorted(m.cost_by_provider.items()))
+    print(f"  {label:14s} ${m.total_cost:7.2f}  [{spend}]{extra}")
+
+port = results["eva-portfolio"].total_cost
+print(f"\nportfolio saves "
+      f"{1.0 - port / results['pure-spot'].total_cost:.1%} vs pure-spot and "
+      f"{1.0 - port / results['pure-commit'].total_cost:.1%} vs pure-commit "
+      "(the steady base rides the discounted pool, bursts overflow to "
+      "whichever spot market is cheap, and idle commitment waste stays "
+      "near zero)")

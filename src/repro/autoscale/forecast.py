@@ -23,6 +23,8 @@ reference design):
   of the history.
 * ``RegionForecaster`` — block-composition over a ``RegionPriceModel``:
   each region's sub-model is forecast by its own forecaster.
+* ``MarketForecaster`` — the same composition over a ``MarketPriceModel``
+  (heterogeneous blocks: provider markets next to commitment pools).
 
 All forecasters compose with the catalog exactly like ``catalog.at``:
 ``forecast_catalog(catalog, now_s, horizon_s)`` returns a snapshot whose
@@ -39,7 +41,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.catalog import (Catalog, MeanRevertingPriceModel, PriceModel,
+from ..core.catalog import (Catalog, MarketPriceModel,
+                            MeanRevertingPriceModel, PriceModel,
                             RegionPriceModel, TracePriceModel)
 
 
@@ -89,6 +92,8 @@ class PriceForecaster:
     def for_model(pm: Optional[PriceModel]) -> "PriceForecaster":
         if pm is None or pm.is_static:
             return PriceForecaster()
+        if isinstance(pm, MarketPriceModel):
+            return MarketForecaster(pm)
         if isinstance(pm, RegionPriceModel):
             return RegionForecaster(pm)
         if isinstance(pm, MeanRevertingPriceModel):
@@ -196,6 +201,35 @@ class TraceForecaster(PriceForecaster):
         _, vals = self._history(now_s)
         vals = self._per_type(np.asarray(vals, dtype=np.float64), n_types)
         return np.quantile(vals, self.quantile, axis=0)
+
+
+class MarketForecaster(PriceForecaster):
+    """Composite forecaster for heterogeneous region blocks
+    (``MarketPriceModel``, the multi-provider catalog): block ``i`` covers
+    ``counts[i]`` types forecast by its own sub-model's forecaster (static
+    for commitment pools)."""
+
+    kind = "multi-provider"
+
+    def __init__(self, pm: MarketPriceModel,
+                 subs: Optional[Sequence[PriceForecaster]] = None):
+        self.pm = pm
+        self.counts = pm.counts
+        self.subs = tuple(subs) if subs is not None else tuple(
+            PriceForecaster.for_model(m) for m in pm.models)
+
+    def mean_multipliers(self, n_types, now_s, horizon_s):
+        assert n_types == sum(self.counts)
+        return np.concatenate([
+            np.asarray(f.mean_multipliers(c, now_s, horizon_s),
+                       dtype=np.float64)
+            for f, c in zip(self.subs, self.counts)])
+
+    def anchor_multipliers(self, n_types, now_s):
+        assert n_types == sum(self.counts)
+        return np.concatenate([
+            np.asarray(f.anchor_multipliers(c, now_s), dtype=np.float64)
+            for f, c in zip(self.subs, self.counts)])
 
 
 class RegionForecaster(PriceForecaster):

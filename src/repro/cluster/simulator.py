@@ -31,6 +31,18 @@ scheduling-round data flow).  The simulated cloud models:
   region after a reclaim/failure pays the same charge), and per-region
   ``max_instances`` capacity is enforced by denying launches into full
   regions (the tasks stay put / pending and are repacked next round),
+* optional commitment pools (``core.catalog.multi_provider_catalog``):
+  each pool region bills its discounted rate for every slot every hour —
+  used or idle — as a standing bill integrated in ``_accrue`` (exactly
+  once per pool-hour), while pool *instances* bill zero marginal; overflow
+  rides the provider's market region at spot/on-demand prices.  Per-pool
+  utilization/idle-waste integrals and per-provider ledgers
+  (``Metrics.cost_by_provider``) account every dollar; the per-region
+  launch caps bound pools, and a ``commitment_orders`` attribute on the
+  scheduler (polled after every round, like ``admission``) grows pools
+  monotonically mid-run — the inventory decision layered over the
+  per-round RP decision,
+
 * optional burstable instance types (catalog types carrying a
   ``core.catalog.CreditModel``): each burstable instance tracks a credit
   balance in full-speed hours — drained at ``duty − accrual`` per busy hour
@@ -237,11 +249,26 @@ class Metrics:
     preemption_notices: int = 0
     preemptions: int = 0
     end_time: float = 0.0
-    # multi-region accounting (populated only for multi-region catalogs)
+    # multi-region accounting.  The ledgers are *always present* (empty
+    # dicts on single-region runs, never None) and summary() gating is the
+    # explicit has_regions flag — not dict truthiness, which conflated
+    # "single-region run" with "multi-region run that spent nothing".
+    has_regions: bool = False
     egress_cost: float = 0.0
     cross_region_migrations: int = 0
     capacity_denied: int = 0
     cost_by_region: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # provider/commitment accounting (multi-provider catalogs only; same
+    # always-present, explicitly-gated contract as the region ledger)
+    has_providers: bool = False
+    cost_by_provider: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    has_commitments: bool = False
+    commitment_cost: float = 0.0  # Σ standing pool bills (used or idle)
+    commitment_idle_cost: float = 0.0  # unused pool-hours × discounted rate
+    commitment_utilization: Dict[str, float] = dataclasses.field(
+        default_factory=dict)  # pool region -> covered / capacity ∈ [0, 1]
+    commitment_resizes: int = 0  # inventory-pass pool growths applied
     # burstable-credit accounting (populated only for burstable catalogs)
     has_credits: bool = False
     credit_exhaustions: int = 0
@@ -310,12 +337,21 @@ class Metrics:
              "preemptions": self.preemptions}
         d.update({f"alloc_{k}": round(v, 4)
                   for k, v in self.resource_allocation().items()})
-        if self.cost_by_region:  # multi-region runs only
+        if self.has_regions:  # multi-region runs only
             d["egress_cost"] = round(self.egress_cost, 2)
             d["cross_region_migrations"] = self.cross_region_migrations
             d["capacity_denied"] = self.capacity_denied
             d.update({f"cost_{name}": round(v, 2)
                       for name, v in sorted(self.cost_by_region.items())})
+        if self.has_providers:  # multi-provider runs only
+            d.update({f"cost_provider_{name}": round(v, 2)
+                      for name, v in sorted(self.cost_by_provider.items())})
+        if self.has_commitments:  # commitment-pool runs only
+            d["commitment_cost"] = round(self.commitment_cost, 2)
+            d["commitment_idle_cost"] = round(self.commitment_idle_cost, 2)
+            d["commitment_resizes"] = self.commitment_resizes
+            d.update({f"util_{name}": round(v, 4) for name, v
+                      in sorted(self.commitment_utilization.items())})
         if self.has_credits:  # burstable runs only
             d["credit_exhaustions"] = self.credit_exhaustions
             d["throttled_hours"] = round(self.throttled_s / 3600.0, 2)
@@ -393,7 +429,43 @@ class Simulator:
             self._region_ids = catalog.region_ids
             self._region_name_of_type = [self._regions[r].name
                                          for r in self._region_ids.tolist()]
+            self._provider_of_type = [self._regions[r].provider
+                                      for r in self._region_ids.tolist()]
+            self.metrics.has_regions = True
             self.metrics.cost_by_region = {r.name: 0.0 for r in self._regions}
+            # mutable per-region launch limits: commitment re-sizes grow
+            # pool caps at runtime (frozen Region.max_instances is only the
+            # initial value)
+            self._region_limits = [r.max_instances for r in self._regions]
+            providers = [r.provider for r in self._regions]
+            if any(p is not None for p in providers):
+                self.metrics.has_providers = True
+                self.metrics.cost_by_provider = {
+                    p: 0.0 for p in dict.fromkeys(providers)
+                    if p is not None}
+        # Commitment pools: each pool region bills its discounted rate for
+        # every slot every hour (standing bill, integrated in _accrue) while
+        # its instances bill zero marginal — the pool-hour is paid exactly
+        # once.  All paths gated on self._commit so commitment-free catalogs
+        # are bit-for-bit untouched.
+        self._pools = catalog.commitment_pools() \
+            if self._regions is not None else ()
+        self._commit = bool(self._pools)
+        if self._commit:
+            self.metrics.has_commitments = True
+            self._pool_type = catalog.commitment_type_mask()
+            self._pool_size: Dict[int, int] = {}
+            self._pool_rate: Dict[int, float] = {}
+            self._pool_covered_s: Dict[int, float] = {}
+            self._pool_capacity_s: Dict[int, float] = {}
+            for ri, cm in self._pools:
+                ks = np.nonzero(catalog.region_ids == ri)[0]
+                assert ks.size == 1, \
+                    "a commitment pool region holds exactly one type"
+                self._pool_size[ri] = int(cm.pool_size)
+                self._pool_rate[ri] = float(catalog.costs[int(ks[0])])
+                self._pool_covered_s[ri] = 0.0
+                self._pool_capacity_s[ri] = 0.0
         # Burstable credits: active only when some catalog type carries a
         # CreditModel.  Deterministic (no RNG); all paths gated on
         # self._credits so other catalogs are bit-for-bit untouched.
@@ -494,6 +566,26 @@ class Simulator:
             inst.alloc -= self._task_demand(inst, tid)
 
     # ------------------------------------------------------------ accounting
+    def _bill_type(self, amt: float, k: int) -> None:
+        """Bill ``amt`` attributed to instance type ``k`` on every ledger
+        (total, per-region, per-provider)."""
+        m = self.metrics
+        m.total_cost += amt
+        if self._regions is not None:
+            m.cost_by_region[self._region_name_of_type[k]] += amt
+            p = self._provider_of_type[k]
+            if p is not None:
+                m.cost_by_provider[p] += amt
+
+    def _bill_region(self, amt: float, ri: int) -> None:
+        """Bill ``amt`` attributed to region ``ri`` on every ledger."""
+        m = self.metrics
+        m.total_cost += amt
+        m.cost_by_region[self._regions[ri].name] += amt
+        p = self._regions[ri].provider
+        if p is not None:
+            m.cost_by_provider[p] += amt
+
     def _accrue(self, now: float):
         dt = now - self._last_accrue
         t0 = self._last_accrue
@@ -510,12 +602,25 @@ class Simulator:
                 self._credit_integrate(inst, dt)  # touched: cost stays flat)
                 if inst.throttled:
                     m.throttled_s += dt
-            if self._spot:  # integrate the piecewise-constant spot price
+            if self._spot and not (self._commit
+                                   and self._pool_type[inst.type_index]):
+                # integrate the piecewise-constant spot price; pool
+                # instances bill zero marginal (the standing bill below
+                # already paid their slot)
                 amt = dt / 3600.0 * self._cur_costs[inst.type_index]
-                m.total_cost += amt
-                if self._regions is not None:
-                    m.cost_by_region[
-                        self._region_name_of_type[inst.type_index]] += amt
+                self._bill_type(amt, inst.type_index)
+        if self._commit:
+            # standing pool bills: every slot, used or idle, exactly once
+            # per pool-hour — plus the utilization integrals
+            hours = dt / 3600.0
+            for ri, _cm in self._pools:
+                size = self._pool_size[ri]
+                amt = hours * size * self._pool_rate[ri]
+                m.commitment_cost += amt
+                self._bill_region(amt, ri)
+                self._pool_capacity_s[ri] += dt * size
+                self._pool_covered_s[ri] += dt * min(
+                    self._region_alive[ri], size)
         for js in self._active_jobs.values():
             if js.rate > 0:
                 js.iters_done += js.rate * dt
@@ -712,7 +817,7 @@ class Simulator:
         if self._regions is None:
             return True
         r = int(self._region_ids[k])
-        cap = self._regions[r].max_instances
+        cap = self._region_limits[r]  # mutable: commitment re-sizes grow it
         if cap is None:
             return True
         return self._region_alive[r] < cap
@@ -750,13 +855,12 @@ class Simulator:
         self._alive.pop(inst.iid, None)
         if self._regions is not None:
             self._region_alive[int(self._region_ids[inst.type_index])] -= 1
+        if self._commit and self._pool_type[inst.type_index]:
+            return  # pool slots bill the standing rate, never per instance
         if not self._spot:  # spot billing is integrated in _accrue instead
             amt = ((self.now - inst.request_t) / 3600.0
                    * self.catalog.costs[inst.type_index])
-            self.metrics.total_cost += amt
-            if self._regions is not None:
-                self.metrics.cost_by_region[
-                    self._region_name_of_type[inst.type_index]] += amt
+            self._bill_type(amt, inst.type_index)
 
     def _maybe_finish_drain(self, inst: _Instance):
         if inst.draining and inst.alive and not inst.residents and not inst.assigned:
@@ -788,9 +892,8 @@ class Simulator:
             return 0.0
         gb = checkpoint_size_gb(workload)
         fee = self.catalog.transfer.egress_usd(r_s, r_d, gb)
-        self.metrics.total_cost += fee
+        self._bill_region(fee, r_s)
         self.metrics.egress_cost += fee
-        self.metrics.cost_by_region[self._regions[r_s].name] += fee
         self.metrics.cross_region_migrations += 1
         return (self.catalog.transfer.transfer_time_s(r_s, r_d, gb)
                 * self.cfg.migration_delay_scale)
@@ -1027,7 +1130,30 @@ class Simulator:
             service_capacity=service_cap or None, slo_risk=slo_risk or None,
             service_specs=specs or None)
         config = self.scheduler.schedule(view)
+        if self._commit:
+            self._apply_commitment_orders()
         self._execute_config(config)
+
+    def _apply_commitment_orders(self) -> None:
+        """Poll the scheduler for commitment re-sizes (the inventory
+        decision, polled like ``admission``) and grow pools monotonically:
+        commitments can be bought mid-run but never un-bought, so orders
+        below the current pool size are ignored."""
+        orders = getattr(self.scheduler, "commitment_orders", None)
+        if not orders:
+            return
+        for name, size in orders.items():
+            try:
+                ri = self.catalog.region_index(name)
+            except KeyError:
+                continue
+            if self._regions[ri].commitment is None:
+                continue
+            size = int(size)
+            if size > self._pool_size[ri]:
+                self._pool_size[ri] = size
+                self._region_limits[ri] = size
+                self.metrics.commitment_resizes += 1
 
     def _schedule_next_round(self):
         interval = self.cfg.round_interval_s
@@ -1300,6 +1426,15 @@ class Simulator:
         # drain any leftover instances at the end
         for inst in list(self._alive.values()):
             self._terminate(inst)
+        if self._commit:  # finalize the pool ledgers
+            for ri, _cm in self._pools:
+                cap_s = self._pool_capacity_s[ri]
+                cov_s = self._pool_covered_s[ri]
+                self.metrics.commitment_utilization[
+                    self._regions[ri].name] = \
+                    cov_s / cap_s if cap_s > 0.0 else 0.0
+                self.metrics.commitment_idle_cost += \
+                    (cap_s - cov_s) / 3600.0 * self._pool_rate[ri]
         if self._deferrals:  # deadlines blown by never finishing count too
             for js in self.jobs.values():
                 if (js.done_t is None and js.job.deadline_s is not None

@@ -23,6 +23,11 @@
   deadline-*loose* ones (hours of slack to wait out dear markets); the
   bundled trace for ``benchmarks/bench_autoscale.py`` and the autoscale
   tests.
+* ``portfolio_trace`` — the commitment-portfolio axis: a steady base of
+  horizon-long jobs shaped to fill reserved capacity exactly, plus bursty
+  waves of short jobs that overflow onto the spot/on-demand markets; the
+  bundled trace for ``benchmarks/bench_portfolio.py`` and the portfolio
+  tests.
 * ``serving_trace`` — the online-serving axis: diurnal million-user request
   load with surge windows split across two inference fleets (GPU llm-serve,
   CPU embed-serve) that run for the whole horizon, plus batch filler jobs;
@@ -241,6 +246,42 @@ def alibaba_like_trace(n_jobs: int = 6274, seed: int = 0,
             n_tasks = int(rng.choice([2, 4]))
         jobs.append(_custom_job(w, t, float(durations[i]), (g, cpu, ram),
                                 n_tasks))
+    return jobs
+
+
+def portfolio_trace(n_steady: int = 6, n_burst: int = 10, seed: int = 23,
+                    horizon_h: float = 8.0, steady_demand=(0.0, 7.0, 14.0),
+                    steady_start_h: float = 0.1, steady_span: float = 0.88,
+                    burst_waves=((0.30, 0.40), (0.60, 0.72)),
+                    burst_duration_h=(0.3, 0.7)) -> List[Job]:
+    """Steady committed base + bursty spot overflow (the commitment story).
+
+    ``n_steady`` horizon-long single-task jobs arrive near t=0 with a
+    demand (``steady_demand``, default 7 vCPU / 14 GB) sized so each fills
+    one c7i.2xlarge — the hardware ``benchmarks/bench_portfolio.py``
+    commits — and runs for ``steady_span`` of the horizon: the persistent
+    base a commitment pool should absorb at the discounted rate.
+    ``n_burst`` short CPU jobs arrive in waves (horizon fractions in
+    ``burst_waves``) on top: transient demand that should overflow to the
+    spot market, *not* grow the commitment.  A portfolio policy beats both
+    pure-spot (the base pays spot prices all day) and pure-commit (pools
+    sized for the burst peak idle between waves) on this trace."""
+    rng = np.random.default_rng(seed)
+    horizon_s = horizon_h * 3600.0
+    jobs: List[Job] = []
+    for _ in range(n_steady):
+        t = steady_start_h * 3600.0 * rng.uniform(0.2, 1.0)
+        w = int(rng.choice(_CPU_WORKLOADS))
+        jobs.append(_custom_job(w, t, steady_span * horizon_s,
+                                steady_demand, n_tasks=1))
+    waves = [w for w in burst_waves]
+    for i in range(n_burst):
+        f0, f1 = waves[i % len(waves)]
+        t = rng.uniform(f0, f1) * horizon_s
+        w = int(rng.choice(_CPU_WORKLOADS))
+        dur = rng.uniform(*burst_duration_h) * 3600.0
+        jobs.append(_custom_job(w, t, dur, steady_demand, n_tasks=1))
+    jobs.sort(key=lambda j: j.arrival_time)
     return jobs
 
 

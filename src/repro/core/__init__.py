@@ -1,12 +1,13 @@
 # The paper's primary contribution: Eva's cost-efficient cloud-based cluster
 # scheduling — reservation-price provisioning (Algorithm 1), TNRP interference
 # awareness, multi-task attribution, and the Full/Partial ensemble criterion.
-from .catalog import (AWS_CATALOG, Catalog, CreditModel, InstanceType,
-                      MeanRevertingPriceModel, PriceModel, Region,
+from .catalog import (AWS_CATALOG, Catalog, CommitmentModel, CreditModel,
+                      InstanceType, MarketPriceModel,
+                      MeanRevertingPriceModel, PriceModel, Provider, Region,
                       RegionPriceModel, TracePriceModel, TransferMatrix,
                       aws_catalog, burstable_demo_catalog,
-                      dispersed_demo_regions, multi_region_catalog,
-                      table3_catalog)
+                      dispersed_demo_regions, multi_provider_catalog,
+                      multi_region_catalog, table3_catalog)
 from .cluster_types import (Assignment, ClusterConfig, Job, Task, TaskSet,
                             make_job, make_task)
 from .ensemble import EventRateEstimator, choose, mean_time_to_full_reconfig
@@ -26,11 +27,12 @@ from .workloads import (M_TRUE, NUM_BATCH_WORKLOADS, NUM_WORKLOADS, WORKLOADS,
                         checkpoint_size_gb, true_throughput)
 
 __all__ = [
-    "AWS_CATALOG", "Catalog", "CreditModel", "InstanceType",
-    "MeanRevertingPriceModel",
-    "PriceModel", "Region", "RegionPriceModel", "TracePriceModel",
+    "AWS_CATALOG", "Catalog", "CommitmentModel", "CreditModel",
+    "InstanceType", "MarketPriceModel", "MeanRevertingPriceModel",
+    "PriceModel", "Provider", "Region", "RegionPriceModel",
+    "TracePriceModel",
     "TransferMatrix", "aws_catalog", "burstable_demo_catalog",
-    "dispersed_demo_regions",
+    "dispersed_demo_regions", "multi_provider_catalog",
     "multi_region_catalog", "table3_catalog",
     "Assignment", "ClusterConfig", "Job", "Task", "TaskSet", "make_job",
     "make_task", "EventRateEstimator", "choose", "mean_time_to_full_reconfig",

@@ -41,10 +41,31 @@ Public API (see docs/ARCHITECTURE.md for how it plugs into scheduling):
   market (on-demand AWS types + discounted burstable c7i variants) used by
   ``benchmarks/bench_credits.py`` and the credit tests.
 
+* ``CommitmentModel`` / ``Provider`` / ``multi_provider_catalog()`` — the
+  commitment-portfolio + multi-provider layer: a provider is a market
+  ``Region`` (all base types, its own price model / cost scale / hazard
+  scale / egress rate) plus one *pool* ``Region`` per commitment — a
+  1yr/3yr-style reserved-capacity pool holding only the committed type at
+  the discounted rate, bounded by ``max_instances = pool_size`` so the
+  existing region-cap machinery (planner budgets + simulator launch
+  denial) bounds the pool.  A committed pool bills its discounted rate
+  for every pool slot whether used or idle (the simulator's standing
+  pool bill); overflow rides the provider's market region at the spot /
+  on-demand ``PriceModel``.  The provider-aware ``TransferMatrix`` prices
+  intra-provider moves at zero egress and near-zero transfer time, and
+  cross-provider moves at the *source* provider's egress rate — so the
+  existing S·D̂ > ΔM machinery automatically prices inter-provider
+  arbitrage.  ``MarketPriceModel`` generalizes ``RegionPriceModel`` to
+  heterogeneous region blocks (21-type markets next to 1-type pools).
+
 Single-region catalogs carry ``regions=None`` and take none of the
 multi-region code paths: their behaviour is bit-for-bit the PR-1 catalog.
 Catalogs without burstable types carry ``credit_models=None`` and take none
 of the credit code paths (``credit_priced`` is the identity there).
+Catalogs without commitment pools carry no ``Region.commitment`` and take
+none of the commitment code paths; a single-provider, commitment-free
+``multi_provider_catalog`` is decision-identical to the equivalent
+``multi_region_catalog`` (pinned in ``tests/test_policies.py``).
 """
 from __future__ import annotations
 
@@ -126,6 +147,44 @@ class CreditModel:
             return 1.0
         return (t_full + (horizon_h - t_full) * self.baseline_fraction) \
             / horizon_h
+
+
+@dataclasses.dataclass(frozen=True)
+class CommitmentModel:
+    """A reserved-capacity commitment (1yr/3yr RI / savings-plan style).
+
+    A commitment buys ``pool_size`` slots of one instance type at
+    ``rate_fraction`` × the on-demand price.  The pool bills its
+    discounted rate for *every* slot *every* hour, used or idle — the
+    defining asymmetry of committed capacity: the marginal price of
+    placing work on an already-paid slot is ≈ 0, while an idle slot is
+    pure waste.  Overflow beyond the pool rides the provider's market
+    (spot / on-demand ``PriceModel``).  Committed capacity is reserved:
+    pool instances are never spot-preempted (the pool region carries
+    ``hazard_scale = 0``).
+
+    ``term_s`` is metadata for reporting (the nominal commitment term);
+    billing inside a simulation run is per pool-hour regardless.
+    """
+
+    instance_type: str
+    pool_size: int
+    rate_fraction: float = 0.6
+    term_s: float = 365.0 * 86400.0
+
+    def __post_init__(self):
+        assert self.pool_size >= 0
+        assert 0.0 < self.rate_fraction <= 1.0
+        assert self.term_s > 0.0
+
+    def hourly_rate(self, on_demand_cost: float) -> float:
+        """Committed $/hour for one pool slot of a type whose on-demand
+        price is ``on_demand_cost``."""
+        return float(on_demand_cost) * self.rate_fraction
+
+    def standing_usd_per_hour(self, on_demand_cost: float) -> float:
+        """The pool's standing bill: every slot, used or idle."""
+        return self.pool_size * self.hourly_rate(on_demand_cost)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -327,6 +386,14 @@ class Region:
                     None = unlimited.  The simulator denies launches beyond
                     it and the multi-region scheduler packs around full
                     regions.
+    provider      : owning cloud provider (multi-provider catalogs only;
+                    None = provider-less, the pre-commitment behaviour).
+                    Regions of the same provider transfer data for free.
+    commitment    : set on commitment-*pool* regions only: the pool bills
+                    ``commitment.pool_size`` slots at the discounted rate
+                    every hour regardless of use, and ``max_instances``
+                    equals the pool size so the existing region-cap
+                    machinery bounds it.  None = ordinary market region.
     """
 
     name: str
@@ -334,6 +401,8 @@ class Region:
     cost_scale: float = 1.0
     hazard_scale: float = 1.0
     max_instances: Optional[int] = None
+    provider: Optional[str] = None
+    commitment: Optional[CommitmentModel] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -358,6 +427,30 @@ class TransferMatrix:
         e = np.full((n_regions, n_regions), float(egress_usd_per_gb))
         b = np.full((n_regions, n_regions), float(bandwidth_gbps))
         np.fill_diagonal(e, 0.0)
+        return TransferMatrix(e, b)
+
+    @staticmethod
+    def for_providers(region_providers: Sequence[Optional[str]],
+                      egress_usd_per_gb: Dict[str, float],
+                      cross_bandwidth_gbps: float = 5.0,
+                      intra_bandwidth_gbps: float = 50.0) -> "TransferMatrix":
+        """Provider-aware transfer costs.
+
+        Moves between regions of the *same* provider (a market and its
+        commitment pools) pay zero egress over fat intra-provider links;
+        cross-provider moves pay the **source** provider's egress rate
+        (clouds bill data out, not in) over ``cross_bandwidth_gbps``.
+        The S·D̂ > ΔM arbitrage machinery therefore prices inter-provider
+        moves automatically through the existing ``task_move_cost`` path.
+        """
+        n = len(region_providers)
+        e = np.zeros((n, n))
+        b = np.full((n, n), float(intra_bandwidth_gbps))
+        for i, p_i in enumerate(region_providers):
+            for j, p_j in enumerate(region_providers):
+                if i != j and p_i != p_j:
+                    e[i, j] = float(egress_usd_per_gb.get(p_i, 0.0))
+                    b[i, j] = float(cross_bandwidth_gbps)
         return TransferMatrix(e, b)
 
     def transfer_time_s(self, src: int, dst: int, size_gb: float) -> float:
@@ -422,6 +515,69 @@ class RegionPriceModel(PriceModel):
         return np.concatenate([m.pressure_at(self.n_base, time_s) * h
                                for m, h in zip(self.models,
                                                self.hazard_scales)])
+
+
+class MarketPriceModel(PriceModel):
+    """Composite price model for heterogeneous region blocks.
+
+    Generalizes ``RegionPriceModel`` to catalogs whose regions hold
+    *different* numbers of types — a provider's full 21-type market next
+    to its 1-type commitment pools.  Block ``i`` covers ``counts[i]``
+    consecutive types priced by ``models[i]`` with preemption pressure
+    scaled by ``hazard_scales[i]`` (0 for reserved pools: committed
+    capacity is never spot-preempted).
+
+    Deliberately *not* a ``RegionPriceModel`` subclass: the forecaster
+    dispatch (``PriceForecaster.for_model``) keys on the classes, and the
+    uniform-block ``RegionForecaster`` cannot serve heterogeneous blocks.
+    With one block this is numerically identical to a one-region
+    ``RegionPriceModel`` (pinned in ``tests/test_policies.py``).
+    """
+
+    kind = "multi-provider"
+
+    def __init__(self, models: Sequence[PriceModel],
+                 hazard_scales: Sequence[float], counts: Sequence[int]):
+        self.models = tuple(m if m is not None else PriceModel.static()
+                            for m in models)
+        self.hazard_scales = tuple(float(h) for h in hazard_scales)
+        self.counts = tuple(int(c) for c in counts)
+        assert len(self.models) == len(self.hazard_scales) \
+            == len(self.counts)
+        self.is_static = all(m.is_static for m in self.models)
+        means = []
+        for m, c in zip(self.models, self.counts):
+            mm = np.asarray(m.mean_multiplier, dtype=np.float64)
+            means.append(np.full(c, float(mm)) if mm.ndim == 0
+                         else np.broadcast_to(mm, (c,)))
+        self.mean_multiplier = np.concatenate(means)
+        # same grid-propagation contract as RegionPriceModel: the simulator
+        # samples no coarser than the finest sub-grid and exactly at trace
+        # breakpoints
+        steps = [m.step_s for m in self.models if hasattr(m, "step_s")]
+        if steps:
+            self.step_s = min(steps)
+        times = sorted({float(t) for m in self.models
+                        for t in np.asarray(getattr(m, "times_s", ()),
+                                            dtype=np.float64).tolist()})
+        if times:
+            self.times_s = np.asarray(times, dtype=np.float64)
+
+    def _check(self, n_types: int) -> None:
+        assert n_types == sum(self.counts), \
+            f"expected {sum(self.counts)} types in blocks {self.counts}, " \
+            f"got {n_types}"
+
+    def multipliers_at(self, n_types: int, time_s: float) -> np.ndarray:
+        self._check(n_types)
+        return np.concatenate([m.multipliers_at(c, time_s)
+                               for m, c in zip(self.models, self.counts)])
+
+    def pressure_at(self, n_types: int, time_s: float) -> np.ndarray:
+        self._check(n_types)
+        return np.concatenate([m.pressure_at(c, time_s) * h
+                               for m, c, h in zip(self.models, self.counts,
+                                                  self.hazard_scales)])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -498,6 +654,37 @@ class Catalog:
     def region_type_mask(self, region: int) -> np.ndarray:
         """(K,) bool: which types live in ``region`` (index)."""
         return self.region_ids == int(region)
+
+    # -- providers & commitments --------------------------------------------
+    @property
+    def has_commitments(self) -> bool:
+        return self.regions is not None and \
+            any(r.commitment is not None for r in self.regions)
+
+    @property
+    def has_providers(self) -> bool:
+        return self.regions is not None and \
+            any(r.provider is not None for r in self.regions)
+
+    def commitment_pools(self) -> tuple:
+        """((region_index, CommitmentModel), ...) over pool regions."""
+        if self.regions is None:
+            return ()
+        return tuple((i, r.commitment) for i, r in enumerate(self.regions)
+                     if r.commitment is not None)
+
+    def commitment_type_mask(self) -> np.ndarray:
+        """(K,) bool: types living in a commitment-pool region."""
+        out = np.zeros(len(self), dtype=bool)
+        for i, _cm in self.commitment_pools():
+            out |= self.region_ids == i
+        return out
+
+    def provider_of(self, k: int) -> Optional[str]:
+        """Owning provider of type ``k`` (None on provider-less catalogs)."""
+        if self.regions is None or self.region_ids is None:
+            return None
+        return self.regions[int(self.region_ids[k])].provider
 
     def cheapest_copy(self, k: int,
                       type_mask: Optional[np.ndarray] = None) -> int:
@@ -628,6 +815,104 @@ def multi_region_catalog(regions: Sequence[Region],
         transfer = TransferMatrix.uniform(len(regions))
     return dataclasses.replace(
         cat, regions=regions,
+        region_ids=np.asarray(rids, dtype=np.int64),
+        base_index=np.asarray(bidx, dtype=np.int64), transfer=transfer)
+
+
+# --------------------------------------------------------------------------
+# multi-provider construction (commitment-portfolio layer)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Provider:
+    """One cloud provider: a market plus an optional commitment portfolio.
+
+    price_model / cost_scale / hazard_scale / max_instances configure the
+    provider's *market* region exactly like ``Region``;
+    ``egress_usd_per_gb`` is the rate billed when data leaves this
+    provider; ``commitments`` is a tuple of ``CommitmentModel`` — each
+    becomes a dedicated reserved-capacity pool region.
+    """
+
+    name: str
+    price_model: Optional[PriceModel] = None
+    cost_scale: float = 1.0
+    hazard_scale: float = 1.0
+    max_instances: Optional[int] = None
+    egress_usd_per_gb: float = 0.02
+    commitments: tuple = ()
+
+
+def multi_provider_catalog(providers: Sequence[Provider],
+                           base_types: Sequence[InstanceType] = AWS_CATALOG,
+                           transfer: Optional[TransferMatrix] = None,
+                           cross_bandwidth_gbps: float = 5.0,
+                           intra_bandwidth_gbps: float = 50.0) -> Catalog:
+    """Expand ``base_types`` across provider markets + commitment pools.
+
+    Each provider contributes one *market* region holding every base type
+    at ``cost_scale`` × on-demand moving with its ``price_model``, plus
+    one single-type *pool* region per commitment: ``pool_size`` slots of
+    the committed type at the discounted static rate, hazard 0 (reserved
+    capacity is never preempted), ``max_instances = pool_size``.  Region
+    blocks are heterogeneous, so the composite is a ``MarketPriceModel``;
+    ``base_index`` maps every copy (market or pool, any provider) of the
+    same hardware together, so ``cheapest_copy`` / the arbitrage repack
+    shop across providers and pools transparently.  The default transfer
+    matrix is ``TransferMatrix.for_providers`` (intra-provider free).
+
+    Composes with the whole existing catalog algebra: ``at(time_s)``
+    snapshots the market blocks (pool blocks are static), and
+    ``credit_priced`` / forecast snapshots work unchanged.  A
+    single-provider, commitment-free call is decision-identical to
+    ``multi_region_catalog`` with one region.
+    """
+    providers = tuple(providers)
+    base = tuple(base_types)
+    assert providers, "need at least one provider"
+    by_name = {t.name: t for t in base}
+    regions, blocks = [], []  # blocks[i] = list of (InstanceType, base_idx)
+    for p in providers:
+        market = Region(p.name, price_model=p.price_model,
+                        cost_scale=p.cost_scale, hazard_scale=p.hazard_scale,
+                        max_instances=p.max_instances, provider=p.name)
+        regions.append(market)
+        blocks.append([
+            (InstanceType(f"{p.name}/{t.name}", t.family, t.capacity,
+                          t.hourly_cost * p.cost_scale,
+                          credit_model=t.credit_model), b_i)
+            for b_i, t in enumerate(base)])
+        for cm in p.commitments:
+            t = by_name[cm.instance_type]  # KeyError = unknown committed type
+            pool = Region(f"{p.name}/commit-{cm.instance_type}",
+                          cost_scale=p.cost_scale * cm.rate_fraction,
+                          hazard_scale=0.0, max_instances=cm.pool_size,
+                          provider=p.name, commitment=cm)
+            regions.append(pool)
+            blocks.append([
+                (InstanceType(f"{pool.name}/{t.name}", t.family, t.capacity,
+                              cm.hourly_rate(t.hourly_cost * p.cost_scale),
+                              credit_model=t.credit_model),
+                 base.index(t))])
+    types, rids, bidx = [], [], []
+    for r_i, block in enumerate(blocks):
+        for t, b_i in block:
+            types.append(t)
+            rids.append(r_i)
+            bidx.append(b_i)
+    pm: Optional[PriceModel] = None
+    if any(r.price_model is not None for r in regions):
+        pm = MarketPriceModel([r.price_model for r in regions],
+                              [r.hazard_scale for r in regions],
+                              [len(block) for block in blocks])
+    cat = Catalog.from_types(types, pm)
+    if transfer is None:
+        transfer = TransferMatrix.for_providers(
+            [r.provider for r in regions],
+            {p.name: p.egress_usd_per_gb for p in providers},
+            cross_bandwidth_gbps=cross_bandwidth_gbps,
+            intra_bandwidth_gbps=intra_bandwidth_gbps)
+    return dataclasses.replace(
+        cat, regions=tuple(regions),
         region_ids=np.asarray(rids, dtype=np.int64),
         base_index=np.asarray(bidx, dtype=np.int64), transfer=transfer)
 

@@ -271,6 +271,18 @@ class EvaScheduler(SchedulerBase):
         return None if layer is None else layer.controller
 
     @property
+    def commitment_orders(self) -> Optional[Dict[str, int]]:
+        """Pool-region-name -> desired pool size from portfolio layers —
+        the inventory channel the simulator polls after each round (like
+        ``admission``), applied monotonically (pools grow, never shrink)."""
+        out: Dict[str, int] = {}
+        for la in self.stack:
+            orders = getattr(la, "commitment_orders", None)
+            if orders:
+                out.update(orders)
+        return out or None
+
+    @property
     def arbitrage_moves(self) -> int:
         return sum(getattr(la, "arbitrage_moves", 0) for la in self.stack)
 

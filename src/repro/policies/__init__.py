@@ -5,6 +5,7 @@ from .base import PLANNING, SNAPSHOT, PolicyLayer, PolicyStack
 from .layers import (AdmissionLayerBase, AutoscaleLayer, CreditLayer,
                      MultiRegionLayer, RegionPinLayer, SpotLayer,
                      stack_from_flags)
+from .portfolio import PortfolioLayer
 from .pressure import (CREDIT, DEADLINE, KINDS, SLO, SPOT, PressureBus,
                        PressureSignal, dirty_instance_ids)
 from .slo import SLOLayer
@@ -13,7 +14,8 @@ from .stability import StabilityController, StabilityLayer
 __all__ = [
     "PLANNING", "SNAPSHOT", "PolicyLayer", "PolicyStack",
     "AdmissionLayerBase", "AutoscaleLayer", "CreditLayer",
-    "MultiRegionLayer", "RegionPinLayer", "SpotLayer", "stack_from_flags",
+    "MultiRegionLayer", "PortfolioLayer", "RegionPinLayer", "SpotLayer",
+    "stack_from_flags",
     "CREDIT", "DEADLINE", "KINDS", "SLO", "SPOT", "PressureBus",
     "PressureSignal", "dirty_instance_ids",
     "SLOLayer",

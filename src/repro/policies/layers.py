@@ -373,6 +373,7 @@ class AutoscaleLayer(AdmissionLayerBase):
 def stack_from_flags(*, spot_aware: bool = False, multi_region: bool = False,
                      credit_aware: bool = False, autoscale: bool = False,
                      stability: bool = False, slo: bool = False,
+                     portfolio: bool = False,
                      region: Optional[str] = None,
                      admission=None, strike: Optional[float] = None,
                      v: Optional[float] = None,
@@ -395,6 +396,9 @@ def stack_from_flags(*, spot_aware: bool = False, multi_region: bool = False,
         layers.append(RegionPinLayer(region))
     if credit_aware:
         layers.append(CreditLayer())
+    if portfolio:
+        from .portfolio import PortfolioLayer
+        layers.append(PortfolioLayer())
     # strike / v fall back to each layer's own default when not given
     knobs = {k: val for k, val in (("strike", strike), ("v", v))
              if val is not None}

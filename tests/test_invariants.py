@@ -7,8 +7,15 @@ matter which scenario axes are stacked:
 
 * **billing conservation** — on static catalogs the total cost equals the
   per-instance recompute (lifetime × hourly price, summed over every
-  instance ever launched) plus egress; on multi-region catalogs the
-  per-region ledger sums to the total either way;
+  instance ever launched — commitment-pool instances excluded: they bill
+  zero marginal) plus the standing pool bills (pool capacity-hours × the
+  discounted rate: each pool-hour paid exactly once, used or idle) plus
+  egress; on multi-region catalogs the per-region ledger sums to the
+  total either way, and on multi-provider catalogs so does the
+  per-provider ledger;
+* **commitment accounting** — ``commitment_cost`` re-derives from the
+  capacity integral, utilization stays in [0, 1], and idle waste is
+  exactly the uncovered capacity-hours at the discounted rate;
 * **egress exactly once** — each cross-region checkpoint move bills the
   egress fee exactly once (the instrumented charge log matches both the
   egress total and the migration counter);
@@ -29,14 +36,15 @@ import pytest
 
 from repro.autoscale import latest_start_s
 from repro.cluster import (SimConfig, Simulator, burstable_trace,
-                           deferrable_trace, physical_trace)
-from repro.core import (EvaScheduler, PriceModel, RequestProfile, ServiceSpec,
-                        UtilityCurve, aws_catalog, burstable_demo_catalog,
+                           deferrable_trace, physical_trace, portfolio_trace)
+from repro.core import (CommitmentModel, EvaScheduler, PriceModel, Provider,
+                        RequestProfile, ServiceSpec, UtilityCurve,
+                        aws_catalog, burstable_demo_catalog,
                         dispersed_demo_regions, make_job,
-                        multi_region_catalog)
+                        multi_provider_catalog, multi_region_catalog)
 from repro.core.workloads import WORKLOAD_INDEX, checkpoint_size_gb
 from repro.policies import (AutoscaleLayer, CreditLayer, MultiRegionLayer,
-                            SLOLayer, SpotLayer)
+                            PortfolioLayer, SLOLayer, SpotLayer)
 
 EMBED = WORKLOAD_INDEX["embed-serve"]
 
@@ -80,6 +88,16 @@ def _compose(catalog_kind, spot, deferrable, service, hazard, n_jobs, seed):
     if catalog_kind == "multiregion":
         cat = multi_region_catalog(dispersed_demo_regions(2))
         layers = [SpotLayer(), MultiRegionLayer()]
+    elif catalog_kind == "provider":
+        # two providers + a commitment pool: the full portfolio grid
+        cm = CommitmentModel(instance_type="c7i.2xlarge", pool_size=2,
+                             rate_fraction=0.5)
+        pm2 = PriceModel.mean_reverting(discount=0.45, seed=seed + 2) \
+            if spot else None
+        cat = multi_provider_catalog([
+            Provider(name="aws", price_model=pm, commitments=(cm,)),
+            Provider(name="gcp", cost_scale=1.03, price_model=pm2)])
+        layers = [SpotLayer(), MultiRegionLayer(), PortfolioLayer()]
     elif catalog_kind == "burstable":
         cat = burstable_demo_catalog(price_model=pm)
         layers = [SpotLayer(), CreditLayer()]
@@ -91,6 +109,10 @@ def _compose(catalog_kind, spot, deferrable, service, hazard, n_jobs, seed):
         layers.append(AutoscaleLayer(strike=0.9))
     elif catalog_kind == "burstable":
         jobs = burstable_trace(n_jobs=n_jobs, seed=seed)
+    elif catalog_kind == "provider":
+        # steady base that can fill the pool + bursts that overflow it
+        jobs = portfolio_trace(n_steady=2, n_burst=n_jobs, seed=seed,
+                               horizon_h=2.0)
     else:
         jobs = physical_trace(n_jobs=n_jobs, seed=seed,
                               duration_range_h=(0.2, 0.5))
@@ -112,22 +134,71 @@ def _run_composed(catalog_kind, spot, deferrable, service, hazard, n_jobs,
     return sim, m, cat, jobs
 
 
+def _pool_standing(sim):
+    """Σ pool capacity-hours × discounted rate (the exactly-once pool bill)."""
+    if not getattr(sim, "_commit", False):
+        return 0.0
+    return sum(sim._pool_capacity_s[ri] / 3600.0 * sim._pool_rate[ri]
+               for ri, _cm in sim._pools)
+
+
 def _check_conservation(sim, m, cat, jobs):
-    # --- billing: every instance ever launched, lifetime × hourly price
+    # --- billing: every instance ever launched, lifetime × hourly price;
+    # pool instances bill zero marginal (the standing pool bill — capacity-
+    # hours × discounted rate, exactly once per pool-hour — covers them)
     assert m.total_cost >= 0.0
+    pool_inst = lambda inst: (getattr(sim, "_commit", False)  # noqa: E731
+                              and sim._pool_type[inst.type_index])
     if not sim._spot:
         recomputed = sum(
             (inst.terminated_t - inst.request_t) / 3600.0
             * cat.costs[inst.type_index]
-            for inst in sim.instances.values())
-        assert m.total_cost == pytest.approx(recomputed + m.egress_cost,
-                                             rel=1e-9, abs=1e-9)
+            for inst in sim.instances.values() if not pool_inst(inst))
+        assert m.total_cost == pytest.approx(
+            recomputed + _pool_standing(sim) + m.egress_cost,
+            rel=1e-9, abs=1e-9)
     for inst in sim.instances.values():  # nothing left accruing
         assert inst.terminated_t is not None
-    # --- multi-region: the per-region ledger sums to the total
-    if m.cost_by_region:
+    # --- ledgers: always present (empty-safe dicts), gated by explicit
+    # flags; each ledger sums to the total on its axis
+    assert isinstance(m.cost_by_region, dict)
+    assert isinstance(m.cost_by_provider, dict)
+    assert isinstance(m.commitment_utilization, dict)
+    assert m.has_regions == (cat.regions is not None)
+    if m.has_regions:
         assert m.total_cost == pytest.approx(
             sum(m.cost_by_region.values()), rel=1e-9, abs=1e-9)
+    else:
+        assert m.cost_by_region == {}
+    assert m.has_providers == (cat.regions is not None and any(
+        r.provider is not None for r in cat.regions))
+    if m.has_providers:
+        assert m.total_cost == pytest.approx(
+            sum(m.cost_by_provider.values()), rel=1e-9, abs=1e-9)
+    else:
+        assert m.cost_by_provider == {}
+    # --- commitments: standing bill re-derived from the capacity integral,
+    # utilization bounded, idle waste = uncovered capacity at the rate
+    assert m.has_commitments == cat.has_commitments
+    if m.has_commitments:
+        assert m.commitment_cost == pytest.approx(_pool_standing(sim),
+                                                  rel=1e-9, abs=1e-9)
+        assert m.commitment_cost <= m.total_cost + 1e-9
+        idle = 0.0
+        for ri, _cm in sim._pools:
+            name = cat.regions[ri].name
+            util = m.commitment_utilization[name]
+            assert 0.0 <= util <= 1.0 + 1e-12
+            cap_s = sim._pool_capacity_s[ri]
+            cov_s = sim._pool_covered_s[ri]
+            assert 0.0 <= cov_s <= cap_s + 1e-9
+            idle += (cap_s - cov_s) / 3600.0 * sim._pool_rate[ri]
+        assert m.commitment_idle_cost == pytest.approx(idle, rel=1e-9,
+                                                       abs=1e-9)
+    else:
+        assert m.commitment_cost == 0.0
+        assert m.commitment_idle_cost == 0.0
+        assert m.commitment_utilization == {}
     # --- egress: exactly once per cross-region move, fee re-derived
     assert len(sim.egress_calls) == m.cross_region_migrations
     if cat.transfer is not None:
@@ -166,6 +237,8 @@ SEEDED = [
     ("aws", True, False, True, 0.4, 4, 2),
     ("multiregion", False, False, True, 0.0, 3, 5),
     ("burstable", True, True, False, 0.3, 4, 8),
+    ("provider", True, False, False, 0.3, 3, 11),
+    ("provider", False, False, True, 0.0, 3, 21),
 ]
 
 
@@ -195,6 +268,41 @@ def test_no_billing_while_pending():
     _check_conservation(sim, m, cat, jobs)
 
 
+def test_ledgers_always_present_and_gated():
+    """Regression for the latent ledger gap: every ledger dict exists on
+    every run (empty-safe — no AttributeError / KeyError probing), and
+    ``summary()`` keys are gated by the explicit ``has_*`` flags, not dict
+    truthiness (a multi-region run whose ledger happens to be all-zero
+    must still report it)."""
+    # single-region, commitment-free: flags off, ledgers empty, no keys
+    sim, m, _, _ = _run_composed("aws", False, False, False, 0.0, 2, 3)
+    assert (m.has_regions, m.has_providers, m.has_commitments) == \
+        (False, False, False)
+    assert m.cost_by_region == {} and m.cost_by_provider == {}
+    assert m.commitment_utilization == {}
+    s = m.summary()
+    assert "egress_cost" not in s and "capacity_denied" not in s
+    assert not any(k.startswith(("cost_provider_", "util_")) for k in s)
+    assert "commitment_cost" not in s
+    # multi-region without providers: region keys present even while the
+    # provider axis stays silent
+    sim, m, cat_mr, _ = _run_composed("multiregion", False, False, False,
+                                      0.0, 2, 3)
+    assert m.has_regions and not m.has_providers
+    s = m.summary()
+    assert "egress_cost" in s
+    assert all(f"cost_{r.name}" in s for r in cat_mr.regions)
+    assert not any(k.startswith("cost_provider_") for k in s)
+    # full provider grid: all three axes report
+    sim, m, cat, _ = _run_composed("provider", False, False, False, 0.0,
+                                   2, 3)
+    assert m.has_regions and m.has_providers and m.has_commitments
+    s = m.summary()
+    assert any(k.startswith("cost_provider_") for k in s)
+    assert any(k.startswith("util_") for k in s)
+    assert "commitment_cost" in s and "commitment_idle_cost" in s
+
+
 # ------------------------------------------------------- hypothesis sweep
 @pytest.fixture(scope="module")
 def _hyp():
@@ -214,7 +322,8 @@ def test_conservation_random_compositions(_hyp):
     @settings(max_examples=8, deadline=None, derandomize=True,
               suppress_health_check=[HealthCheck.too_slow])
     @given(
-        kind=st.sampled_from(["aws", "multiregion", "burstable"]),
+        kind=st.sampled_from(["aws", "multiregion", "burstable",
+                              "provider"]),
         spot=st.booleans(),
         deferrable=st.booleans(),
         service=st.booleans(),

@@ -293,6 +293,85 @@ def test_slo_layer_is_bit_identical_on_batch_traces():
          lambda: [SpotLayer(), AutoscaleLayer(strike=0.9), SLOLayer()])))
 
 
+def test_portfolio_layer_is_bit_identical_without_pools():
+    """PR 8 contract: ``PortfolioLayer`` in the stack leaves every decision
+    on a *commitment-free* catalog bit-identical — every hook is the
+    identity when the catalog carries no pools, so pre-portfolio runs
+    replay exactly."""
+    from repro.policies import PortfolioLayer
+    pm = PriceModel.mean_reverting(discount=0.35, seed=7)
+    _assert_bit_identical(_stack_decisions(
+        lambda: aws_catalog(price_model=pm),
+        lambda: physical_trace(n_jobs=8, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(seed=5, preemption_hazard_per_hour=0.5),
+        (lambda: [SpotLayer()],
+         lambda: [SpotLayer(), PortfolioLayer()])))
+    # and on a multi-region catalog (the closest pre-existing axis)
+    _assert_bit_identical(_stack_decisions(
+        lambda: multi_region_catalog(dispersed_demo_regions(3)),
+        lambda: physical_trace(n_jobs=6, seed=11,
+                               duration_range_h=(0.3, 0.6)),
+        dict(seed=5, preemption_hazard_per_hour=0.3),
+        (lambda: [SpotLayer(), MultiRegionLayer()],
+         lambda: [SpotLayer(), MultiRegionLayer(), PortfolioLayer()])))
+
+
+def test_single_provider_catalog_matches_multi_region():
+    """A commitment-free ``multi_provider_catalog`` is the same market as
+    the equivalent ``multi_region_catalog`` — provider qualification adds
+    a ledger axis, not a decision change.  Pinned decision-for-decision
+    (with ``PortfolioLayer`` riding on the provider side): only the
+    provider-ledger summary keys may differ."""
+    from repro.core import Provider, Region, multi_provider_catalog
+    from repro.policies import PortfolioLayer
+
+    def pms():
+        return (PriceModel.mean_reverting(discount=0.35, seed=7),
+                PriceModel.mean_reverting(discount=0.4, seed=9))
+
+    def region_cat():
+        pm_a, pm_b = pms()
+        return multi_region_catalog(
+            (Region("aws", price_model=pm_a),
+             Region("gcp", cost_scale=1.03, price_model=pm_b)))
+
+    def provider_cat():
+        pm_a, pm_b = pms()
+        return multi_provider_catalog(
+            (Provider(name="aws", price_model=pm_a),
+             Provider(name="gcp", cost_scale=1.03, price_model=pm_b)))
+
+    # the markets are numerically the same catalog
+    ca, cb = region_cat(), provider_cat()
+    assert [t.name for t in ca.types] == [t.name for t in cb.types]
+    np.testing.assert_array_equal(ca.costs, cb.costs)
+    np.testing.assert_array_equal(ca.transfer.egress_usd_per_gb,
+                                  cb.transfer.egress_usd_per_gb)
+
+    out = []
+    for cat_fn, stack_fn in (
+            (region_cat, lambda: [SpotLayer(), MultiRegionLayer()]),
+            (provider_cat, lambda: [SpotLayer(), MultiRegionLayer(),
+                                    PortfolioLayer()])):
+        cat = cat_fn()
+        jobs = physical_trace(n_jobs=6, seed=11,
+                              duration_range_h=(0.3, 0.6))
+        rank = {t.task_id: i for i, t in enumerate(
+            sorted((t for j in jobs for t in j.tasks),
+                   key=lambda t: t.task_id))}
+        sched = _Probe(cat, policies=stack_fn())
+        m = Simulator(cat, jobs, sched,
+                      SimConfig(seed=5, preemption_hazard_per_hour=0.3)).run()
+        trace = [(t, tuple((k, tuple(rank[tid] for tid in tids))
+                           for k, tids in assignments))
+                 for t, assignments in sched.trace]
+        summary = {k: v for k, v in m.summary().items()
+                   if not k.startswith("cost_provider_")}
+        out.append((trace, summary, m.total_cost))
+    _assert_bit_identical(out)
+
+
 def test_stack_from_flags_matches_flag_shim():
     """The factory translation (`stack_from_flags`) builds the same layer
     sequence the deprecation shim does."""
