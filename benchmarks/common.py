@@ -10,10 +10,16 @@ import numpy as np
 from repro.cluster import SimConfig, Simulator, alibaba_like_trace, physical_trace
 from repro.core import EvaScheduler, NoPackingScheduler, aws_catalog
 from repro.core.workloads import M_TRUE
+from repro.obs import FlightRecorder
 from repro.policies import stack_from_flags
 from repro.schedulers import OwlScheduler, StratusScheduler, SynergyScheduler
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# when set (benchmarks.run --obs), every run_sim attaches a FlightRecorder
+# and saves its JSONL trace here, named <scheduler>_<seq>.jsonl
+TRACE_DIR: str | None = None
+_trace_seq = 0
 
 # scenario-axis flags consumed by stack_from_flags (benchmarks address the
 # axes by these names; the factory translates them into an explicit policy
@@ -74,13 +80,25 @@ def scheduler_factory(name: str, catalog, simcfg: SimConfig, **kw):
 
 
 def run_sim(sched_name: str, jobs, simcfg: SimConfig | None = None,
-            catalog=None, **kw):
+            catalog=None, recorder=None, **kw):
+    global _trace_seq
     simcfg = simcfg or SimConfig()
     cat = catalog if catalog is not None else aws_catalog()
+    trace_path = None
+    if recorder is None and TRACE_DIR is not None:
+        recorder = FlightRecorder(meta={"scheduler": sched_name,
+                                        "n_jobs": len(jobs)})
+        trace_path = os.path.join(TRACE_DIR,
+                                  f"{sched_name}_{_trace_seq:03d}.jsonl")
+        _trace_seq += 1
+    if recorder is not None and sched_name.startswith("eva"):
+        kw = dict(kw, recorder=recorder)
     sched = scheduler_factory(sched_name, cat, simcfg, **kw)
     t0 = time.time()
-    sim = Simulator(cat, jobs, sched, simcfg)
+    sim = Simulator(cat, jobs, sched, simcfg, recorder=recorder)
     m = sim.run()
+    if trace_path is not None:
+        recorder.save(trace_path)
     out = m.summary()
     out["wall_s"] = round(time.time() - t0, 1)
     if hasattr(sched, "full_adoption_rate"):

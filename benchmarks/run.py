@@ -1,12 +1,18 @@
 """Benchmark driver: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--full] [--only NAME]
+        [--obs] [--trace-dir DIR] [--results-dir DIR] [--json PATH]
 
-Emits CSV-style tables to stdout and JSON artifacts under results/.
+Emits CSV-style tables to stdout, greppable ``[bench] event key=value``
+progress lines, and JSON artifacts under results/.  With ``--obs`` every
+simulated run attaches a flight recorder and saves its JSONL trace under
+``results/traces/`` (or ``--trace-dir``) for offline replay with
+``tools/explain.py``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 
@@ -21,13 +27,36 @@ def main():
                          "interference|migration|composition|arrival|"
                          "roofline|spot|multiregion|credits|autoscale|"
                          "stability|serving|portfolio")
+    ap.add_argument("--obs", action="store_true",
+                    help="attach a flight recorder to every simulated run "
+                         "and save JSONL traces (tools/explain.py replays "
+                         "them)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="trace output dir (implies --obs; default "
+                         "results/traces)")
+    ap.add_argument("--results-dir", default=None,
+                    help="override the results/ artifact directory (the "
+                         "perf-overhead gate writes recording-on results "
+                         "to a separate dir)")
+    ap.add_argument("--json", default=None,
+                    help="write the run report (per-bench timings) as JSON")
     args = ap.parse_args()
+
+    from repro.obs import Reporter
 
     from . import (bench_arrival, bench_autoscale, bench_composition,
                    bench_credits, bench_endtoend, bench_interference,
                    bench_micro, bench_migration, bench_multiregion,
                    bench_multitask, bench_portfolio, bench_roofline,
-                   bench_serving, bench_spot, bench_stability)
+                   bench_serving, bench_spot, bench_stability, common)
+
+    if args.results_dir:
+        common.RESULTS_DIR = args.results_dir
+    if args.obs or args.trace_dir:
+        common.TRACE_DIR = args.trace_dir or os.path.join(
+            common.RESULTS_DIR, "traces")
+        os.makedirs(common.TRACE_DIR, exist_ok=True)
+
     benches = {
         "micro": lambda: bench_micro.run(quick=args.quick),
         "endtoend": lambda: bench_endtoend.run(quick=args.quick,
@@ -53,13 +82,18 @@ def main():
                                                  full=args.full),
     }
     todo = [args.only] if args.only else list(benches)
+    rep = Reporter("bench")
     t0 = time.time()
     for name in todo:
         t1 = time.time()
-        print(f"\n#### bench: {name} " + "#" * 40)
+        rep.emit("start", bench=name)
         benches[name]()
-        print(f"#### bench {name} done in {time.time() - t1:.1f}s")
-    print(f"\nall benches done in {time.time() - t0:.1f}s")
+        rep.emit("done", bench=name, wall_s=round(time.time() - t1, 1))
+    rep.emit("all_done", benches=len(todo),
+             wall_s=round(time.time() - t0, 1),
+             trace_dir=common.TRACE_DIR or "")
+    if args.json:
+        rep.write_json(args.json, quick=args.quick, full=args.full)
 
 
 if __name__ == "__main__":

@@ -134,6 +134,7 @@ from ..core.cluster_types import ClusterConfig, Job, TaskSet
 from ..core.plan import LiveInstance, diff_configs
 from ..core.scheduler import SchedulerBase, SchedulerView
 from ..core.workloads import M_TRUE, WORKLOADS, checkpoint_size_gb
+from ..obs import events as obs_ev
 from ..policies.pressure import (CREDIT, DEADLINE, SLO, SPOT, PressureBus,
                                  PressureSignal)
 
@@ -287,6 +288,9 @@ class Metrics:
     slo_requests_ok: float = 0.0  # requests served with p99 ≤ target
     service_utility_sum: float = 0.0  # ∫ utility(p99) · λ dt
     slo_pressure_signals: int = 0  # utility-risk rising edges
+    # flight-recorder event log (repro.obs.events.EventLog), set only when a
+    # FlightRecorder was attached to the run; never enters summary()
+    events: Optional[object] = None
 
     @property
     def slo_attainment(self) -> float:
@@ -381,10 +385,17 @@ class Metrics:
 
 class Simulator:
     def __init__(self, catalog: Catalog, jobs: Sequence[Job],
-                 scheduler: SchedulerBase, cfg: Optional[SimConfig] = None):
+                 scheduler: SchedulerBase, cfg: Optional[SimConfig] = None,
+                 recorder=None):
         self.catalog = catalog
         self.scheduler = scheduler
         self.cfg = cfg or SimConfig()
+        # Flight recorder (repro.obs.FlightRecorder) — a pure observer: every
+        # emission below is gated on self._ev, so recorder-less runs execute
+        # the identical instruction stream (pinned by tests/test_obs.py).
+        self._rec = recorder
+        self._ev = None if recorder is None else recorder.events
+        self._round_index = 0
         self.rng = np.random.default_rng(self.cfg.seed)
         self.jobs: Dict[int, _JobState] = {}
         self.tasks: Dict[int, _TaskState] = {}
@@ -409,6 +420,8 @@ class Simulator:
         self.now = 0.0
         self._last_accrue = 0.0
         self.metrics = Metrics()
+        if self._ev is not None:
+            self.metrics.events = self._ev
         if self.cfg.uniform_interference is not None:
             x = float(self.cfg.uniform_interference)
             self._m = np.full_like(M_TRUE, x)
@@ -566,9 +579,11 @@ class Simulator:
             inst.alloc -= self._task_demand(inst, tid)
 
     # ------------------------------------------------------------ accounting
-    def _bill_type(self, amt: float, k: int) -> None:
+    def _bill_type(self, amt: float, k: int,
+                   category: str = obs_ev.COST_INSTANCE) -> None:
         """Bill ``amt`` attributed to instance type ``k`` on every ledger
-        (total, per-region, per-provider)."""
+        (total, per-region, per-provider; plus the flight recorder's
+        per-(category, key) cost ledger when one is attached)."""
         m = self.metrics
         m.total_cost += amt
         if self._regions is not None:
@@ -576,8 +591,13 @@ class Simulator:
             p = self._provider_of_type[k]
             if p is not None:
                 m.cost_by_provider[p] += amt
+        if self._ev is not None:
+            key = (self._region_name_of_type[k] if self._regions is not None
+                   else self.catalog.types[k].name)
+            self._ev.record_cost(category, key, amt)
 
-    def _bill_region(self, amt: float, ri: int) -> None:
+    def _bill_region(self, amt: float, ri: int,
+                     category: str = obs_ev.COST_INSTANCE) -> None:
         """Bill ``amt`` attributed to region ``ri`` on every ledger."""
         m = self.metrics
         m.total_cost += amt
@@ -585,6 +605,8 @@ class Simulator:
         p = self._regions[ri].provider
         if p is not None:
             m.cost_by_provider[p] += amt
+        if self._ev is not None:
+            self._ev.record_cost(category, self._regions[ri].name, amt)
 
     def _accrue(self, now: float):
         dt = now - self._last_accrue
@@ -617,7 +639,7 @@ class Simulator:
                 size = self._pool_size[ri]
                 amt = hours * size * self._pool_rate[ri]
                 m.commitment_cost += amt
-                self._bill_region(amt, ri)
+                self._bill_region(amt, ri, obs_ev.COST_COMMITMENT)
                 self._pool_capacity_s[ri] += dt * size
                 self._pool_covered_s[ri] += dt * min(
                     self._region_alive[ri], size)
@@ -734,6 +756,9 @@ class Simulator:
         instant, so coincident signals (e.g. two deferral deadlines at the
         same latest-start time) react in a single round instead of
         double-firing the forced partial."""
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.PRESSURE, signal=kind,
+                          ids=tuple(ids))
         self.pressure_bus.publish(PressureSignal(kind, tuple(ids), self.now))
         if (self._round_scheduled_at != self.now
                 and self._pressure_round_at != self.now):
@@ -743,6 +768,9 @@ class Simulator:
     def _on_credit_exhausted(self, inst: _Instance) -> None:
         """An instance just throttled: surface the credit-pressure signal."""
         self.metrics.credit_exhaustions += 1
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.CREDIT_THROTTLE,
+                          instance_id=inst.iid)
         self._pressure_signal(CREDIT, [inst.iid])
 
     def _on_credit_exhaust_event(self, iid: int, seq: int) -> None:
@@ -794,8 +822,16 @@ class Simulator:
         if risk and not js.svc_risk:
             js.svc_risk = True
             self.metrics.slo_pressure_signals += 1
+            if self._ev is not None:
+                self._ev.emit(self.now, obs_ev.SLO_RISK,
+                              job_id=js.job.job_id, edge="on",
+                              load_rps=lam, capacity_rps=cap)
             self._pressure_signal(SLO, (js.job.job_id,))
         elif not risk:
+            if self._ev is not None and js.svc_risk:
+                self._ev.emit(self.now, obs_ev.SLO_RISK,
+                              job_id=js.job.job_id, edge="off",
+                              load_rps=lam, capacity_rps=cap)
             js.svc_risk = False
 
     def _touch_instance_jobs(self, iid: int):
@@ -826,6 +862,10 @@ class Simulator:
         if self._region_has_capacity(k):
             return self._new_instance(k)
         self.metrics.capacity_denied += 1
+        if self._ev is not None:  # denials only happen on capped regions
+            self._ev.emit(self.now, obs_ev.CAPACITY_DENIED,
+                          type=self.catalog.types[k].name,
+                          region=self._region_name_of_type[k])
         return None  # slot unfilled: its tasks stay put / pending
 
     def _new_instance(self, k: int) -> _Instance:
@@ -842,29 +882,42 @@ class Simulator:
         if self._regions is not None:
             self._region_alive[int(self._region_ids[k])] += 1
         self.metrics.instances_launched += 1
+        if self._ev is not None:
+            kw = {"type": self.catalog.types[k].name,
+                  "ready_t": inst.ready_t}
+            if self._regions is not None:
+                kw["region"] = self._region_name_of_type[k]
+            self._ev.emit(self.now, obs_ev.PROVISION, instance_id=iid, **kw)
         self._push(inst.ready_t, INSTANCE_READY, (iid,))
         if self.cfg.failure_mtbf_hours > 0:
             dt = self.rng.exponential(self.cfg.failure_mtbf_hours * 3600.0)
             self._push(self.now + dt, FAILURE, (iid,))
         return inst
 
-    def _terminate(self, inst: _Instance):
+    def _terminate(self, inst: _Instance, reason: str = "released"):
         if not inst.alive:
             return
         inst.terminated_t = self.now
         self._alive.pop(inst.iid, None)
         if self._regions is not None:
             self._region_alive[int(self._region_ids[inst.type_index])] -= 1
-        if self._commit and self._pool_type[inst.type_index]:
-            return  # pool slots bill the standing rate, never per instance
-        if not self._spot:  # spot billing is integrated in _accrue instead
-            amt = ((self.now - inst.request_t) / 3600.0
-                   * self.catalog.costs[inst.type_index])
-            self._bill_type(amt, inst.type_index)
+        billed = 0.0
+        pool = self._commit and self._pool_type[inst.type_index]
+        # pool slots bill the standing rate (never per instance); spot
+        # billing is integrated in _accrue instead
+        if not pool and not self._spot:
+            billed = ((self.now - inst.request_t) / 3600.0
+                      * self.catalog.costs[inst.type_index])
+            self._bill_type(billed, inst.type_index)
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.TERMINATE, instance_id=inst.iid,
+                          reason=reason,
+                          lifetime_s=self.now - inst.request_t,
+                          billed=billed)
 
     def _maybe_finish_drain(self, inst: _Instance):
         if inst.draining and inst.alive and not inst.residents and not inst.assigned:
-            self._terminate(inst)
+            self._terminate(inst, "drained")
 
     def _start_launch(self, tid: int):
         """Task is checkpointed (or fresh) and assigned; launch when dst ready."""
@@ -892,9 +945,13 @@ class Simulator:
             return 0.0
         gb = checkpoint_size_gb(workload)
         fee = self.catalog.transfer.egress_usd(r_s, r_d, gb)
-        self._bill_region(fee, r_s)
+        self._bill_region(fee, r_s, obs_ev.COST_EGRESS)
         self.metrics.egress_cost += fee
         self.metrics.cross_region_migrations += 1
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.EGRESS,
+                          src=self._regions[r_s].name,
+                          dst=self._regions[r_d].name, gb=gb, fee=fee)
         return (self.catalog.transfer.transfer_time_s(r_s, r_d, gb)
                 * self.cfg.migration_delay_scale)
 
@@ -964,15 +1021,28 @@ class Simulator:
                 self._push(self.now + delay, CKPT_DONE, (mig.task_id, ts.epoch))
                 ts.migrations += 1
                 self.metrics.migrations += 1
+                if self._ev is not None:
+                    self._ev.emit(self.now, obs_ev.MIGRATE,
+                                  instance_id=dst.iid, job_id=ts.job_id,
+                                  task_id=mig.task_id, src=src.iid,
+                                  delay_s=delay)
                 self._touch_instance_jobs(src.iid)
             else:  # PENDING -> fresh placement
                 ts.epoch += 1
                 ts.dst = dst.iid
                 self._assign_task(dst, mig.task_id)
+                if self._ev is not None:
+                    self._ev.emit(self.now, obs_ev.PLACE,
+                                  instance_id=dst.iid, job_id=ts.job_id,
+                                  task_id=mig.task_id)
                 if self._deferrals:  # PENDING -> ADMIT transition
                     js = self.jobs[ts.job_id]
                     if js.admitted_t is None:
                         js.admitted_t = self.now
+                        if self._ev is not None:
+                            self._ev.emit(
+                                self.now, obs_ev.ADMIT, job_id=ts.job_id,
+                                wait_s=self.now - js.job.arrival_time)
                 if ts.placed_once:
                     ts.migrations += 1
                     self.metrics.migrations += 1
@@ -995,7 +1065,7 @@ class Simulator:
             if inst.residents:
                 inst.draining = True
             else:
-                self._terminate(inst)
+                self._terminate(inst, "evicted")
 
         # Evacuated revoked instances stop billing as soon as they are empty
         # (terminate during the notice window) instead of idling to reclaim.
@@ -1064,7 +1134,7 @@ class Simulator:
             # nothing to schedule; terminate any empty instances
             for inst in self._live_instances():
                 if not inst.assigned and not inst.residents:
-                    self._terminate(inst)
+                    self._terminate(inst, "idle")
             return
         taskset = TaskSet([self.tasks[t].task for t in tids])
         pending = {t for t in tids if self.tasks[t].dst is None}
@@ -1130,9 +1200,31 @@ class Simulator:
             service_capacity=service_cap or None, slo_risk=slo_risk or None,
             service_specs=specs or None)
         config = self.scheduler.schedule(view)
+        if self._rec is not None:
+            self._emit_round(len(tids), len(pending))
+        self._round_index += 1
         if self._commit:
             self._apply_commitment_orders()
         self._execute_config(config)
+
+    def _emit_round(self, n_tasks: int, n_pending: int) -> None:
+        """ROUND event + the per-round gauge samples (flight recorder on)."""
+        self._ev.emit(self.now, obs_ev.ROUND, round_index=self._round_index,
+                      n_tasks=n_tasks, n_pending=n_pending,
+                      n_instances=len(self._alive))
+        reg = self._rec.metrics
+        t, m = self.now, self.metrics
+        reg.inc("rounds")
+        reg.sample("cost_total", t, m.total_cost)
+        reg.sample("instances_alive", t, len(self._alive))
+        reg.sample("tasks_live", t, n_tasks)
+        reg.sample("tasks_pending", t, n_pending)
+        if m.has_regions:
+            for name, v in m.cost_by_region.items():
+                reg.sample(f"cost_region:{name}", t, v)
+        if m.has_service:
+            reg.sample("slo_risk_jobs", t, sum(
+                1 for js in self._active_jobs.values() if js.svc_risk))
 
     def _apply_commitment_orders(self) -> None:
         """Poll the scheduler for commitment re-sizes (the inventory
@@ -1151,6 +1243,9 @@ class Simulator:
                 continue
             size = int(size)
             if size > self._pool_size[ri]:
+                if self._ev is not None:
+                    self._ev.emit(self.now, obs_ev.POOL_RESIZE, region=name,
+                                  old=self._pool_size[ri], new=size)
                 self._pool_size[ri] = size
                 self._region_limits[ri] = size
                 self.metrics.commitment_resizes += 1
@@ -1167,6 +1262,9 @@ class Simulator:
         js = _JobState(job=job, arrived=True)
         self.jobs[job.job_id] = js
         self._active_jobs[job.job_id] = js
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.JOB_ARRIVE, job_id=job.job_id,
+                          n_tasks=job.n_tasks)
         for t in job.tasks:
             self.tasks[t.task_id] = _TaskState(task=t, job_id=job.job_id,
                                                workload=t.workload)
@@ -1186,6 +1284,9 @@ class Simulator:
         if inst is None or not inst.alive:
             return
         inst.ready = True
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.READY, instance_id=iid,
+                          acquisition_s=self.now - inst.request_t)
         for tid in sorted(inst.assigned):
             if self.tasks[tid].state == WAITING:
                 self._start_launch(tid)
@@ -1228,6 +1329,9 @@ class Simulator:
                 return  # stale projection
         js.done_t = self.now
         js.job.completion_time = self.now
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.JOB_DONE, job_id=jid,
+                          jct_s=self.now - js.job.arrival_time)
         self._active_jobs.pop(jid, None)
         self._jobs_outstanding -= 1
         if self._deferrals:
@@ -1269,16 +1373,16 @@ class Simulator:
         # to all schedulers; non-empty ones wait for the next round)
         for inst in self._live_instances():
             if not inst.assigned and not inst.residents:
-                self._terminate(inst)
+                self._terminate(inst, "idle")
         self.scheduler.on_event(self.now)
 
-    def _kill_instance(self, inst: _Instance, rng):
+    def _kill_instance(self, inst: _Instance, rng, reason: str):
         """Reclaim an instance out from under its tasks (failure or spot
         preemption): victims lose up to one checkpoint period of progress and
         re-enter PENDING."""
         iid = inst.iid
         victims = set(inst.assigned) | set(inst.residents)
-        self._terminate(inst)
+        self._terminate(inst, reason)
         jids = set()
         for tid in victims:
             ts = self.tasks[tid]
@@ -1300,7 +1404,10 @@ class Simulator:
         if inst is None or not inst.alive:
             return
         self.metrics.failures += 1
-        self._kill_instance(inst, self.rng)
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.FAILURE, instance_id=iid,
+                          victims=len(inst.assigned | inst.residents))
+        self._kill_instance(inst, self.rng, "failure")
 
     # --------------------------------------------------------- spot handlers
     def _on_price_update(self, periodic: bool = True):
@@ -1322,6 +1429,10 @@ class Simulator:
                     self.metrics.preemption_notices += 1
                     self._push(inst.preempt_deadline, PREEMPT_FIRE, (iid,))
                     noticed.append(iid)
+                    if self._ev is not None:
+                        self._ev.emit(self.now, obs_ev.NOTICE,
+                                      instance_id=iid,
+                                      deadline=inst.preempt_deadline)
         if noticed:
             # immediate reaction so the scheduler can evacuate within the
             # notice window
@@ -1336,7 +1447,10 @@ class Simulator:
         if inst is None or not inst.alive:
             return  # evacuated and terminated before the deadline
         self.metrics.preemptions += 1
-        self._kill_instance(inst, self._spot_rng)
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.PREEMPT, instance_id=iid,
+                          victims=len(inst.assigned | inst.residents))
+        self._kill_instance(inst, self._spot_rng, "preempt")
 
     # ----------------------------------------------------- deferral handlers
     def _job_pending(self, jid: int) -> bool:
@@ -1355,6 +1469,8 @@ class Simulator:
             return
         if not self._job_pending(jid):
             return  # already admitted and under way
+        if self._ev is not None:
+            self._ev.emit(self.now, obs_ev.DEFER_DEADLINE, job_id=jid)
         self._pressure_signal(DEADLINE, [jid])
 
     # ------------------------------------------------------ serving handlers
@@ -1386,6 +1502,10 @@ class Simulator:
                 self._unassign_task(inst, tid)
                 self._make_pending(tid)
                 self.metrics.withdrawals += 1
+                if self._ev is not None:
+                    self._ev.emit(self.now, obs_ev.WITHDRAW,
+                                  instance_id=inst.iid, job_id=ts.job_id,
+                                  task_id=tid)
                 if self._job_pending(ts.job_id):
                     self.jobs[ts.job_id].admitted_t = None  # back to PENDING
 
@@ -1425,7 +1545,7 @@ class Simulator:
                     self._schedule_next_round()
         # drain any leftover instances at the end
         for inst in list(self._alive.values()):
-            self._terminate(inst)
+            self._terminate(inst, "end_of_run")
         if self._commit:  # finalize the pool ledgers
             for ri, _cm in self._pools:
                 cap_s = self._pool_capacity_s[ri]

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import profiler as _prof
 from .catalog import Catalog
 
 _EPS = 1e-9
@@ -286,15 +287,28 @@ def pack_jax(demand_by_family: np.ndarray, workloads: np.ndarray,
     P = jnp.asarray(pairwise, dt)
     logP = jnp.log(jnp.maximum(P, 1e-9))
     max_fills = _pow2(max(256, T // 2 + 8), 256)
+    cache_size = getattr(_pack_all_types, "_cache_size", lambda: -1)
     while True:  # record count ≤ T, so doubling always terminates
-        budget_out, rec_type, rec_rep, rec_comp, n_rec, overflow = \
-            _pack_all_types(jnp.asarray(cdem_p), jnp.asarray(cw_p),
-                            jnp.asarray(crp_p), jnp.asarray(cjr_p),
-                            jnp.asarray(counts_p), jnp.asarray(rows_pad),
-                            P, logP, jnp.asarray(costs), jnp.asarray(caps),
-                            jnp.asarray(fams), jnp.asarray(rids),
-                            jnp.asarray(budget0), max_fills=max_fills)
-        if not bool(overflow):
+        n_cached = cache_size()
+        # the module-level span hook is a shared nullcontext (sp is None)
+        # unless a profiler was activated; the bool(overflow) host sync sits
+        # inside the span so device time is part of the measurement
+        with _prof.span("jax_pack") as sp:
+            budget_out, rec_type, rec_rep, rec_comp, n_rec, overflow = \
+                _pack_all_types(jnp.asarray(cdem_p), jnp.asarray(cw_p),
+                                jnp.asarray(crp_p), jnp.asarray(cjr_p),
+                                jnp.asarray(counts_p), jnp.asarray(rows_pad),
+                                P, logP, jnp.asarray(costs),
+                                jnp.asarray(caps), jnp.asarray(fams),
+                                jnp.asarray(rids), jnp.asarray(budget0),
+                                max_fills=max_fills)
+            overflowed = bool(overflow)
+        if sp is not None:  # jit-cache growth == this call compiled
+            sp.tags["stage"] = ("compile" if cache_size() > n_cached
+                                else "execute")
+            sp.tags["max_fills"] = max_fills
+            sp.tags["n_tasks"] = T
+        if not overflowed:
             break
         max_fills *= 2
 

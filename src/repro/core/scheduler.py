@@ -39,14 +39,15 @@ import dataclasses
 import warnings
 from typing import Dict, List, Optional, Sequence, Set
 
+from ..obs.trace import DecisionRecord, KeepEntry
 from .catalog import Catalog
 from .cluster_types import ClusterConfig, TaskSet
 from .ensemble import EnsembleDecision, EventRateEstimator, choose, instantaneous_saving
-from .full_reconfig import evaluate_assignments, full_reconfiguration
+from .full_reconfig import EPS, evaluate_assignments, full_reconfiguration
 from .partial_reconfig import (incremental_reconfiguration,
                                partial_reconfiguration)
 from .plan import LiveInstance, diff_configs, migration_cost
-from .reservation_price import cheapest_type
+from .reservation_price import cheapest_type, reservation_prices
 from .throughput_table import ThroughputTable
 from .workloads import NUM_WORKLOADS
 
@@ -194,8 +195,15 @@ class EvaScheduler(SchedulerBase):
                  spot_aware: bool = False, multi_region: bool = False,
                  credit_aware: bool = False, autoscale: bool = False,
                  admission: Optional[object] = None, strike: float = 1.0,
-                 region: Optional[str] = None):
+                 region: Optional[str] = None, recorder=None):
         super().__init__(catalog)
+        # flight recorder (repro.obs.FlightRecorder): pure observer — every
+        # trace path below is gated on self._rec, and the decision trace is
+        # assembled from the same inputs the decision used (re-running only
+        # pure evaluation helpers), so decisions are unchanged when on
+        self._rec = recorder
+        self._trace_pending: Optional[DecisionRecord] = None
+        self._trace_parts: List = []
         assert mode in ("ensemble", "full-only", "partial-only")
         self.interference_aware = interference_aware
         self.multi_task_aware = multi_task_aware
@@ -331,21 +339,39 @@ class EvaScheduler(SchedulerBase):
         # current time), then planning transforms (credit-effective
         # $/throughput) — `raw` bills, `cat` plans.
         raw, cat = self.stack.plan(self.catalog, view, d_hat)
-        keep_bonus = self.stack.keep_bonus(raw, cat, view)
+        if self._rec is None:
+            keep_bonus = self.stack.keep_bonus(raw, cat, view)
+        else:
+            # identical fold, but keep the per-layer parts so the decision
+            # trace can decompose the summed slack by contributing layer
+            # (each layer's hook still runs exactly once)
+            self._trace_parts = self.stack.keep_bonus_parts(raw, cat, view)
+            keep_bonus = self.stack.combine(
+                fn for _, fn in self._trace_parts)
+            self._trace_pending = self._trace_begin(view, cat, d_hat)
         mask, caps = self.stack.mask, self.stack.caps
 
         evac = self.stack.evacuate(raw, view)
         if evac or resumed:
+            if self._trace_pending is not None:
+                self._trace_pending.kind = "forced-partial"
+                self._trace_pending.evacuated = tuple(sorted(evac))
+                self._trace_pending.resumed_jobs = tuple(sorted(resumed))
             return self._forced_partial(view, raw, cat, table, kw,
                                         keep_bonus, evac)
         self._pressure_buffer.clear()  # nothing forced a reaction round
 
         live_assignments = [(i.type_index, i.task_ids) for i in view.live]
+        if self._trace_pending is not None and self.mode != "full-only":
+            self._trace_pending.keep_table = self._trace_keep_table(
+                view.live, view.tasks, cat, table, mask)
         if self.mode == "full-only":
             cfg = full_reconfiguration(view.tasks, cat, table,
                                        type_mask=mask,
                                        region_caps=caps, **kw)
             self.full_adoptions += 1
+            if self._trace_pending is not None:
+                self._trace_pending.kind = "full-only"
             return self._finish(cfg, view, cat)
         partial = partial_reconfiguration(view.tasks, live_assignments,
                                           view.pending_ids, cat,
@@ -353,6 +379,8 @@ class EvaScheduler(SchedulerBase):
                                           region_caps=caps,
                                           keep_bonus=keep_bonus, **kw)
         if self.mode == "partial-only":
+            if self._trace_pending is not None:
+                self._trace_pending.kind = "partial-only"
             return self._finish(partial, view, cat)
         full = full_reconfiguration(view.tasks, cat, table,
                                     type_mask=mask,
@@ -374,6 +402,13 @@ class EvaScheduler(SchedulerBase):
                              task_ckpt_region=view.task_ckpt_region)
         decision = choose(s_f, m_f, s_p, m_p, self.estimator.d_hat())
         self.decisions.append(decision)
+        if self._trace_pending is not None:
+            self._trace_pending.kind = "ensemble"
+            self._trace_pending.s_full = float(s_f)
+            self._trace_pending.m_full = float(m_f)
+            self._trace_pending.s_partial = float(s_p)
+            self._trace_pending.m_partial = float(m_p)
+            self._trace_pending.adopt_full = bool(decision.adopt_full)
         if decision.adopt_full:
             self.full_adoptions += 1
             self.estimator.on_full_reconfig()
@@ -407,12 +442,20 @@ class EvaScheduler(SchedulerBase):
                 keep_bonus=keep_bonus, **kw)
             if fallback is not None:
                 self.incremental_fallbacks += 1
+            if self._trace_pending is not None:
+                self._trace_pending.dirty = tuple(sorted(dirty))
+                self._trace_pending.incremental_fallback = fallback
             return self._finish(cfg, view, cat)
         live = [i for i in view.live if i.instance_id not in evac]
         pending = set(view.pending_ids)
         for inst in view.live:
             if inst.instance_id in evac:
                 pending |= set(inst.task_ids)
+        if self._trace_pending is not None:
+            # the forced partial's keep test runs over the survivors under
+            # the drain mask — record exactly that landscape
+            self._trace_pending.keep_table = self._trace_keep_table(
+                live, view.tasks, cat, table, mask)
         cfg = partial_reconfiguration(
             view.tasks, [(i.type_index, i.task_ids) for i in live],
             pending, cat, table, type_mask=mask,
@@ -421,7 +464,69 @@ class EvaScheduler(SchedulerBase):
 
     def _finish(self, config: ClusterConfig, view: SchedulerView,
                 cat: Catalog) -> ClusterConfig:
-        return self.stack.refine(config, view, cat)
+        if self._rec is None:
+            return self.stack.refine(config, view, cat)
+        before = self._numeric_summary()
+        config = self.stack.refine(config, view, cat)
+        after = self._numeric_summary()
+        trace = self._trace_pending
+        if trace is not None:
+            self._trace_pending = None
+            trace.refine_deltas = {k: after[k] - before[k] for k in after
+                                   if k in before and after[k] != before[k]}
+            self._rec.decisions.append(trace)
+        return config
+
+    # -- decision trace (pure observers; recorder attached only) -------------
+    def _numeric_summary(self) -> Dict[str, float]:
+        return {k: v for k, v in self.stack.summary().items()
+                if isinstance(v, (int, float)) and not isinstance(v, bool)}
+
+    def _trace_begin(self, view: SchedulerView, cat: Catalog,
+                     d_hat: float) -> DecisionRecord:
+        n = len(view.tasks.ids)
+        if n:
+            rp = reservation_prices(view.tasks, cat,
+                                    type_mask=self.stack.mask)
+            rp_min, rp_mean, rp_max = (float(rp.min()), float(rp.mean()),
+                                       float(rp.max()))
+        else:
+            rp_min = rp_mean = rp_max = 0.0
+        return DecisionRecord(
+            t=view.time, round_index=self.rounds - 1, kind="",
+            d_hat_s=float(d_hat), n_tasks=n,
+            n_pending=len(view.pending_ids), rp_min=rp_min, rp_mean=rp_mean,
+            rp_max=rp_max, mask_layers=self.stack.mask_layers,
+            caps_layer=self.stack.caps_layer)
+
+    def _trace_keep_table(self, live: Sequence[LiveInstance], tasks: TaskSet,
+                          cat: Catalog, table, mask) -> List[KeepEntry]:
+        """Replay the partial keep test (same pure helpers, same inputs)
+        with the summed ``keep_bonus`` decomposed by contributing layer."""
+        system_ids = set(tasks.ids.tolist())
+        trimmed, iids = [], []
+        for inst in live:
+            alive = tuple(t for t in inst.task_ids if t in system_ids)
+            if alive:
+                trimmed.append((inst.type_index, alive))
+                iids.append(inst.instance_id)
+        if not trimmed:
+            return []
+        tnrps, costs = evaluate_assignments(trimmed, tasks, cat, table,
+                                            self.multi_task_aware,
+                                            type_mask=mask)
+        out: List[KeepEntry] = []
+        for iid, (k, tids), s, c in zip(iids, trimmed, tnrps, costs):
+            by_layer = {name: float(fn(k, tids))
+                        for name, fn in self._trace_parts}
+            bonus = sum(by_layer.values())
+            out.append(KeepEntry(
+                instance_id=iid, type_index=int(k), saving=float(s),
+                cost=float(c), bonus=bonus,
+                bonus_by_layer={n2: v for n2, v in by_layer.items()
+                                if v != 0.0},
+                kept=bool(s >= c - bonus - EPS)))
+        return out
 
     @property
     def full_adoption_rate(self) -> float:

@@ -153,6 +153,11 @@ class PolicyStack:
                           if la.catalog_phase == PLANNING]
         self.mask: Optional[np.ndarray] = None
         self.caps: Optional[tuple] = None
+        # provenance (set at bind): which layers contributed to the combined
+        # mask, and which layer's region_caps won — read by the decision
+        # trace, never by planning itself
+        self.mask_layers: Tuple[str, ...] = ()
+        self.caps_layer: Optional[str] = None
 
     # -- container protocol --------------------------------------------------
     def __iter__(self) -> Iterator[PolicyLayer]:
@@ -186,17 +191,22 @@ class PolicyStack:
         for layer in self.layers:
             layer.bind(scheduler)
         mask: Optional[np.ndarray] = None
+        mask_layers: List[str] = []
         for layer in self.layers:
             m = layer.type_mask(scheduler.catalog)
             if m is not None:
                 m = np.asarray(m, dtype=bool)
                 mask = m if mask is None else (mask & m)
+                mask_layers.append(layer.name)
         self.mask = mask
+        self.mask_layers = tuple(mask_layers)
         self.caps = None
+        self.caps_layer = None
         for layer in self.layers:
             caps = layer.region_caps(scheduler.catalog)
             if caps is not None:
                 self.caps = caps
+                self.caps_layer = layer.name
                 break
         for layer in self.layers:
             layer.post_bind(self)
@@ -221,17 +231,31 @@ class PolicyStack:
             cur = layer.plan_catalog(cur, view, d_hat_s)
         return raw, cur
 
-    def keep_bonus(self, raw, cat, view) -> Optional[Callable]:
-        fns: List[Callable] = []
+    def keep_bonus_parts(self, raw, cat, view) -> List[Tuple[str, Callable]]:
+        """Per-layer ``(layer_name, fn)`` keep-slack contributions this
+        round — each layer's hook invoked exactly once, so the decision
+        trace can decompose the summed bonus without re-running hooks."""
+        parts: List[Tuple[str, Callable]] = []
         for layer in self.layers:
             fn = layer.keep_bonus(raw, cat, view)
             if fn is not None:
-                fns.append(fn)
+                parts.append((layer.name, fn))
+        return parts
+
+    @staticmethod
+    def combine(fns: Sequence[Callable]) -> Optional[Callable]:
+        """Sum keep-bonus callables (bit-identical to the single-fn case:
+        ``sum`` over one term adds exact float zero)."""
+        fns = list(fns)
         if not fns:
             return None
         if len(fns) == 1:
             return fns[0]
         return lambda k, tids: sum(f(k, tids) for f in fns)
+
+    def keep_bonus(self, raw, cat, view) -> Optional[Callable]:
+        return self.combine(
+            fn for _, fn in self.keep_bonus_parts(raw, cat, view))
 
     def evacuate(self, raw, view) -> Set[int]:
         evac: Set[int] = set()

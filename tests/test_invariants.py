@@ -43,6 +43,7 @@ from repro.core import (CommitmentModel, EvaScheduler, PriceModel, Provider,
                         dispersed_demo_regions, make_job,
                         multi_provider_catalog, multi_region_catalog)
 from repro.core.workloads import WORKLOAD_INDEX, checkpoint_size_gb
+from repro.obs import FlightRecorder
 from repro.policies import (AutoscaleLayer, CreditLayer, MultiRegionLayer,
                             PortfolioLayer, SLOLayer, SpotLayer)
 
@@ -128,8 +129,12 @@ def _run_composed(catalog_kind, spot, deferrable, service, hazard, n_jobs,
                   seed):
     cat, jobs, layers, cfg = _compose(catalog_kind, spot, deferrable,
                                       service, hazard, n_jobs, seed)
-    sched = EvaScheduler(cat, policies=layers)
-    sim = _Instrumented(cat, jobs, sched, cfg)
+    # a flight recorder rides along on every composed scenario: the
+    # event-cost conservation law below audits its ledger against the
+    # metrics, and recording must never perturb any of the other laws
+    rec = FlightRecorder(meta={"catalog": catalog_kind, "seed": seed})
+    sched = EvaScheduler(cat, policies=layers, recorder=rec)
+    sim = _Instrumented(cat, jobs, sched, cfg, recorder=rec)
     m = sim.run()
     return sim, m, cat, jobs
 
@@ -230,6 +235,27 @@ def _check_conservation(sim, m, cat, jobs):
     # --- every job completes (deadline backstops, service windows, batch)
     for j in jobs:
         assert j.completion_time is not None
+    # --- event-cost conservation: every dollar the simulator bills flows
+    # through the flight recorder's ledger exactly once, so the aggregated
+    # (category, key) cells sum back to the metrics totals on every axis
+    log = m.events
+    if log is not None:
+        assert sum(log.costs.values()) == pytest.approx(m.total_cost,
+                                                        rel=1e-9, abs=1e-9)
+        by_cat = log.cost_by("category")
+        assert by_cat.get("egress", 0.0) == pytest.approx(m.egress_cost,
+                                                          rel=1e-9, abs=1e-9)
+        assert by_cat.get("commitment", 0.0) == pytest.approx(
+            m.commitment_cost, rel=1e-9, abs=1e-9)
+        if m.has_regions:
+            by_key = log.cost_by("key")
+            for name, amt in m.cost_by_region.items():
+                assert by_key.get(name, 0.0) == pytest.approx(amt, rel=1e-9,
+                                                              abs=1e-9)
+        # lifecycle sanity: one terminate per provision (the billing law
+        # above already pinned that nothing is left accruing)
+        counts = log.counts()
+        assert counts.get("terminate", 0) == counts.get("provision", 0)
 
 
 # --------------------------------------------------------- seeded fallback

@@ -2,7 +2,7 @@
 """CI perf-regression gate: compare a fresh ``results/bench_micro.json``
 against the committed baseline in ``benchmarks/baselines/``.
 
-    python tools/bench_compare.py [--results PATH] [--baseline PATH]
+    python tools/bench_compare.py [--results PATH] [--baseline PATH] [--json PATH]
     python tools/bench_compare.py --update-baseline
 
 Timing cells are matched row-by-row on ``n_tasks`` (table5 and the scaling
@@ -28,8 +28,15 @@ A row or timing cell present in the baseline but missing from the fresh
 results fails the gate (a silently dropped benchmark is a regression).
 Extra fresh rows (e.g. a locally run --full curve) are ignored.
 
-``--update-baseline`` copies the fresh results over the baseline; commit
-the result when a deliberate perf change shifts the curve.
+Output is greppable ``[bench_compare] cell ... status=ok|fail`` lines;
+``--json`` additionally writes every per-cell verdict as JSON (the CI
+artifact).  ``--update-baseline`` copies the fresh results over the
+baseline; commit the result when a deliberate perf change shifts the
+curve.
+
+The recording-overhead gate reuses this tool with ``--baseline`` pointed
+at a recording-off run and ``--ratio 1.10``: the flight recorder must
+stay within 10% of the bare benchmark.
 """
 from __future__ import annotations
 
@@ -40,6 +47,10 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import Reporter  # noqa: E402
+
 RESULTS = ROOT / "results" / "bench_micro.json"
 BASELINE = ROOT / "benchmarks" / "baselines" / "bench_micro.json"
 
@@ -73,7 +84,8 @@ def _num(cell):
     return float(cell)
 
 
-def compare(base: dict, fresh: dict, ratio: float, floor_s: float):
+def compare(base: dict, fresh: dict, ratio: float, floor_s: float,
+            rep: Reporter):
     failures, checked = [], 0
     for sec, cols in TIMING_COLS.items():
         base_rows = _rows_by_n(base.get(sec, []))
@@ -81,6 +93,7 @@ def compare(base: dict, fresh: dict, ratio: float, floor_s: float):
         for n, brow in sorted(base_rows.items()):
             frow = fresh_rows.get(n)
             if frow is None:
+                rep.emit("missing_row", section=sec, n_tasks=n)
                 failures.append(f"{sec}[n_tasks={n}]: row missing from fresh results")
                 continue
             for col in cols:
@@ -89,25 +102,31 @@ def compare(base: dict, fresh: dict, ratio: float, floor_s: float):
                     continue  # baseline didn't measure this cell (e.g. numpy cap)
                 f = _num(frow.get(col))
                 if f is None:
+                    rep.emit("missing_cell", section=sec, n_tasks=n, col=col)
                     failures.append(f"{sec}[{n}].{col}: cell missing from fresh results")
                     continue
                 checked += 1
                 limit = max(ratio * b, b + floor_s)
-                status = "ok" if f <= limit else "FAIL"
-                print(f"  {sec}[{n}].{col}: base={b:.4f}s fresh={f:.4f}s "
-                      f"limit={limit:.4f}s {status}")
-                if f > limit:
+                ok = f <= limit
+                rep.emit("cell", section=sec, n_tasks=n, col=col,
+                         base_s=round(b, 4), fresh_s=round(f, 4),
+                         limit_s=round(limit, 4),
+                         status="ok" if ok else "fail")
+                if not ok:
                     failures.append(f"{sec}[{n}].{col}: {f:.4f}s > limit {limit:.4f}s "
                                     f"(base {b:.4f}s)")
             for col, limit in SPEEDUP_FLOORS.get(sec, {}).get(n, {}).items():
                 f = _num(frow.get(col))
                 if f is None:
+                    rep.emit("missing_cell", section=sec, n_tasks=n, col=col)
                     failures.append(f"{sec}[{n}].{col}: cell missing from fresh results")
                     continue
                 checked += 1
-                status = "ok" if f >= limit else "FAIL"
-                print(f"  {sec}[{n}].{col}: fresh={f:.1f}x floor={limit:.1f}x {status}")
-                if f < limit:
+                ok = f >= limit
+                rep.emit("speedup", section=sec, n_tasks=n, col=col,
+                         fresh_x=round(f, 1), floor_x=round(limit, 1),
+                         status="ok" if ok else "fail")
+                if not ok:
                     failures.append(f"{sec}[{n}].{col}: speedup {f:.1f}x < floor "
                                     f"{limit:.1f}x")
     return failures, checked
@@ -124,36 +143,41 @@ def main(argv=None):
                     help="relative tolerance per cell (default 1.5x)")
     ap.add_argument("--floor", type=float, default=0.2,
                     help="absolute slack in seconds for sub-second cells")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write per-cell verdicts as JSON")
     ap.add_argument("--update-baseline", action="store_true",
                     help="overwrite the baseline with the fresh results")
     args = ap.parse_args(argv)
 
+    rep = Reporter("bench_compare")
     if not args.results.exists():
-        print(f"bench_compare: no fresh results at {args.results} "
-              f"(run: python -m benchmarks.run --quick --only micro)")
+        rep.emit("error", reason="no_fresh_results", path=str(args.results),
+                 hint="python -m benchmarks.run --quick --only micro")
         return 1
     if args.update_baseline:
         args.baseline.parent.mkdir(parents=True, exist_ok=True)
         shutil.copyfile(args.results, args.baseline)
-        print(f"bench_compare: baseline updated from {args.results}")
+        rep.emit("baseline_updated", source=str(args.results),
+                 baseline=str(args.baseline))
         return 0
     if not args.baseline.exists():
-        print(f"bench_compare: no baseline at {args.baseline} "
-              f"(seed one with --update-baseline)")
+        rep.emit("error", reason="no_baseline", path=str(args.baseline),
+                 hint="seed one with --update-baseline")
         return 1
 
     base = json.loads(args.baseline.read_text())
     fresh = json.loads(args.results.read_text())
-    print(f"bench_compare: {args.results} vs {args.baseline} "
-          f"(ratio {args.ratio}x, floor {args.floor}s)")
-    failures, checked = compare(base, fresh, args.ratio, args.floor)
-    if failures:
-        print(f"\nbench_compare: {len(failures)}/{checked} cells FAILED:")
-        for f in failures:
-            print(f"  - {f}")
-        return 1
-    print(f"bench_compare: all {checked} cells within tolerance")
-    return 0
+    rep.emit("start", results=str(args.results), baseline=str(args.baseline),
+             ratio=args.ratio, floor_s=args.floor)
+    failures, checked = compare(base, fresh, args.ratio, args.floor, rep)
+    rep.emit("verdict", status="fail" if failures else "pass",
+             checked=checked, failed=len(failures))
+    for f in failures:
+        rep.emit("failure", detail=f)
+    if args.json:
+        rep.write_json(str(args.json), verdict="fail" if failures else "pass",
+                       checked=checked)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":

@@ -4,8 +4,9 @@
 * every intra-repo markdown link in README.md and docs/*.md resolves to an
   existing file;
 * every fenced ``bash`` command in those files that references a path under
-  ``benchmarks/`` or ``examples/`` points at a file that exists (module
-  spellings like ``-m benchmarks.run`` are resolved to their .py files too).
+  ``benchmarks/``, ``examples/`` or ``tools/`` points at a file that exists
+  (module spellings like ``-m benchmarks.run`` are resolved to their .py
+  files too).
 
 Exit code 0 = clean; 1 = problems (listed on stdout).
 """
@@ -20,8 +21,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 FENCE_RE = re.compile(r"```bash\n(.*?)```", re.DOTALL)
-PATH_RE = re.compile(r"\b((?:benchmarks|examples)/[\w./-]+)")
-MODULE_RE = re.compile(r"-m\s+(benchmarks(?:\.\w+)+)")
+PATH_RE = re.compile(r"\b((?:benchmarks|examples|tools)/[\w./-]+)")
+MODULE_RE = re.compile(r"-m\s+((?:benchmarks|tools)(?:\.\w+)+)")
 
 
 def md_files():

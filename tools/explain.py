@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Offline flight-recorder replay: answer "why" questions about a run.
+
+    python tools/explain.py TRACE.jsonl summary
+    python tools/explain.py TRACE.jsonl timeline [--kind K] [--instance I]
+                                                 [--job J] [--limit N]
+    python tools/explain.py TRACE.jsonl why-terminated --instance I
+    python tools/explain.py TRACE.jsonl cost [--by category|key]
+    python tools/explain.py TRACE.jsonl rounds [--round N]
+    python tools/explain.py TRACE.jsonl attainment
+    python tools/explain.py TRACE.jsonl prom
+
+TRACE.jsonl is a ``FlightRecorder`` artifact (``benchmarks/run.py --obs``
+saves one per simulated run under ``results/traces/``).  The flagship
+query is ``why-terminated``: it joins the instance's ``terminate`` event
+with the decision round that sealed its fate — the keep-test margin, the
+keep-bonus slack decomposed by policy layer, and any pressure signals
+(spot notices, credit drains) that forced the round.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs import FlightRecorder  # noqa: E402
+from repro.obs import events as EV  # noqa: E402
+
+
+def _fields(e) -> str:
+    parts = [f"t={e.t:g}", f"kind={e.kind}"]
+    if e.instance_id is not None:
+        parts.append(f"instance={e.instance_id}")
+    if e.job_id is not None:
+        parts.append(f"job={e.job_id}")
+    for k, v in e.fields:
+        parts.append(f"{k}={v:g}" if isinstance(v, float) else f"{k}={v}")
+    return " ".join(parts)
+
+
+def cmd_summary(rec: FlightRecorder, args) -> int:
+    for k, v in rec.meta.items():
+        print(f"meta {k}={v}")
+    counts = rec.events.counts()
+    for kind in sorted(counts):
+        print(f"events {kind}={counts[kind]}")
+    print(f"cost total=${rec.events.total_cost():.2f} "
+          f"entries={rec.events.cost_entries}")
+    for cat, amt in sorted(rec.events.cost_by("category").items()):
+        print(f"cost {cat}=${amt:.2f}")
+    print(f"decisions rounds={len(rec.decisions)}")
+    for name, total in sorted(rec.profiler.totals().items()):
+        print(f"span {name} total_s={total:.4f} "
+              f"n={len(rec.profiler.by_name(name))}")
+    return 0
+
+
+def cmd_timeline(rec: FlightRecorder, args) -> int:
+    events = list(rec.events)
+    if args.kind:
+        events = [e for e in events if e.kind == args.kind]
+    if args.instance is not None:
+        events = [e for e in rec.events.for_instance(args.instance)
+                  if e in events]
+    if args.job is not None:
+        events = [e for e in events if e.job_id == args.job]
+    shown = events if args.limit is None else events[:args.limit]
+    for e in shown:
+        print(_fields(e))
+    if len(shown) < len(events):
+        print(f"... {len(events) - len(shown)} more "
+              f"(raise --limit)")
+    return 0
+
+
+def cmd_why_terminated(rec: FlightRecorder, args) -> int:
+    iid = args.instance
+    terms = [e for e in rec.events.of_kind(EV.TERMINATE)
+             if e.instance_id == iid]
+    if not terms:
+        alive = [e for e in rec.events.for_instance(iid)]
+        if alive:
+            print(f"instance {iid}: never terminated "
+                  f"({len(alive)} events; alive at end of run)")
+        else:
+            print(f"instance {iid}: not found in this trace")
+        return 1
+    term = terms[-1]
+    print(f"instance {iid} terminated at t={term.t:g} "
+          f"reason={term.get('reason')} lifetime_s={term.get('lifetime_s'):g} "
+          f"billed=${term.get('billed', 0.0):.4f}")
+    # the decision round that sealed its fate
+    round_rec, keep = rec.decisions.last_keep_entry(iid, term.t)
+    if keep is not None:
+        verdict = "kept" if keep.kept else "evicted"
+        print(f"keep-test round={round_rec.round_index} t={round_rec.t:g} "
+              f"kind={round_rec.kind}: {verdict} "
+              f"saving=${keep.saving:.4f}/h cost=${keep.cost:.4f}/h "
+              f"bonus=${keep.bonus:.4f}/h margin=${keep.margin:+.4f}/h")
+        for layer, amt in sorted(keep.bonus_by_layer.items()):
+            print(f"  bonus layer={layer} ${amt:.4f}/h")
+        if not keep.kept:
+            print(f"  -> evicted: the task set's reservation-price saving "
+                  f"did not cover the instance's cost "
+                  f"(short by ${-keep.margin:.4f}/h)")
+    else:
+        d = rec.decisions.at_or_before(term.t)
+        if d is not None and iid in d.evacuated:
+            print(f"forced-partial round={d.round_index} t={d.t:g} "
+                  f"evacuated this instance (dirty={list(d.dirty)} "
+                  f"fallback={d.incremental_fallback or 'none'})")
+        elif d is None:
+            print("no decision round at or before termination "
+                  "(housekeeping release)")
+        else:
+            print(f"not in any keep table: released outside the keep test "
+                  f"(reason={term.get('reason')})")
+    # pressure context: notices / signals naming this instance
+    for e in rec.events.for_instance(iid):
+        if e.kind in (EV.NOTICE, EV.PRESSURE, EV.PREEMPT, EV.FAILURE,
+                      EV.CREDIT_THROTTLE) and e.t <= term.t:
+            print(f"context {_fields(e)}")
+    return 0
+
+
+def cmd_cost(rec: FlightRecorder, args) -> int:
+    by = rec.events.cost_by(args.by)
+    total = rec.events.total_cost()
+    for k, v in sorted(by.items(), key=lambda kv: -kv[1]):
+        share = (v / total * 100.0) if total else 0.0
+        print(f"{args.by}={k} ${v:.2f} share={share:.1f}%")
+    print(f"total ${total:.2f}")
+    return 0
+
+
+def cmd_rounds(rec: FlightRecorder, args) -> int:
+    for d in rec.decisions:
+        if args.round is not None and d.round_index != args.round:
+            continue
+        kept = sum(1 for e in d.keep_table if e.kept)
+        line = (f"round={d.round_index} t={d.t:g} kind={d.kind} "
+                f"d_hat_s={d.d_hat_s:g} tasks={d.n_tasks} "
+                f"pending={d.n_pending} keep={kept}/{len(d.keep_table)}")
+        if d.adopt_full is not None:
+            line += (f" adopt_full={d.adopt_full} s_full={d.s_full:.3f}"
+                     f" s_partial={d.s_partial:.3f}")
+        if d.kind == "forced-partial":
+            line += (f" evacuated={list(d.evacuated)}"
+                     f" dirty={len(d.dirty)}")
+            if d.incremental_fallback:
+                line += f" fallback={d.incremental_fallback}"
+        print(line)
+        if args.round is not None:
+            print(f"  rp min={d.rp_min:.4f} mean={d.rp_mean:.4f} "
+                  f"max={d.rp_max:.4f} mask_layers={list(d.mask_layers)} "
+                  f"caps_layer={d.caps_layer}")
+            for e in d.keep_table:
+                print(f"  keep instance={e.instance_id} type={e.type_index} "
+                      f"saving={e.saving:.4f} cost={e.cost:.4f} "
+                      f"bonus={e.bonus:.4f} margin={e.margin:+.4f} "
+                      f"kept={e.kept} by_layer={e.bonus_by_layer}")
+            for k, v in sorted(d.refine_deltas.items()):
+                print(f"  refine {k}{v:+g}")
+    return 0
+
+
+def cmd_attainment(rec: FlightRecorder, args) -> int:
+    """SLO-risk windows per serving job, from the slo_risk edge events."""
+    risk = rec.events.of_kind(EV.SLO_RISK)
+    if not risk:
+        print("no slo_risk events in this trace (no serving jobs, or "
+              "attainment never dipped)")
+        return 0
+    open_t: dict = {}
+    windows = []
+    for e in risk:
+        if e.get("edge") == "on":
+            open_t[e.job_id] = e
+        else:
+            start = open_t.pop(e.job_id, None)
+            if start is not None:
+                windows.append((e.job_id, start.t, e.t,
+                                start.get("load_rps"),
+                                start.get("capacity_rps")))
+    for jid, t0, t1, load, cap in windows:
+        print(f"dip job={jid} t={t0:g}..{t1:g} duration_s={t1 - t0:g} "
+              f"load_rps={load:g} capacity_rps={cap:g}")
+    for jid, e in open_t.items():
+        print(f"dip job={jid} t={e.t:g}..end (unresolved at end of run)")
+    series = rec.metrics.gauges.get("slo_risk_jobs")
+    if series is not None and series.samples:
+        vals = series.values()
+        print(f"slo_risk_jobs max={max(vals):g} "
+              f"rounds_at_risk={sum(1 for v in vals if v > 0)}"
+              f"/{len(vals)}")
+    return 0
+
+
+def cmd_prom(rec: FlightRecorder, args) -> int:
+    sys.stdout.write(rec.metrics.prom_text())
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("trace", help="FlightRecorder JSONL artifact")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sub.add_parser("summary", help="meta, event counts, cost, span totals")
+    tl = sub.add_parser("timeline", help="filtered event stream")
+    tl.add_argument("--kind", default=None)
+    tl.add_argument("--instance", type=int, default=None)
+    tl.add_argument("--job", type=int, default=None)
+    tl.add_argument("--limit", type=int, default=50)
+    wt = sub.add_parser("why-terminated",
+                        help="join terminate event with its keep-test round")
+    wt.add_argument("--instance", type=int, required=True)
+    co = sub.add_parser("cost", help="cost ledger by category or key")
+    co.add_argument("--by", choices=("category", "key"), default="category")
+    ro = sub.add_parser("rounds", help="decision trace; --round N for detail")
+    ro.add_argument("--round", type=int, default=None)
+    sub.add_parser("attainment", help="SLO-risk windows (serving jobs)")
+    sub.add_parser("prom", help="Prometheus text exposition of the metrics")
+    args = ap.parse_args(argv)
+
+    rec = FlightRecorder.load(args.trace)
+    return {"summary": cmd_summary, "timeline": cmd_timeline,
+            "why-terminated": cmd_why_terminated, "cost": cmd_cost,
+            "rounds": cmd_rounds, "attainment": cmd_attainment,
+            "prom": cmd_prom}[args.cmd](rec, args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
