@@ -109,7 +109,7 @@ def table5(sizes=(1000, 2000, 4000, 8000), quick=False):
         dt_jx = time.time() - t0
         rows.append({"n_tasks": n,
                      "paper_python_s": {1000: 0.40, 2000: 1.50, 4000: 5.53,
-                                        8000: 22.06}.get(n, ""),
+                                        8000: 22.06}.get(n, "n/a"),
                      "numpy_s": round(dt_np, 3),
                      "jax_jit_s": round(dt_jx, 3),
                      "jax_warmup_s": round(dt_warm, 3),

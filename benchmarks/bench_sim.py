@@ -1,0 +1,234 @@
+"""Simulator-core throughput benchmark: vectorized vs scalar accrual.
+
+The PR this pins rewrote the simulator's accrual/billing hot path as array
+programs over structure-of-arrays fleet state (``cluster/fleet.SlotTable``
++ per-type aggregates; see docs/ARCHITECTURE.md, "The simulator at fleet
+scale").  This bench measures the end-to-end win on two axes and gates it
+in CI through ``tools/bench_compare.py``:
+
+* ``sim_scenarios`` — serving-class and portfolio-class fleets (diurnal
+  SLO traffic next to batch filler on an OU spot market; commitment pool +
+  two provider markets), sized so the accrual sweep dominates the scalar
+  runtime the way it does on any long-horizon fleet.  Acceptance:
+  vectorized ≥ 10× scalar end-to-end on both cells, in quick mode.
+* ``sim_population`` — task-population scaling sweep (10³ → 10⁵ in quick
+  mode, 10⁶ vectorized-only with ``--full``: the million-task trace
+  sweeps in minutes).  Acceptance: vectorized ≥ 5× scalar at the 10⁵
+  cell.
+
+Both modes run the *identical* event trajectory (the vectorized core is
+pinned bit-identical on decisions, ≤1e-9 relative on reassociated sums —
+tests/test_invariants.py), so each cell also cross-checks ``total_cost``
+between modes and reports the relative error.
+
+The fleet is driven by a bench-local launch-and-hold scheduler (one job
+per instance, packed to fill it) so the measured time is the simulator
+core, not planner work: EvaScheduler's own planning cost has its own
+bench + gate (bench_micro's scaling curve).
+
+    PYTHONPATH=src python -m benchmarks.run --quick --only sim
+"""
+from __future__ import annotations
+
+import time
+
+from repro.cluster import SimConfig, Simulator
+from repro.core import (CommitmentModel, PriceModel, Provider,
+                        RequestProfile, ServiceSpec, UtilityCurve,
+                        aws_catalog, make_job, multi_provider_catalog)
+from repro.core.cluster_types import ClusterConfig
+from repro.core.scheduler import SchedulerBase
+from repro.core.workloads import WORKLOAD_INDEX
+
+from .common import print_table, save_results
+
+BATCH = WORKLOAD_INDEX["a3c"]        # (4 vCPU, 8 GB) on c7i
+SERVE = WORKLOAD_INDEX["embed-serve"]  # (6 vCPU, 16 GB) on c7i
+POOL_W = WORKLOAD_INDEX["diamond"]   # (8 vCPU, 16 GB): 4 fill a c7i.8xlarge
+GCP_W = WORKLOAD_INDEX["openfoam"]   # (6 vCPU, 8 GB): 5 per c7i.8xlarge
+TASKS_PER_JOB = 8        # 8 × a3c exactly fills a c7i.8xlarge (32 vCPU)
+REPLICAS = 24            # 24 × embed-serve fills a c7i.48xlarge (384 GB)
+
+#: scalar cells above this population are skipped ('' in the table): the
+#: reference path is the thing this PR made obsolete at fleet scale
+SCALAR_CAP = 100_000
+
+SCEN_COLS = ["scenario", "n_tasks", "scalar_s", "vectorized_s",
+             "speedup", "cost_rel_err"]
+POP_COLS = ["n_tasks", "scalar_s", "vectorized_s", "speedup",
+            "cost_rel_err"]
+
+
+class _HoldScheduler(SchedulerBase):
+    """Launch-and-hold: place each job's tasks together on one instance of
+    a fixed per-workload type, then keep the assignment for the rest of
+    the run.  Rounds after the first re-emit the live placement, so the
+    executor diffs to a no-op and the simulator core dominates wall time.
+    """
+
+    name = "hold"
+
+    def __init__(self, catalog, type_of_workload):
+        super().__init__(catalog)
+        self._kmap = type_of_workload
+
+    def schedule(self, view) -> ClusterConfig:
+        system_ids = set(view.tasks.ids.tolist())
+        assignments, placed = [], set()
+        for inst in view.live:
+            alive = tuple(t for t in inst.task_ids if t in system_ids)
+            if alive:
+                assignments.append((inst.type_index, alive))
+                placed.update(alive)
+        by_job = {}
+        for tid, jid, w in zip(view.tasks.ids.tolist(),
+                               view.tasks.job_ids.tolist(),
+                               view.tasks.workloads.tolist()):
+            if tid not in placed:
+                by_job.setdefault(jid, (w, []))[1].append(tid)
+        for jid in sorted(by_job):
+            w, tids = by_job[jid]
+            assignments.append((self._kmap[w], tuple(sorted(tids))))
+        return ClusterConfig(assignments)
+
+
+def _type_index(cat, name):
+    return next(i for i, t in enumerate(cat.types) if t.name == name)
+
+
+def _batch_jobs(n_tasks, horizon_s, start_id=0, arrival=0.0,
+                workload=BATCH, tasks_per_job=TASKS_PER_JOB):
+    """Long-lived batch filler: one-instance jobs that outlast the horizon,
+    so the fleet stays at full population the whole run."""
+    return [make_job(job_id=start_id + i, workload=workload,
+                     arrival_time=arrival, duration_s=horizon_s * 10.0,
+                     n_tasks=tasks_per_job)
+            for i in range(max(n_tasks // tasks_per_job, 1))]
+
+
+def _service_jobs(n_fleets, horizon_s, start_id):
+    """Diurnal SLO fleets (one instance each): a 900 s profile grid keeps
+    a steady RATE_UPDATE stream next to the 300 s price grid."""
+    jobs = []
+    for i in range(n_fleets):
+        prof = RequestProfile.diurnal(
+            peak_rps=6000.0, duration_s=horizon_s, step_s=900.0,
+            peak_hour=5.0 + 3.0 * i)
+        spec = ServiceSpec(requests=prof, utility=UtilityCurve(100.0),
+                           per_replica_rps=400.0, base_latency_ms=25.0)
+        jobs.append(make_job(job_id=start_id + i, workload=SERVE,
+                             arrival_time=0.0, duration_s=horizon_s * 10.0,
+                             n_tasks=REPLICAS, service=spec))
+    return jobs
+
+
+def _measure(cat, jobs, cfg, kmap, vectorized):
+    sched = _HoldScheduler(cat, kmap)
+    t0 = time.time()
+    sim = Simulator(cat, jobs, sched, cfg, vectorized=vectorized)
+    m = sim.run()
+    return time.time() - t0, m
+
+
+def _cell(cat, jobs, cfg, kmap, run_scalar=True):
+    """One table cell: vectorized (always) vs scalar (unless capped)."""
+    vec_s, mv = _measure(cat, jobs, cfg, kmap, vectorized=True)
+    if not run_scalar:
+        return {"scalar_s": "", "vectorized_s": round(vec_s, 3),
+                "speedup": "", "cost_rel_err": ""}
+    sca_s, ms = _measure(cat, jobs, cfg, kmap, vectorized=False)
+    denom = max(abs(ms.total_cost), 1e-12)
+    rel = abs(mv.total_cost - ms.total_cost) / denom
+    return {"scalar_s": round(sca_s, 3), "vectorized_s": round(vec_s, 3),
+            "speedup": round(sca_s / max(vec_s, 1e-9), 1),
+            "cost_rel_err": float(f"{rel:.2e}")}
+
+
+def scenarios(quick=False):
+    """Serving-class and portfolio-class cells (the ≥10× acceptance)."""
+    rows = []
+    horizon = (84.0 if quick else 168.0) * 3600.0
+    # --- serving-class: diurnal SLO fleets + batch filler on an OU market
+    n_batch = 20_000
+    cat = aws_catalog(
+        price_model=PriceModel.mean_reverting(discount=0.35, seed=7))
+    jobs = (_batch_jobs(n_batch, horizon)
+            + _service_jobs(4, horizon, start_id=900_000))
+    kmap = {BATCH: _type_index(cat, "c7i.8xlarge"),
+            SERVE: _type_index(cat, "c7i.48xlarge")}
+    cfg = SimConfig(seed=3, max_time_s=horizon, round_interval_s=6 * 3600.0)
+    n_tasks = n_batch + 4 * REPLICAS
+    row = {"scenario": "serving", "n_tasks": n_tasks}
+    row.update(_cell(cat, jobs, cfg, kmap))
+    rows.append(row)
+    # --- portfolio-class: commitment pool (kept exactly full) + two
+    # provider spot markets, steady base at t=0 plus burst arrival waves
+    # mid-horizon (the arrival-coalescing path)
+    n_market, n_pool, n_gcp, n_burst = 7_200, 2_400, 2_400, 2_400
+    cm = CommitmentModel(instance_type="c7i.8xlarge",
+                         pool_size=n_pool // 4, rate_fraction=0.55)
+    pcat = multi_provider_catalog([
+        Provider(name="aws",
+                 price_model=PriceModel.mean_reverting(discount=0.4,
+                                                       seed=11),
+                 commitments=(cm,)),
+        Provider(name="gcp", cost_scale=1.03,
+                 price_model=PriceModel.mean_reverting(discount=0.45,
+                                                       seed=12))])
+    pjobs = (_batch_jobs(n_market, horizon)
+             + _batch_jobs(n_pool, horizon, start_id=200_000,
+                           workload=POOL_W, tasks_per_job=4)
+             + _batch_jobs(n_gcp, horizon, start_id=300_000,
+                           workload=GCP_W, tasks_per_job=5))
+    for wave, t in enumerate((0.3, 0.6)):
+        pjobs += _batch_jobs(n_burst // 2, horizon,
+                             start_id=400_000 + 50_000 * wave,
+                             arrival=t * horizon)
+    pkmap = {BATCH: _type_index(pcat, "aws/c7i.8xlarge"),
+             POOL_W: _type_index(pcat,
+                                 "aws/commit-c7i.8xlarge/c7i.8xlarge"),
+             GCP_W: _type_index(pcat, "gcp/c7i.8xlarge")}
+    pcfg = SimConfig(seed=5, max_time_s=horizon,
+                     round_interval_s=6 * 3600.0)
+    row = {"scenario": "portfolio",
+           "n_tasks": n_market + n_pool + n_gcp + n_burst}
+    row.update(_cell(pcat, pjobs, pcfg, pkmap))
+    rows.append(row)
+    print_table("sim_scenarios: vectorized vs scalar accrual (end-to-end)",
+                rows, SCEN_COLS)
+    return rows
+
+
+def population(quick=False, full=False):
+    """Task-population scaling sweep (the ≥5× floor at 10⁵)."""
+    rows = []
+    ns = [1_000, 10_000, 100_000]
+    if full:
+        ns.append(1_000_000)
+    horizon = 24.0 * 3600.0
+    cat = aws_catalog(
+        price_model=PriceModel.mean_reverting(discount=0.35, seed=7))
+    kmap = {BATCH: _type_index(cat, "c7i.8xlarge")}
+    for n in ns:
+        jobs = _batch_jobs(n, horizon)
+        cfg = SimConfig(seed=1, max_time_s=horizon,
+                        round_interval_s=6 * 3600.0)
+        row = {"n_tasks": n}
+        row.update(_cell(cat, jobs, cfg, kmap, run_scalar=n <= SCALAR_CAP))
+        rows.append(row)
+    print_table("sim_population: accrual scaling with fleet size",
+                rows, POP_COLS)
+    return rows
+
+
+def run(quick=False, full=False):
+    out = {
+        "sim_scenarios": scenarios(quick=quick),
+        "sim_population": population(quick=quick, full=full),
+    }
+    save_results("bench_sim", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

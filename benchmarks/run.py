@@ -26,7 +26,7 @@ def main():
                     help="run a single bench: micro|endtoend|multitask|"
                          "interference|migration|composition|arrival|"
                          "roofline|spot|multiregion|credits|autoscale|"
-                         "stability|serving|portfolio")
+                         "stability|serving|portfolio|sim")
     ap.add_argument("--obs", action="store_true",
                     help="attach a flight recorder to every simulated run "
                          "and save JSONL traces (tools/explain.py replays "
@@ -48,7 +48,8 @@ def main():
                    bench_credits, bench_endtoend, bench_interference,
                    bench_micro, bench_migration, bench_multiregion,
                    bench_multitask, bench_portfolio, bench_roofline,
-                   bench_serving, bench_spot, bench_stability, common)
+                   bench_serving, bench_sim, bench_spot, bench_stability,
+                   common)
 
     if args.results_dir:
         common.RESULTS_DIR = args.results_dir
@@ -80,6 +81,7 @@ def main():
                                              full=args.full),
         "portfolio": lambda: bench_portfolio.run(quick=args.quick,
                                                  full=args.full),
+        "sim": lambda: bench_sim.run(quick=args.quick, full=args.full),
     }
     todo = [args.only] if args.only else list(benches)
     rep = Reporter("bench")

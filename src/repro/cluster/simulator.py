@@ -133,13 +133,55 @@ from ..core.catalog import Catalog, FAMILIES
 from ..core.cluster_types import ClusterConfig, Job, TaskSet
 from ..core.plan import LiveInstance, diff_configs
 from ..core.scheduler import SchedulerBase, SchedulerView
+from ..core.serving import p99_latency_ms_np, utility_np
 from ..core.workloads import M_TRUE, WORKLOADS, checkpoint_size_gb
 from ..obs import events as obs_ev
 from ..policies.pressure import (CREDIT, DEADLINE, SLO, SPOT, PressureBus,
                                  PressureSignal)
+from .fleet import SlotTable
 
 # task states
 PENDING, WAITING, CKPT, LAUNCH, RUNNING = range(5)
+
+
+class _Col:
+    """Descriptor for an entity attribute backed by a private slot and —
+    while the entity is registered in a :class:`~repro.cluster.fleet.
+    SlotTable` (vectorized mode) — by that table's column.
+
+    ``through=True`` (accrual-integrated columns): sweeps advance the
+    array only, so reads go through the table while registered and fall
+    back to the private slot after deregistration (the table's ``remove``
+    hands the final value back).  ``through=False`` (event-written
+    columns): the private copy is always current, so reads stay cheap and
+    writes mirror into the table for the sweeps to consume.
+    """
+
+    __slots__ = ("attr", "table_attr", "col", "through", "boolean")
+
+    def __init__(self, attr: str, table_attr: str, col: str,
+                 through: bool = True, boolean: bool = False):
+        self.attr = attr
+        self.table_attr = table_attr
+        self.col = col
+        self.through = through
+        self.boolean = boolean
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        if self.through:
+            t = getattr(obj, self.table_attr)
+            if t is not None:
+                return float(t.f[self.col][t.slot[obj._eid]])
+        return getattr(obj, self.attr)
+
+    def __set__(self, obj, v):
+        setattr(obj, self.attr, v)
+        t = getattr(obj, self.table_attr)
+        if t is not None:
+            cols = t.b if self.boolean else t.f
+            cols[self.col][t.slot[obj._eid]] = v
 
 
 @dataclasses.dataclass
@@ -177,52 +219,107 @@ class _TaskState:
     restore_transfer_s: float = 0.0
 
 
-@dataclasses.dataclass
 class _JobState:
-    job: Job
-    iters_done: float = 0.0
-    rate: float = 0.0
-    version: int = 0
-    idle_s: float = 0.0
-    running_s: float = 0.0
-    tput_weighted: float = 0.0  # ∫ tput dt while running
-    done_t: Optional[float] = None
-    arrived: bool = False
-    # deferral scenarios: instant a config first assigned this job's tasks
-    # (the PENDING→ADMIT transition); reset to None if fully withdrawn
-    admitted_t: Optional[float] = None
-    # serving scenarios (jobs carrying a ServiceSpec): current effective
-    # fleet capacity in rps, utility-risk latch (SLO pressure fires on its
-    # rising edge) and the served-request integrals
-    svc_capacity: float = 0.0
-    svc_risk: bool = False
-    req_total: float = 0.0
-    req_ok: float = 0.0
-    util_integral: float = 0.0  # ∫ utility(p99) · λ dt
+    """Mutable per-job simulation state.
+
+    The accrual-integrated accumulators (progress, idle/running time,
+    served-request integrals) are :class:`_Col` attributes: in vectorized
+    mode they live in the simulator's SoA job/service tables while the job
+    is active, so sweeps advance whole columns at once and every reader —
+    including tests inspecting ``js.iters_done`` mid-run — still sees
+    current values.  In scalar mode (or once deregistered) they are plain
+    attributes.
+    """
+
+    __slots__ = ("job", "version", "done_t", "arrived", "admitted_t",
+                 "svc_risk", "svc_seg", "svc_times", "svc_rps",
+                 "_rate", "_iters", "_idle", "_run_s", "_tputw",
+                 "_svc_cap", "_svc_lam", "_req", "_ok", "_util",
+                 "_jt", "_st", "_eid")
+
+    # accrual-integrated: sweeps write the array, reads go through it
+    iters_done = _Col("_iters", "_jt", "iters")
+    idle_s = _Col("_idle", "_jt", "idle")
+    running_s = _Col("_run_s", "_jt", "run_s")
+    tput_weighted = _Col("_tputw", "_jt", "tputw")  # ∫ tput dt while running
+    req_total = _Col("_req", "_st", "req")
+    req_ok = _Col("_ok", "_st", "ok")
+    util_integral = _Col("_util", "_st", "util")  # ∫ utility(p99) · λ dt
+    # event-written: private copy always current, writes mirror to the table
+    rate = _Col("_rate", "_jt", "rate", through=False)
+    svc_capacity = _Col("_svc_cap", "_st", "cap", through=False)
+    svc_lam = _Col("_svc_lam", "_st", "lam", through=False)
+
+    def __init__(self, job: Job, arrived: bool = False):
+        self.job = job
+        self._eid = job.job_id
+        self.version = 0
+        self.done_t: Optional[float] = None
+        self.arrived = arrived
+        # deferral scenarios: instant a config first assigned this job's
+        # tasks (the PENDING→ADMIT transition); None again if withdrawn
+        self.admitted_t: Optional[float] = None
+        # serving scenarios (jobs carrying a ServiceSpec): utility-risk
+        # latch (SLO pressure fires on its rising edge), request-profile
+        # segment cursor over the cached breakpoint arrays, current
+        # effective fleet capacity / request rate, served-request integrals
+        self.svc_risk = False
+        self.svc_seg = -1
+        self.svc_times: Optional[list] = None
+        self.svc_rps: Optional[list] = None
+        self._rate = 0.0
+        self._iters = 0.0
+        self._idle = 0.0
+        self._run_s = 0.0
+        self._tputw = 0.0
+        self._svc_cap = 0.0
+        self._svc_lam = 0.0
+        self._req = 0.0
+        self._ok = 0.0
+        self._util = 0.0
+        self._jt: Optional[SlotTable] = None
+        self._st: Optional[SlotTable] = None
 
 
-@dataclasses.dataclass
 class _Instance:
-    iid: int
-    type_index: int
-    request_t: float
-    ready_t: float
-    ready: bool = False
-    terminated_t: Optional[float] = None
-    draining: bool = False
-    preempt_deadline: Optional[float] = None  # revocation notice received
-    assigned: Set[int] = dataclasses.field(default_factory=set)
-    residents: Set[int] = dataclasses.field(default_factory=set)  # outbound ckpt
-    # running total of assigned tasks' demand on this instance's family,
-    # maintained by Simulator._assign_task/_unassign_task so per-accrual
-    # allocation accounting is O(alive instances), not O(alive tasks).
-    # Demands are integer-valued, so the incremental updates are float-exact.
-    alloc: np.ndarray = dataclasses.field(default_factory=lambda: np.zeros(3))
+    """Mutable per-instance simulation state; the burstable-credit balance
+    is a :class:`_Col` backed by the simulator's credit table while the
+    instance is alive in vectorized mode (see :class:`_JobState`)."""
+
+    __slots__ = ("iid", "type_index", "request_t", "ready_t", "ready",
+                 "terminated_t", "draining", "preempt_deadline", "assigned",
+                 "residents", "alloc", "credit_seq",
+                 "_credit", "_throttled", "_ct", "_eid")
+
     # burstable-credit state (types carrying a CreditModel only; the balance
     # is integrated lazily in _accrue, so it is current as of _last_accrue)
-    credit_hours: float = 0.0  # balance in full-speed hours
-    throttled: bool = False  # busy at zero balance -> baseline speed
-    credit_seq: int = 0  # bumps invalidate in-flight CREDIT_EXHAUST events
+    credit_hours = _Col("_credit", "_ct", "bal")  # balance, full-speed hours
+    # busy at zero balance -> baseline speed
+    throttled = _Col("_throttled", "_ct", "throttled",
+                     through=False, boolean=True)
+
+    def __init__(self, iid: int, type_index: int,
+                 request_t: float, ready_t: float):
+        self.iid = iid
+        self._eid = iid
+        self.type_index = type_index
+        self.request_t = request_t
+        self.ready_t = ready_t
+        self.ready = False
+        self.terminated_t: Optional[float] = None
+        self.draining = False
+        self.preempt_deadline: Optional[float] = None  # revocation notice
+        self.assigned: Set[int] = set()
+        self.residents: Set[int] = set()  # outbound ckpt
+        # running total of assigned tasks' demand on this instance's family,
+        # maintained by Simulator._assign_task/_unassign_task so per-accrual
+        # allocation accounting is O(alive instances), not O(alive tasks).
+        # Demands are integer-valued, so incremental updates are float-exact.
+        self.alloc = np.zeros(3)
+        self._credit = 0.0
+        self._throttled = False
+        self.credit_seq = 0  # bumps invalidate in-flight CREDIT_EXHAUST
+        self._ct: Optional[SlotTable] = None
 
     @property
     def alive(self) -> bool:
@@ -382,12 +479,26 @@ class Metrics:
  PRICE_UPDATE, PREEMPT_FIRE, CREDIT_EXHAUST, DEFER_DEADLINE, RATE_UPDATE,
  ROUND) = range(12)
 
+# Event kinds whose coincident bursts collapse into one accrual sweep in
+# run(): their handlers never pop events themselves, never rebind the heap,
+# and only push same-timestamp events of later-sorting kinds (ROUND) or
+# strictly-future events — so handling the whole burst after a single
+# _accrue is observably identical to the one-pop-one-accrue reference
+# (the in-between accruals were dt=0 no-ops).  JOB_DONE is deliberately
+# excluded: its handler can filter + re-heapify the event heap.
+_COALESCE = frozenset((ARRIVAL, PRICE_UPDATE, RATE_UPDATE, DEFER_DEADLINE))
+
 
 class Simulator:
     def __init__(self, catalog: Catalog, jobs: Sequence[Job],
                  scheduler: SchedulerBase, cfg: Optional[SimConfig] = None,
-                 recorder=None):
+                 recorder=None, vectorized: bool = True):
         self.catalog = catalog
+        # Vectorized accrual core (docs/ARCHITECTURE.md, "The simulator at
+        # fleet scale").  vectorized=False keeps the original per-entity
+        # scalar sweeps as the pinned reference: summaries agree exactly on
+        # counters and within 1e-9 relative on reassociated float sums.
+        self._vec = bool(vectorized)
         self.scheduler = scheduler
         self.cfg = cfg or SimConfig()
         # Flight recorder (repro.obs.FlightRecorder) — a pure observer: every
@@ -518,14 +629,39 @@ class Simulator:
         self._serving = any(j.service is not None for j in jobs)
         if self._serving:
             self.metrics.has_service = True
+            # per-profile breakpoint arrays, materialized once: _svc_rate
+            # advances a per-job cursor over these lists instead of
+            # re-searching the piecewise representation on every accrual
+            # segment (profiles are shared across jobs, hence keyed by id)
+            self._profile_segs: Dict[int, Tuple[list, list]] = {}
             for job in jobs:
                 if job.service is None:
                     continue
+                prof = job.service.requests
+                if id(prof) not in self._profile_segs:
+                    t_arr, r_arr = prof.segments()
+                    self._profile_segs[id(prof)] = (t_arr.tolist(),
+                                                    r_arr.tolist())
                 end = min(job.arrival_time + job.duration_s,
                           self.cfg.max_time_s)
-                for t in job.service.requests.breakpoints_between(
-                        job.arrival_time, end):
+                for t in prof.breakpoints_between(job.arrival_time, end):
                     self._push(float(t), RATE_UPDATE, (job.job_id,))
+        # SoA fleet state for vectorized sweeps: per-type alive counts and
+        # fleet-wide allocation totals (einsum inputs), plus swap-remove
+        # tables holding the accrual-integrated columns of live entities.
+        # Maintained unconditionally cheap at the event handlers; consumed
+        # only by _accrue_vec.
+        if self._vec:
+            self._type_alive = np.zeros(len(catalog), dtype=np.int64)
+            self._alloc_total = np.zeros(3)
+            self._assigned_total = 0
+            self._jtab = SlotTable(("rate", "iters", "idle", "run_s",
+                                    "tputw"))
+            self._ctab = SlotTable(("bal", "net", "cap_h"),
+                                   ("throttled",)) if self._credits else None
+            self._stab = SlotTable(("lam", "cap", "base_ms", "target_ms",
+                                    "soft_ms", "floor", "req", "ok",
+                                    "util")) if self._serving else None
         if self._spot:
             self._spot_rng = np.random.default_rng(self.cfg.seed + 0x5B07)
             self._cur_costs = pm.prices_at(catalog.costs, 0.0)
@@ -571,12 +707,20 @@ class Simulator:
     def _assign_task(self, inst: _Instance, tid: int) -> None:
         if tid not in inst.assigned:
             inst.assigned.add(tid)
-            inst.alloc += self._task_demand(inst, tid)
+            d = self._task_demand(inst, tid)
+            inst.alloc += d
+            if self._vec and inst.alive:
+                self._assigned_total += 1
+                self._alloc_total += d
 
     def _unassign_task(self, inst: _Instance, tid: int) -> None:
         if tid in inst.assigned:
             inst.assigned.discard(tid)
-            inst.alloc -= self._task_demand(inst, tid)
+            d = self._task_demand(inst, tid)
+            inst.alloc -= d
+            if self._vec and inst.alive:
+                self._assigned_total -= 1
+                self._alloc_total -= d
 
     # ------------------------------------------------------------ accounting
     def _bill_type(self, amt: float, k: int,
@@ -610,10 +754,23 @@ class Simulator:
 
     def _accrue(self, now: float):
         dt = now - self._last_accrue
-        t0 = self._last_accrue
         if dt <= 0:
             self._last_accrue = now
             return
+        if self._vec:
+            self._accrue_vec(dt)
+        else:
+            self._accrue_scalar(dt)
+        self._last_accrue = now
+
+    def _accrue_scalar(self, dt: float) -> None:
+        """Reference accrual sweep: a Python loop over live entities.
+
+        This is the pinned semantics the vectorized sweep must reproduce;
+        the hot loops touch the private slots directly (``js._iters`` etc.
+        — identical arithmetic, no descriptor dispatch) since in scalar
+        mode the tables are absent and the privates are the truth.
+        """
         m = self.metrics
         for inst in self._alive.values():
             m.ninst_integral += dt
@@ -622,7 +779,7 @@ class Simulator:
             m.alloc_integral += inst.alloc * dt
             if self._credits:  # integrate the credit balance (billing is NOT
                 self._credit_integrate(inst, dt)  # touched: cost stays flat)
-                if inst.throttled:
+                if inst._throttled:
                     m.throttled_s += dt
             if self._spot and not (self._commit
                                    and self._pool_type[inst.type_index]):
@@ -632,48 +789,144 @@ class Simulator:
                 amt = dt / 3600.0 * self._cur_costs[inst.type_index]
                 self._bill_type(amt, inst.type_index)
         if self._commit:
-            # standing pool bills: every slot, used or idle, exactly once
-            # per pool-hour — plus the utilization integrals
-            hours = dt / 3600.0
-            for ri, _cm in self._pools:
-                size = self._pool_size[ri]
-                amt = hours * size * self._pool_rate[ri]
-                m.commitment_cost += amt
-                self._bill_region(amt, ri, obs_ev.COST_COMMITMENT)
-                self._pool_capacity_s[ri] += dt * size
-                self._pool_covered_s[ri] += dt * min(
-                    self._region_alive[ri], size)
+            self._accrue_pools(dt)
         for js in self._active_jobs.values():
-            if js.rate > 0:
-                js.iters_done += js.rate * dt
-                js.running_s += dt
-                js.tput_weighted += js.rate * dt
+            if js._rate > 0:
+                js._iters += js._rate * dt
+                js._run_s += dt
+                js._tputw += js._rate * dt
             else:
-                js.idle_s += dt
+                js._idle += dt
             if self._serving and js.job.service is not None:
                 # rate is constant on the segment (RATE_UPDATE events sit on
                 # every profile breakpoint), so λ at the segment start holds
-                self._svc_accrue(js, t0, dt)
-        self._last_accrue = now
+                self._svc_accrue(js, dt)
 
-    def _svc_accrue(self, js: _JobState, t0: float, dt: float) -> None:
+    def _accrue_vec(self, dt: float) -> None:
+        """One accrual sweep as array programs over the SoA fleet state.
+
+        Equivalent to :meth:`_accrue_scalar` up to float reassociation:
+        fleet integrals and spot bills become per-type segment sums
+        (count × price instead of repeated ``+=``) and metric totals
+        become array reductions, which may drift by ~1 ulp per sweep
+        (the documented ≤1e-9 relative tolerance), while credit balances
+        and per-job progress advance with the *same elementwise
+        arithmetic* as the scalar path and stay bit-identical — so every
+        scheduling decision, and hence the event trajectory, matches the
+        reference exactly.
+        """
+        m = self.metrics
+        n = len(self._alive)
+        if n:
+            m.ninst_integral += n * dt
+            m.ntask_integral += self._assigned_total * dt
+            # per-type capacity integral in one (K,)·(K,3) contraction
+            m.cap_integral += (self._type_alive
+                               @ self.catalog.capacities) * dt
+            m.alloc_integral += self._alloc_total * dt
+            if self._credits and self._ctab.n:
+                ct = self._ctab
+                cn = ct.n
+                thr = ct.b["throttled"][:cn]
+                n_thr = int(np.count_nonzero(thr))
+                if n_thr:
+                    m.throttled_s += n_thr * dt
+                # same min/max/fma chain as _credit_integrate, elementwise;
+                # the `net` column is refreshed by _credit_reproject at
+                # every RUNNING-set change, so it is current by invariant
+                bal = ct.f["bal"][:cn]
+                nb = np.minimum(
+                    ct.f["cap_h"][:cn],
+                    np.maximum(0.0, bal + ct.f["net"][:cn] * dt / 3600.0))
+                np.copyto(bal, nb, where=~thr)
+            if self._spot:
+                counts = self._type_alive
+                if self._commit:
+                    counts = np.where(self._pool_type, 0, counts)
+                amt = dt / 3600.0 * self._cur_costs
+                for k in np.nonzero(counts)[0].tolist():
+                    self._bill_type(float(counts[k]) * float(amt[k]), k)
+        if self._commit:
+            self._accrue_pools(dt)
+        jt = self._jtab
+        jn = jt.n
+        if jn:
+            r = jt.f["rate"][:jn]
+            run = r > 0.0
+            adv = np.where(run, r * dt, 0.0)  # adding +0.0 on idle lanes
+            jt.f["iters"][:jn] += adv         # is bit-exact (values >= 0)
+            jt.f["tputw"][:jn] += adv
+            jt.f["run_s"][:jn] += np.where(run, dt, 0.0)
+            jt.f["idle"][:jn] += np.where(run, 0.0, dt)
+        if self._serving and self._stab.n:
+            self._svc_accrue_vec(dt)
+
+    def _accrue_pools(self, dt: float) -> None:
+        """Standing pool bills: every slot, used or idle, exactly once per
+        pool-hour — plus the utilization integrals.  Shared verbatim by
+        both accrual paths (few pools, so the loop is already O(1)-ish)."""
+        m = self.metrics
+        hours = dt / 3600.0
+        for ri, _cm in self._pools:
+            size = self._pool_size[ri]
+            amt = hours * size * self._pool_rate[ri]
+            m.commitment_cost += amt
+            self._bill_region(amt, ri, obs_ev.COST_COMMITMENT)
+            self._pool_capacity_s[ri] += dt * size
+            self._pool_covered_s[ri] += dt * min(
+                self._region_alive[ri], size)
+
+    def _svc_accrue(self, js: _JobState, dt: float) -> None:
         """Bill a constant-rate segment of served requests against the
-        job's utility curve at the current capacity headroom."""
+        job's utility curve at the current capacity headroom.  ``js.
+        svc_lam`` is maintained by _touch_service at arrival and at every
+        RATE_UPDATE (one sits on each profile breakpoint), so it equals
+        ``rate_at`` of the segment start without a search."""
         spec = js.job.service
-        lam = spec.requests.rate_at(t0)
+        lam = js._svc_lam
         if lam <= 0.0:
             return
-        lat = spec.p99_ms(lam, js.svc_capacity)
+        lat = spec.p99_ms(lam, js._svc_cap)
         req = lam * dt
         m = self.metrics
-        js.req_total += req
+        js._req += req
         m.slo_requests_total += req
         if lat <= spec.utility.target_p99_ms + 1e-9:
-            js.req_ok += req
+            js._ok += req
             m.slo_requests_ok += req
         u = spec.utility.utility(lat)
-        js.util_integral += u * req
+        js._util += u * req
         m.service_utility_sum += u * req
+
+    def _svc_accrue_vec(self, dt: float) -> None:
+        """Batched :meth:`_svc_accrue` across the whole service fleet: one
+        latency/utility evaluation over the lam/cap columns.  Per-job
+        integrals use the identical per-lane arithmetic (bit-exact); only
+        the metric totals are array reductions (reassociated sums)."""
+        st = self._stab
+        sn = st.n
+        lam = st.f["lam"][:sn]
+        active = lam > 0.0
+        if not active.any():
+            return
+        cap = st.f["cap"][:sn]
+        target = st.f["target_ms"][:sn]
+        pos = cap > 0.0
+        # rho >= 1 on any lane with no capacity -> saturated -> inf latency,
+        # matching ServiceSpec.p99_ms's capacity_rps <= 0 branch
+        rho = np.where(pos, lam / np.where(pos, cap, 1.0), 2.0)
+        lat = p99_latency_ms_np(st.f["base_ms"][:sn], rho)
+        req = np.where(active, lam * dt, 0.0)
+        ok = np.where(active & (lat <= target + 1e-9), req, 0.0)
+        uq = utility_np(lat, target, st.f["soft_ms"][:sn],
+                        st.f["floor"][:sn]) * req
+        st.f["req"][:sn] += req
+        st.f["ok"][:sn] += ok
+        st.f["util"][:sn] += uq
+        m = self.metrics
+        m.slo_requests_total += float(req.sum())
+        m.slo_requests_ok += float(ok.sum())
+        m.service_utility_sum += float(uq.sum())
 
     # ----------------------------------------------------------- throughputs
     def _colocated_running(self, tid: int) -> List[int]:
@@ -719,11 +972,11 @@ class Simulator:
         *current* (pre-event) duty.  Throttled instances stay pinned at
         zero: the accrual is consumed by the baseline itself."""
         cm = self._credit_models[inst.type_index]
-        if cm is None or inst.throttled:
+        if cm is None or inst._throttled:
             return
         net = cm.accrual_per_hour - self._instance_duty(inst)  # per hour
-        inst.credit_hours = min(cm.credit_cap_hours,
-                                max(0.0, inst.credit_hours + net * dt / 3600.0))
+        inst._credit = min(cm.credit_cap_hours,
+                           max(0.0, inst._credit + net * dt / 3600.0))
 
     def _credit_reproject(self, inst: _Instance) -> None:
         """Recompute throttle state and (re)project the deterministic
@@ -734,6 +987,12 @@ class Simulator:
         inst.credit_seq += 1  # invalidate any in-flight projection
         duty = self._instance_duty(inst)
         drain = cm.drain_per_hour(duty)
+        if self._vec and inst._ct is not None:
+            # refresh the cached net accrual rate the vectorized sweep
+            # integrates with; duty only changes when the RUNNING-resident
+            # set changes, and every such change lands here
+            inst._ct.f["net"][inst._ct.slot[inst.iid]] = \
+                cm.accrual_per_hour - duty
         if duty <= 0.0 or drain <= 0.0:
             inst.throttled = False  # idle or sustainable duty: (re)accruing
             return
@@ -803,6 +1062,20 @@ class Simulator:
             eta = self.now + max(remaining, 0.0) / js.rate
             self._push(eta, JOB_DONE, (jid, js.version))
 
+    def _svc_rate(self, js: _JobState, t: float) -> float:
+        """Request rate at ``t`` via the job's monotone segment cursor over
+        the profile's precomputed breakpoint arrays (cached at __init__) —
+        O(1) amortized instead of a binary search per call.  Callers only
+        move forward in time, matching the simulator clock; values are the
+        exact floats ``RequestProfile.rate_at`` would return."""
+        times = js.svc_times
+        seg = js.svc_seg
+        n = len(times)
+        while seg + 1 < n and times[seg + 1] <= t:
+            seg += 1
+        js.svc_seg = seg
+        return js.svc_rps[seg] if seg >= 0 else 0.0
+
     def _touch_service(self, js: _JobState) -> None:
         """Recompute a service job's effective capacity and utility-risk
         state.  SLO pressure fires on the *rising edge* of risk — load
@@ -817,7 +1090,8 @@ class Simulator:
         # normalized fleet capacity stands in for the batch rate, so the
         # shared running/idle/tput accounting stays meaningful for services
         js.rate = cap / max(spec.per_replica_rps * js.job.n_tasks, 1e-9)
-        lam = spec.requests.rate_at(self.now)
+        lam = self._svc_rate(js, self.now)
+        js.svc_lam = lam  # the segment rate _svc_accrue integrates with
         risk = spec.at_risk(lam, cap)
         if risk and not js.svc_risk:
             js.svc_risk = True
@@ -877,8 +1151,17 @@ class Simulator:
             cm = self._credit_models[k]
             if cm is not None:
                 inst.credit_hours = cm.effective_launch_hours
+                if self._vec:
+                    # fresh instance idles (duty 0) until its first launch,
+                    # so the cached net rate starts at the full accrual
+                    self._ctab.add(iid, bal=inst._credit,
+                                   net=cm.accrual_per_hour,
+                                   cap_h=cm.credit_cap_hours)
+                    inst._ct = self._ctab
         self.instances[iid] = inst
         self._alive[iid] = inst
+        if self._vec:
+            self._type_alive[k] += 1
         if self._regions is not None:
             self._region_alive[int(self._region_ids[k])] += 1
         self.metrics.instances_launched += 1
@@ -899,6 +1182,17 @@ class Simulator:
             return
         inst.terminated_t = self.now
         self._alive.pop(inst.iid, None)
+        if self._vec:
+            self._type_alive[inst.type_index] -= 1
+            # terminate does not clear `assigned` (drain bookkeeping still
+            # reads it), so subtract the snapshot from the fleet totals here
+            self._assigned_total -= len(inst.assigned)
+            self._alloc_total -= inst.alloc
+            if inst._ct is not None:
+                fin = inst._ct.remove(inst.iid)
+                inst._ct = None
+                inst._credit = fin["bal"]
+                inst._throttled = fin["throttled"]
         if self._regions is not None:
             self._region_alive[int(self._region_ids[inst.type_index])] -= 1
         billed = 0.0
@@ -1183,7 +1477,7 @@ class Simulator:
                 if spec is None:
                     continue
                 service.add(jid)
-                service_rps[jid] = spec.requests.rate_at(self.now)
+                service_rps[jid] = self._svc_rate(js, self.now)
                 service_cap[jid] = js.svc_capacity
                 specs[jid] = spec
                 if js.svc_risk:
@@ -1262,6 +1556,9 @@ class Simulator:
         js = _JobState(job=job, arrived=True)
         self.jobs[job.job_id] = js
         self._active_jobs[job.job_id] = js
+        if self._vec:
+            self._jtab.add(job.job_id)
+            js._jt = self._jtab
         if self._ev is not None:
             self._ev.emit(self.now, obs_ev.JOB_ARRIVE, job_id=job.job_id,
                           n_tasks=job.n_tasks)
@@ -1269,6 +1566,14 @@ class Simulator:
             self.tasks[t.task_id] = _TaskState(task=t, job_id=job.job_id,
                                                workload=t.workload)
         if self._serving and job.service is not None:
+            spec = job.service
+            js.svc_times, js.svc_rps = self._profile_segs[id(spec.requests)]
+            if self._vec:
+                u = spec.utility
+                self._stab.add(job.job_id, base_ms=spec.base_latency_ms,
+                               target_ms=u.target_p99_ms,
+                               soft_ms=u.softness_ms, floor=u.floor)
+                js._st = self._stab
             # fixed wall-clock serving window: the end event is pushed once
             # at arrival (version -1 marks it as the non-projected end), and
             # the initial risk check fires SLO pressure immediately if load
@@ -1329,6 +1634,25 @@ class Simulator:
                 return  # stale projection
         js.done_t = self.now
         js.job.completion_time = self.now
+        if self._vec:
+            # deregister from the SoA tables; remove() hands back the final
+            # column values, which become the plain attributes every later
+            # reader (metric folds below, summaries, tests) sees
+            fin = self._jtab.remove(jid)
+            js._jt = None
+            js._iters = fin["iters"]
+            js._idle = fin["idle"]
+            js._run_s = fin["run_s"]
+            js._tputw = fin["tputw"]
+            js._rate = fin["rate"]
+            if js._st is not None:
+                sfin = self._stab.remove(jid)
+                js._st = None
+                js._req = sfin["req"]
+                js._ok = sfin["ok"]
+                js._util = sfin["util"]
+                js._svc_lam = sfin["lam"]
+                js._svc_cap = sfin["cap"]
         if self._ev is not None:
             self._ev.emit(self.now, obs_ev.JOB_DONE, job_id=jid,
                           jct_s=self.now - js.job.arrival_time)
@@ -1412,7 +1736,10 @@ class Simulator:
     # --------------------------------------------------------- spot handlers
     def _on_price_update(self, periodic: bool = True):
         pm = self.catalog.price_model
-        self._cur_costs = self.catalog.at(self.now).costs
+        # segment price vector for [now, next update): same floats at(now)
+        # would yield, without materializing a catalog snapshot per update
+        self._cur_costs = self.catalog.prices_between(
+            self.now, self.now + self._price_interval)
         dt = self.now - self._last_price_update  # actual elapsed exposure
         self._last_price_update = self.now
         noticed: List[int] = []
@@ -1510,6 +1837,34 @@ class Simulator:
                     self.jobs[ts.job_id].admitted_t = None  # back to PENDING
 
     # ----------------------------------------------------------------- main
+    def _dispatch(self, kind: int, payload: tuple) -> None:
+        if kind == ARRIVAL:
+            self._on_arrival(*payload)
+        elif kind == INSTANCE_READY:
+            self._on_instance_ready(*payload)
+        elif kind == CKPT_DONE:
+            self._on_ckpt_done(*payload)
+        elif kind == LAUNCH_DONE:
+            self._on_launch_done(*payload)
+        elif kind == JOB_DONE:
+            self._on_job_done(*payload)
+        elif kind == FAILURE:
+            self._on_failure(*payload)
+        elif kind == PRICE_UPDATE:
+            self._on_price_update(*payload)
+        elif kind == PREEMPT_FIRE:
+            self._on_preempt_fire(*payload)
+        elif kind == CREDIT_EXHAUST:
+            self._on_credit_exhaust_event(*payload)
+        elif kind == DEFER_DEADLINE:
+            self._on_defer_deadline(*payload)
+        elif kind == RATE_UPDATE:
+            self._on_rate_update(*payload)
+        elif kind == ROUND:
+            self._run_round()
+            if self._live_task_ids():
+                self._schedule_next_round()
+
     def run(self) -> Metrics:
         while self._heap:
             t, kind, _, payload = heapq.heappop(self._heap)
@@ -1517,32 +1872,20 @@ class Simulator:
                 break
             self._accrue(t)
             self.now = t
-            if kind == ARRIVAL:
-                self._on_arrival(*payload)
-            elif kind == INSTANCE_READY:
-                self._on_instance_ready(*payload)
-            elif kind == CKPT_DONE:
-                self._on_ckpt_done(*payload)
-            elif kind == LAUNCH_DONE:
-                self._on_launch_done(*payload)
-            elif kind == JOB_DONE:
-                self._on_job_done(*payload)
-            elif kind == FAILURE:
-                self._on_failure(*payload)
-            elif kind == PRICE_UPDATE:
-                self._on_price_update(*payload)
-            elif kind == PREEMPT_FIRE:
-                self._on_preempt_fire(*payload)
-            elif kind == CREDIT_EXHAUST:
-                self._on_credit_exhaust_event(*payload)
-            elif kind == DEFER_DEADLINE:
-                self._on_defer_deadline(*payload)
-            elif kind == RATE_UPDATE:
-                self._on_rate_update(*payload)
-            elif kind == ROUND:
-                self._run_round()
-                if self._live_task_ids():
-                    self._schedule_next_round()
+            self._dispatch(kind, payload)
+            if kind in _COALESCE:
+                # Coincident bursts of the same kind (RATE_UPDATE fan-outs
+                # over a shared profile grid, simultaneous arrival waves,
+                # periodic + breakpoint price updates) run under a single
+                # accrual sweep.  Safe because these handlers only push
+                # same-timestamp events of later-sorting kinds (ROUND) or
+                # strictly-future events, so batch order equals pop order —
+                # and the dt<=0 re-accrual between them was already a no-op.
+                # Reference self._heap afresh each pop: handlers may rebind
+                # it (none of the coalesced kinds do, but stay defensive).
+                while (self._heap and self._heap[0][0] == t
+                       and self._heap[0][1] == kind):
+                    self._dispatch(kind, heapq.heappop(self._heap)[3])
         # drain any leftover instances at the end
         for inst in list(self._alive.values()):
             self._terminate(inst, "end_of_run")

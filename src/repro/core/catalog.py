@@ -720,6 +720,31 @@ class Catalog:
         return dataclasses.replace(self, costs=costs, order_desc=order,
                                    base_costs=base)
 
+    def prices_between(self, t0: float, t1: Optional[float] = None) -> np.ndarray:
+        """(K,) price vector in effect over the constant-price segment
+        ``[t0, t1)``.
+
+        Every price model here is piecewise-constant in time (OU grids,
+        traces, and the region/market block compositions of both), so a
+        caller that only crosses segment boundaries at its own PRICE_UPDATE
+        events can bill a whole segment from one vector.  Unlike :meth:`at`,
+        no catalog snapshot is built — no ``dataclasses.replace``, no
+        re-sorted ``order_desc`` — which is what the simulator's billing
+        path wants: the prices, nothing else.  ``t1`` documents the
+        segment's intended extent; prices are evaluated at ``t0`` and the
+        caller is responsible for not spanning a breakpoint (the simulator
+        guarantees this by construction: PRICE_UPDATE events sit on every
+        model step and trace breakpoint).
+
+        With a static or absent model this returns ``self.costs`` itself —
+        the same identity guarantee as :meth:`at`.
+        """
+        pm = self.price_model
+        if pm is None or pm.is_static:
+            return self.costs
+        base = self.base_costs if self.base_costs is not None else self.costs
+        return pm.prices_at(base, t0)
+
     # -- burstable credits --------------------------------------------------
     @property
     def is_burstable(self) -> bool:

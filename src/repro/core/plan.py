@@ -52,23 +52,54 @@ def diff_configs(live: Sequence[LiveInstance], new: ClusterConfig) -> Plan:
             task_loc[t] = inst.instance_id
     by_id = {i.instance_id: i for i in live}
 
-    # Greedy matching: per type, order (slot, live instance) pairs by overlap.
-    pairs = []
+    # Greedy matching: per type, (slot, live instance) pairs by overlap.
+    # Only pairs that actually share a task are enumerated (O(total tasks)
+    # via the task-location index, instead of slots × live set
+    # intersections — quadratic in fleet size for a same-type fleet);
+    # the zero-overlap pairs the dense enumeration used to sort behind
+    # them are reproduced below by handing unmatched slots the lowest
+    # unused same-type instance ids, which is exactly where the
+    # (-overlap, slot, instance_id) order landed them.
+    ov_count: Dict[Tuple[int, int], int] = {}
     for slot, (k, tids) in enumerate(new.assignments):
-        want = set(tids)
-        for inst in live:
-            if inst.type_index != k:
-                continue
-            ov = len(want & set(inst.task_ids))
-            pairs.append((ov, slot, inst.instance_id))
-    pairs.sort(key=lambda x: (-x[0], x[1], x[2]))
+        for t in tids:
+            iid = task_loc.get(t)
+            if iid is not None and by_id[iid].type_index == k:
+                key = (slot, iid)
+                ov_count[key] = ov_count.get(key, 0) + 1
+    pairs = [(-ov, slot, iid) for (slot, iid), ov in ov_count.items()]
+    pairs.sort()
     slot_match: Dict[int, int] = {}
     used = set()
-    for ov, slot, iid in pairs:
+    for _nov, slot, iid in pairs:
         if slot in slot_match or iid in used:
             continue
         slot_match[slot] = iid
         used.add(iid)
+    # zero-overlap phase: slots ascending, each takes the smallest unused
+    # live instance id of its type (a per-type cursor over the sorted ids
+    # keeps this linear — `used` only grows, so skipped ids stay skipped)
+    ids_of_type: Dict[int, List[int]] = {}
+    for inst in live:
+        ids_of_type.setdefault(inst.type_index, []).append(inst.instance_id)
+    cursor: Dict[int, int] = {}
+    for k in ids_of_type:
+        ids_of_type[k].sort()
+        cursor[k] = 0
+    for slot, (k, _tids) in enumerate(new.assignments):
+        if slot in slot_match:
+            continue
+        ids = ids_of_type.get(k)
+        if ids is None:
+            continue
+        c = cursor[k]
+        while c < len(ids) and ids[c] in used:
+            c += 1
+        cursor[k] = c
+        if c < len(ids):
+            slot_match[slot] = ids[c]
+            used.add(ids[c])
+            cursor[k] = c + 1
 
     slots, migrations, launches = [], [], []
     for slot, (k, tids) in enumerate(new.assignments):

@@ -32,6 +32,8 @@ __all__ = [
     "RequestProfile",
     "ServiceSpec",
     "p99_latency_ms",
+    "p99_latency_ms_np",
+    "utility_np",
 ]
 
 
@@ -47,6 +49,35 @@ def p99_latency_ms(base_ms: float, rho: float) -> float:
     if rho >= 1.0:
         return math.inf
     return base_ms / (1.0 - rho)
+
+
+def p99_latency_ms_np(base_ms: np.ndarray, rho: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`p99_latency_ms` over aligned arrays.
+
+    The division is the same IEEE double op per lane as the scalar path, so
+    finite lanes match bit-for-bit; saturated lanes (``rho >= 1``) are
+    ``inf`` just like the scalar.
+    """
+    base_ms = np.asarray(base_ms, dtype=np.float64)
+    rho = np.maximum(np.asarray(rho, dtype=np.float64), 0.0)
+    sat = rho >= 1.0
+    return np.where(sat, np.inf, base_ms / np.where(sat, 0.5, 1.0 - rho))
+
+
+def utility_np(latency_ms: np.ndarray, target_p99_ms: np.ndarray,
+               softness_ms: np.ndarray, floor: np.ndarray) -> np.ndarray:
+    """Vectorized :meth:`UtilityCurve.utility` over aligned arrays.
+
+    Lanes at/below target get exactly 1.0 and non-finite lanes exactly
+    ``floor``, same as the scalar; decaying lanes use ``np.exp`` where the
+    scalar uses ``math.exp``, which may differ in the last ulp — within the
+    simulator's documented <=1e-9 relative tolerance for utility integrals.
+    """
+    lat = np.asarray(latency_ms, dtype=np.float64)
+    decay = np.exp(-np.maximum(lat - target_p99_ms, 0.0) / softness_ms)
+    u = floor + (1.0 - floor) * decay
+    u = np.where(lat <= target_p99_ms, 1.0, u)
+    return np.where(np.isfinite(lat), u, floor)
 
 
 @dataclass(frozen=True)
@@ -105,6 +136,15 @@ class RequestProfile:
         """Breakpoints strictly inside ``(start_s, end_s)``."""
         m = (self._times > start_s) & (self._times < end_s)
         return tuple(self._times[m].tolist())
+
+    def segments(self) -> Tuple[np.ndarray, np.ndarray]:
+        """``(times_s, rps)`` as the profile's precomputed breakpoint
+        arrays.  Consumers that walk time monotonically (the simulator's
+        accrual sweeps) cache these once and advance a segment cursor
+        instead of re-searching the piecewise representation per call.
+        Treat as read-only: both arrays are the profile's own state.
+        """
+        return self._times, self._rps
 
     def peak_rps(self) -> float:
         return float(self._rps.max())

@@ -329,6 +329,71 @@ def test_ledgers_always_present_and_gated():
     assert "commitment_cost" in s and "commitment_idle_cost" in s
 
 
+# ---------------------------------------- vectorized vs scalar equality
+def _run_mode(kind, spot, defer, service, hazard, n, seed, *, vectorized,
+              recording):
+    """One composed scenario in one simulator mode; fresh jobs per run
+    (the simulator mutates Job objects)."""
+    cat, jobs, layers, cfg = _compose(kind, spot, defer, service, hazard,
+                                      n, seed)
+    rec = FlightRecorder(meta={"mode": "vec" if vectorized else "scalar"}) \
+        if recording else None
+    sched = EvaScheduler(cat, policies=layers, recorder=rec)
+    sim = Simulator(cat, jobs, sched, cfg, recorder=rec,
+                    vectorized=vectorized)
+    return sim.run()
+
+
+def _dicts_close(ds, dv, label):
+    assert set(ds) == set(dv), label
+    for k in ds:
+        assert dv[k] == pytest.approx(ds[k], rel=1e-9, abs=1e-9), \
+            f"{label}[{k}]"
+
+
+def _check_vec_scalar_equality(kind, spot, defer, service, hazard, n, seed):
+    """``Simulator(..., vectorized=True)`` must replay the exact event
+    trajectory of the scalar reference: identical counters, summaries,
+    ledgers, and recorder cost cells within the documented <=1e-9 relative
+    tolerance (float reassociation on the vectorized sums), with recording
+    both off and on."""
+    for recording in (False, True):
+        mv = _run_mode(kind, spot, defer, service, hazard, n, seed,
+                       vectorized=True, recording=recording)
+        ms = _run_mode(kind, spot, defer, service, hazard, n, seed,
+                       vectorized=False, recording=recording)
+        ss, sv = ms.summary(), mv.summary()
+        assert set(ss) == set(sv)
+        for k, a in ss.items():
+            b = sv[k]
+            if isinstance(a, float) or isinstance(b, float):
+                assert b == pytest.approx(a, rel=1e-9, abs=1e-9), k
+            else:
+                assert a == b, k  # counters are decisions: exact
+        _dicts_close(ms.cost_by_region, mv.cost_by_region, "cost_by_region")
+        _dicts_close(ms.cost_by_provider, mv.cost_by_provider,
+                     "cost_by_provider")
+        _dicts_close(ms.commitment_utilization, mv.commitment_utilization,
+                     "commitment_utilization")
+        if recording:
+            # event-cost conservation holds in both modes, and the
+            # aggregated ledger cells agree cell-by-cell
+            for m in (ms, mv):
+                assert sum(m.events.costs.values()) == pytest.approx(
+                    m.total_cost, rel=1e-9, abs=1e-9)
+            _dicts_close(ms.events.cost_by("category"),
+                         mv.events.cost_by("category"), "cost_by_category")
+            _dicts_close(ms.events.cost_by("key"), mv.events.cost_by("key"),
+                         "cost_by_key")
+            assert ms.events.counts() == mv.events.counts()
+
+
+@pytest.mark.parametrize("kind,spot,defer,service,hazard,n,seed", SEEDED)
+def test_vectorized_matches_scalar_seeded(kind, spot, defer, service,
+                                          hazard, n, seed):
+    _check_vec_scalar_equality(kind, spot, defer, service, hazard, n, seed)
+
+
 # ------------------------------------------------------- hypothesis sweep
 @pytest.fixture(scope="module")
 def _hyp():

@@ -1,0 +1,114 @@
+"""Unit tests for the vectorized simulator core's building blocks:
+``cluster/fleet.SlotTable`` (structure-of-arrays fleet state),
+``Catalog.prices_between`` (segment billing API), and the same-timestamp
+event coalescing in ``Simulator.run``.  The end-to-end vectorized-vs-
+scalar equality laws live in tests/test_invariants.py; these pin the
+pieces in isolation.
+"""
+import numpy as np
+import pytest
+
+from repro.cluster import SimConfig, Simulator
+from repro.cluster.fleet import SlotTable
+from repro.core import EvaScheduler, PriceModel, aws_catalog, make_job
+from repro.core.workloads import WORKLOAD_INDEX
+from repro.policies import SLOLayer, SpotLayer
+
+A3C = WORKLOAD_INDEX["a3c"]
+
+
+# ----------------------------------------------------------- SlotTable
+def test_slot_table_add_get_set_remove():
+    t = SlotTable(("bal", "net"), ("throttled",))
+    t.add(7, bal=1.5, net=-0.25)
+    t.add(9, bal=2.0, throttled=True)
+    assert len(t) == 2 and 7 in t and 9 in t and 8 not in t
+    assert t.get(7, "bal") == 1.5
+    assert t.get(9, "throttled") is True
+    assert t.get(7, "throttled") is False  # unnamed columns start zeroed
+    t.set(7, "bal", 3.0)
+    assert t.live("bal")[t.slot[7]] == 3.0
+    fin = t.remove(7)
+    assert fin == {"bal": 3.0, "net": -0.25, "throttled": False}
+    assert 7 not in t and len(t) == 1
+
+
+def test_slot_table_swap_remove_keeps_slots_current():
+    t = SlotTable(("x",))
+    for eid in range(5):
+        t.add(eid, x=float(eid) * 10.0)
+    t.remove(1)  # row 4 swaps into slot 1
+    assert len(t) == 4
+    for eid in (0, 2, 3, 4):
+        assert t.get(eid, "x") == float(eid) * 10.0
+    assert set(t.ids[:t.n].tolist()) == {0, 2, 3, 4}
+
+
+def test_slot_table_recycled_rows_are_zeroed():
+    t = SlotTable(("x",), ("flag",))
+    t.add(1, x=5.0, flag=True)
+    t.remove(1)
+    t.add(2)  # re-uses the row 1 left behind
+    assert t.get(2, "x") == 0.0
+    assert t.get(2, "flag") is False
+
+
+def test_slot_table_growth_and_duplicate_add():
+    t = SlotTable(("x",))
+    n = 300  # forces several capacity doublings past the initial 64
+    for eid in range(n):
+        t.add(eid, x=float(eid))
+    assert len(t) == n
+    assert all(t.get(eid, "x") == float(eid) for eid in (0, 63, 64, 299))
+    with pytest.raises(ValueError):
+        t.add(0)
+
+
+# ------------------------------------------------- Catalog.prices_between
+def test_prices_between_static_catalog_is_base_costs():
+    cat = aws_catalog()
+    np.testing.assert_array_equal(cat.prices_between(0.0, 3600.0),
+                                  cat.costs)
+
+
+def test_prices_between_matches_snapshot_costs():
+    cat = aws_catalog(
+        price_model=PriceModel.mean_reverting(discount=0.4, seed=3))
+    for t in (0.0, 450.0, 3600.0, 86_400.0):
+        np.testing.assert_allclose(cat.prices_between(t, t + 300.0),
+                                   cat.at(t).costs, rtol=0, atol=0)
+
+
+# --------------------------------------------------- event coalescing
+class _Counting(Simulator):
+    """Records how many accrual sweeps had run when each arrival fired."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.accrue_calls = 0
+        self.arrival_accrues = []
+
+    def _accrue(self, now):
+        self.accrue_calls += 1
+        super()._accrue(now)
+
+    def _on_arrival(self, *a):
+        self.arrival_accrues.append(self.accrue_calls)
+        super()._on_arrival(*a)
+
+
+@pytest.mark.parametrize("vectorized", [True, False])
+def test_arrival_wave_coalesces_into_one_sweep(vectorized):
+    """A simultaneous JOB_ARRIVE wave drains under a single accrual sweep
+    (same count observed by every arrival), in both simulator modes."""
+    cat = aws_catalog()
+    n = 30
+    jobs = [make_job(job_id=i, workload=A3C, arrival_time=0.0,
+                     duration_s=1800.0) for i in range(n)]
+    sched = EvaScheduler(cat, policies=[SpotLayer(), SLOLayer()])
+    sim = _Counting(cat, jobs, sched, SimConfig(seed=2),
+                    vectorized=vectorized)
+    m = sim.run()
+    assert len(sim.arrival_accrues) == n
+    assert len(set(sim.arrival_accrues)) == 1
+    assert m.total_cost > 0.0

@@ -1,9 +1,15 @@
 #!/usr/bin/env python3
-"""CI perf-regression gate: compare a fresh ``results/bench_micro.json``
-against the committed baseline in ``benchmarks/baselines/``.
+"""CI perf-regression gate: compare fresh benchmark results against the
+committed baselines in ``benchmarks/baselines/``.
 
     python tools/bench_compare.py [--results PATH] [--baseline PATH] [--json PATH]
     python tools/bench_compare.py --update-baseline
+
+The default paths gate the planner microbench; the simulator-throughput
+bench is gated by a second invocation of the same tool:
+
+    python tools/bench_compare.py --results results/bench_sim.json \\
+        --baseline benchmarks/baselines/bench_sim.json
 
 Timing cells are matched row-by-row on ``n_tasks`` (table5 and the scaling
 curve).  A cell passes when
@@ -57,18 +63,32 @@ BASELINE = ROOT / "benchmarks" / "baselines" / "bench_micro.json"
 #: sections gated, and which of their columns are timings (lower is better)
 #: vs speedups (higher is better).  table4 is cost-accuracy, not perf: its
 #: assertions live in the test suite, so it is not gated here.
+#: Sections absent from both files are skipped, so one table serves every
+#: results file this tool is pointed at (bench_micro and bench_sim).
 TIMING_COLS = {
     "table5": ["numpy_s", "jax_jit_s"],
     "scaling": ["numpy_s", "jax_s", "incremental_s"],
+    "sim_scenarios": ["scalar_s", "vectorized_s"],
+    "sim_population": ["scalar_s", "vectorized_s"],
 }
 #: absolute floors for speedup ratios (section -> n_tasks -> col -> min).
-#: These restate the repo's acceptance criteria for the jitted engine and
-#: the incremental repack path; see module docstring for why they are not
-#: baseline-relative.
+#: These restate the repo's acceptance criteria for the jitted engine, the
+#: incremental repack path, and the vectorized simulator core; see module
+#: docstring for why they are not baseline-relative.
 SPEEDUP_FLOORS = {
     "scaling": {
         10_000: {"jit_speedup": 5.0},
         100_000: {"incr_speedup": 10.0},
+    },
+    # the serving- and portfolio-class scenario cells (keyed by their task
+    # populations) carry the >=10x end-to-end acceptance; the population
+    # sweep pins vectorized >= 5x scalar at the 10^5 cell
+    "sim_scenarios": {
+        20_096: {"speedup": 10.0},
+        14_400: {"speedup": 10.0},
+    },
+    "sim_population": {
+        100_000: {"speedup": 5.0},
     },
 }
 
@@ -78,10 +98,14 @@ def _rows_by_n(section):
 
 
 def _num(cell):
-    """Benchmark cells use '' for 'not measured at this size'."""
+    """Benchmark cells use '' (or 'n/a') for 'not measured at this size';
+    any non-numeric cell is skipped rather than crashing the gate."""
     if cell in ("", None):
         return None
-    return float(cell)
+    try:
+        return float(cell)
+    except (TypeError, ValueError):
+        return None
 
 
 def compare(base: dict, fresh: dict, ratio: float, floor_s: float,
